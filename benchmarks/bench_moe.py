@@ -1,0 +1,33 @@
+"""Beyond-paper — MoE token dispatch: AAM sorted/coalesced path vs the
+GShard dense one-hot baseline (the paper's technique applied to the LM
+substrate, DESIGN.md §3)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.configs.archs import ARCHS
+from repro.configs.base import smoke_model
+from repro.moe import moe_layer
+
+
+def main():
+    import dataclasses
+    cfg = dataclasses.replace(
+        smoke_model(ARCHS["qwen3-moe-235b-a22b"]),
+        d_model=256, moe_d_ff=512, num_experts=32, experts_per_token=4)
+    p, _ = moe_layer.moe_init(cfg, jax.random.PRNGKey(0))
+    aam = jax.jit(lambda x: moe_layer.moe_apply_aam(cfg, p, x)[0])
+    dense = jax.jit(lambda x: moe_layer.moe_apply_dense(cfg, p, x)[0])
+    for t in (1024, 4096, 16384):
+        x = jax.random.normal(jax.random.PRNGKey(1), (t, cfg.d_model),
+                              jnp.bfloat16)
+        ta = timeit(aam, x, repeats=3)
+        td = timeit(dense, x, repeats=3)
+        emit(f"moe/aam/T={t}", ta, f"speedup_vs_dense={td/ta:.2f}")
+        emit(f"moe/dense/T={t}", td)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Benchmark helpers: wall-clock timing with warmup + CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timeit(fn, *args, warmup: int = 2, repeats: int = 5) -> float:
+    """Median seconds per call (blocks on all outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    """CSV row: name,us_per_call,derived."""
+    print(f"{name},{seconds * 1e6:.1f},{derived}")

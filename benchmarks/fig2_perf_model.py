@@ -1,0 +1,62 @@
+"""Paper Fig 2 — performance-model validation: T(N) = B + A·N for fine
+(one atomic per vertex) vs coarse (one transaction over N vertices), the
+linear fits, and the crossing point N*."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.commit import atomic_commit, coarse_commit
+from repro.core.messages import make_messages
+from repro.core.perf_model import crossing_point, fit, select_m
+
+V = 1 << 16
+NS = [1, 2, 4, 8, 16, 32, 64, 128, 256, 512]
+
+
+def _fine_activity(state, tgt, val):
+    """N sequential single-message commits (the atomics baseline: one
+    memory-system round trip per vertex)."""
+    def body(st, tv):
+        t, v_ = tv
+        m = make_messages(t[None], v_[None], jnp.ones((1,), bool))
+        return atomic_commit(st, m, "min").state, None
+    out, _ = jax.lax.scan(body, state, (tgt, val))
+    return out
+
+
+@jax.jit
+def _coarse_activity(state, tgt, val):
+    m = make_messages(tgt, val, jnp.ones_like(tgt, bool))
+    return coarse_commit(state, m, "min").state
+
+
+def main():
+    rng = np.random.default_rng(0)
+    state = jnp.full((V,), 2 ** 30, jnp.int32)
+    fine_t, coarse_t = [], []
+    fine_j = jax.jit(_fine_activity)
+    for n in NS:
+        tgt = jnp.asarray(rng.integers(0, V, n), jnp.int32)
+        val = jnp.asarray(rng.integers(0, 100, n), jnp.int32)
+        tf = timeit(fine_j, state, tgt, val)
+        tc = timeit(_coarse_activity, state, tgt, val)
+        fine_t.append(tf)
+        coarse_t.append(tc)
+        emit(f"fig2/fine/N={n}", tf)
+        emit(f"fig2/coarse/N={n}", tc)
+    ff = fit(NS, fine_t)
+    fc = fit(NS, coarse_t)
+    n_star = crossing_point(ff, fc)
+    m_star = select_m(ff, fc)
+    emit("fig2/fit/fine", 0.0,
+         f"B={ff.intercept*1e6:.1f}us A={ff.slope*1e6:.3f}us r2={ff.r2:.4f}")
+    emit("fig2/fit/coarse", 0.0,
+         f"B={fc.intercept*1e6:.1f}us A={fc.slope*1e6:.3f}us r2={fc.r2:.4f}")
+    emit("fig2/crossing", 0.0, f"N*={n_star:.1f} M*={m_star}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Paper Fig 7 — scalability: BFS strong scaling over shard counts, and
+distributed PageRank AAM (coalesced accumulate) vs the PBGL-like per-edge
+baseline.  Child processes force 1/2/4/8 host devices."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+from benchmarks.common import emit, timeit
+
+CHILD = """
+import json, time, numpy as np, jax
+from repro.launch.mesh import make_host_mesh
+from repro.graphs.generators import kronecker
+from repro.core.engine import distributed_bfs, distributed_pagerank
+P = {P}
+mesh = make_host_mesh(P, 1)
+g = kronecker(13, 8, seed=5)
+src = int(np.argmax(np.asarray(g.degrees)))
+
+def t(fn, reps=3):
+    fn(); ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter(); fn(); ts.append(time.perf_counter()-t0)
+    ts.sort(); return ts[len(ts)//2]
+
+out = {{}}
+out["bfs"] = t(lambda: distributed_bfs(mesh, g, src,
+                                       capacity=8192)[0].block_until_ready())
+out["pr"] = t(lambda: distributed_pagerank(mesh, g, iters=5,
+                                           capacity=8192).block_until_ready(),
+              reps=2)
+print("RESULT", json.dumps(out))
+"""
+
+
+def main():
+    # single-shard PBGL-like baseline: per-edge atomic accumulate PR
+    from repro.graphs.algorithms.pagerank import pagerank
+    from repro.graphs.generators import kronecker
+    import numpy as np
+    g = kronecker(13, 8, seed=5)
+    tb = timeit(lambda: pagerank(g, iters=5, commit="atomic")[0]
+                .block_until_ready(), repeats=2)
+    ta = timeit(lambda: pagerank(g, iters=5, commit="coarse",
+                                 sort=False)[0]
+                .block_until_ready(), repeats=2)
+    emit("fig7/pr/1shard/pbgl_like", tb)
+    emit("fig7/pr/1shard/aam", ta, f"T1_ratio={tb/ta:.2f}")
+
+    env_base = dict(os.environ)
+    env_base["PYTHONPATH"] = str(Path(__file__).resolve().parent.parent /
+                                 "src")
+    for p_ in (2, 4, 8):
+        env = dict(env_base)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p_}"
+        r = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(CHILD.format(P=p_))],
+            capture_output=True, text=True, env=env, timeout=1200)
+        if r.returncode != 0:
+            emit(f"fig7/P={p_}/ERROR", 0.0, r.stderr[-200:].replace("\n", " "))
+            continue
+        line = [l for l in r.stdout.splitlines()
+                if l.startswith("RESULT ")][-1]
+        out = json.loads(line[len("RESULT "):])
+        emit(f"fig7/bfs/P={p_}", out["bfs"])
+        emit(f"fig7/pr/P={p_}", out["pr"])
+
+
+if __name__ == "__main__":
+    main()

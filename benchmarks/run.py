@@ -1,0 +1,55 @@
+"""Benchmark runner — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Figures map to the paper as
+documented in DESIGN.md §6; fig5/fig7 spawn child processes with forced
+host-device counts (this process keeps 1 device).
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig4,table1]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_moe, fig2_perf_model, fig3_single_vertex,
+                        fig4_coarsening, fig5_coalescing, fig6_bfs_scale,
+                        fig7_scaling, table1_realworld)
+
+SUITES = {
+    "fig2": fig2_perf_model.main,
+    "fig3": fig3_single_vertex.main,
+    "fig4": fig4_coarsening.main,
+    "fig5": fig5_coalescing.main,
+    "fig6": fig6_bfs_scale.main,
+    "table1": table1_realworld.main,
+    "fig7": fig7_scaling.main,
+    "moe": bench_moe.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(SUITES))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SUITES)
+    print("name,us_per_call,derived")
+    failures = 0
+    for n in names:
+        t0 = time.time()
+        try:
+            SUITES[n]()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{n}/SUITE_ERROR,0,")
+        print(f"{n}/total_wall,{(time.time() - t0) * 1e6:.0f},",
+              file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Quickstart: Atomic Active Messages in 60 seconds.
+
+1. Build a Graph500 Kronecker graph.
+2. Run BFS with fine-grained atomics vs coarse AAM transactions.
+3. Run PageRank on the Always-Succeed accumulate commit.
+4. Inspect the conflict telemetry (the paper's abort statistics analogue).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.graphs.generators import kronecker
+from repro.graphs.algorithms.bfs import bfs, bfs_reference
+from repro.graphs.algorithms.pagerank import pagerank, pagerank_reference
+
+g = kronecker(scale=12, edge_factor=16, seed=0)
+print(f"graph: |V|={g.num_vertices} |E|={g.num_edges} "
+      f"d̄={g.avg_degree:.1f} (power-law)")
+
+src = int(np.argmax(np.asarray(g.degrees)))
+
+# --- BFS: FF&MF messages, min-commit ------------------------------------
+r_atomic = bfs(g, src, commit="atomic")          # fine-grained baseline
+r_aam = bfs(g, src, commit="coarse", m=4096)     # AAM: 4096-message txns
+ref = bfs_reference(g, src)
+assert np.array_equal(np.asarray(r_atomic.dist, np.int64), ref)
+assert np.array_equal(np.asarray(r_aam.dist, np.int64), ref)
+print(f"BFS    rounds={int(r_aam.rounds)} messages={int(r_aam.messages)} "
+      f"conflicts={int(r_aam.conflicts)} "
+      f"(duplicate-target messages resolved on-chip, zero aborts)")
+
+# --- PageRank: FF&AS messages, accumulate-commit -------------------------
+rank, conflicts = pagerank(g, iters=20)
+err = float(np.abs(np.asarray(rank) - pagerank_reference(g, iters=20)).max())
+print(f"PR     sum={float(rank.sum()):.6f} max|err|={err:.2e} "
+      f"conflicting-accumulates={int(conflicts)} (all committed, "
+      f"serialization-free)")
+print("OK — see examples/graph_analytics.py and examples/train_lm.py next.")

@@ -1,0 +1,113 @@
+"""Coalescing — bucket messages per destination shard (paper §4.2, §5.6).
+
+On BG/Q the paper aggregates activities flowing to the same node into one
+network message (factor C).  The TPU analogue: messages are bucketed into a
+fixed-capacity ``[num_owners, C]`` buffer and exchanged with one
+``all_to_all`` per round — C is the coalescing factor.  The same planning
+code is the MoE token-dispatch planner (experts = owners, capacity factor =
+C / expected load): DESIGN.md §3.
+
+All shapes are static; overflow beyond capacity is *counted and kept* — the
+caller re-queues dropped messages next round (label-correcting algorithms
+tolerate deferral; MoE drops by priority like every capacity-factor router).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.messages import Messages
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class BucketPlan:
+    """Routing plan for one coalescing round."""
+    owner: jax.Array          # int32 [n] destination bucket per message
+    position: jax.Array       # int32 [n] slot within the bucket (may exceed C)
+    counts: jax.Array         # int32 [num_buckets] messages per bucket
+    kept: jax.Array           # bool [n] — within capacity
+    dropped: jax.Array        # int32 — overflow count (requeued by caller)
+
+
+def plan_buckets(owner: jax.Array, valid: jax.Array, num_buckets: int,
+                 capacity: int) -> BucketPlan:
+    """Stable bucketing: position = rank of the message within its bucket
+    in original order (priority = arrival order, like the paper's queues and
+    like position-priority MoE routers)."""
+    n = owner.shape[0]
+    owner = jnp.where(valid, owner, num_buckets)
+    onehot = jax.nn.one_hot(owner, num_buckets + 1, dtype=jnp.int32)
+    # rank within bucket = exclusive cumsum of one-hot along messages
+    ranks = jnp.cumsum(onehot, axis=0) - onehot
+    position = jnp.take_along_axis(ranks, owner[:, None], axis=1)[:, 0]
+    counts = jnp.sum(onehot, axis=0)[:num_buckets]
+    kept = valid & (position < capacity)
+    dropped = jnp.sum(valid) - jnp.sum(kept)
+    return BucketPlan(owner=owner.astype(jnp.int32),
+                      position=position.astype(jnp.int32),
+                      counts=counts, kept=kept,
+                      dropped=dropped.astype(jnp.int32))
+
+
+def plan_buckets_sorted(owner: jax.Array, valid: jax.Array, num_buckets: int,
+                        capacity: int) -> tuple[BucketPlan, jax.Array]:
+    """Sort-based planner (O(n log n) instead of O(n·buckets)); used when
+    num_buckets is large (MoE with 128 experts).  Returns (plan, sort_order).
+    """
+    n = owner.shape[0]
+    owner_c = jnp.where(valid, owner, num_buckets)
+    order = jnp.argsort(owner_c, stable=True)
+    sorted_owner = owner_c[order]
+    counts = jnp.bincount(owner_c, length=num_buckets + 1)[:num_buckets]
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)])[:num_buckets + 1]
+    pos_sorted = jnp.arange(n, dtype=jnp.int32) - starts[
+        jnp.clip(sorted_owner, 0, num_buckets)].astype(jnp.int32)
+    position = jnp.zeros((n,), jnp.int32).at[order].set(pos_sorted)
+    kept = valid & (position < capacity)
+    dropped = jnp.sum(valid) - jnp.sum(kept)
+    return BucketPlan(owner=owner_c.astype(jnp.int32), position=position,
+                      counts=counts.astype(jnp.int32), kept=kept,
+                      dropped=dropped.astype(jnp.int32)), order
+
+
+def scatter_to_buckets(plan: BucketPlan, payload: Any, num_buckets: int,
+                       capacity: int, fill=0) -> Any:
+    """Build the [num_buckets, capacity, ...] coalesced buffer (payload may
+    be a pytree; int payloads fill with ``fill``)."""
+    flat = plan.owner * capacity + jnp.where(plan.kept, plan.position, capacity)
+    flat = jnp.where(plan.kept, flat, num_buckets * capacity)  # OOB drop
+
+    def scat(x):
+        buf = jnp.full((num_buckets * capacity + 1,) + x.shape[1:], fill,
+                       x.dtype)
+        buf = buf.at[flat].set(x, mode="drop")
+        return buf[:-1].reshape((num_buckets, capacity) + x.shape[1:])
+    return jax.tree.map(scat, payload)
+
+
+def bucket_message_ids(plan: BucketPlan, num_buckets: int,
+                       capacity: int) -> jax.Array:
+    """[num_buckets, capacity] original message index per slot (-1 empty)."""
+    ids = jnp.arange(plan.owner.shape[0], dtype=jnp.int32)
+    buf = scatter_to_buckets(plan, ids + 1, num_buckets, capacity, fill=0)
+    return buf - 1
+
+
+def gather_from_buckets(buf: Any, plan: BucketPlan, capacity: int,
+                        fill=0) -> Any:
+    """Inverse of scatter_to_buckets: per-message gather of returned values
+    (the FR return path)."""
+    pos = jnp.where(plan.kept, plan.position, 0)
+    def gat(x):
+        nb, cap = x.shape[0], x.shape[1]
+        flatx = x.reshape((nb * cap,) + x.shape[2:])
+        idx = jnp.clip(plan.owner, 0, nb - 1) * cap + jnp.clip(pos, 0, cap - 1)
+        out = flatx[idx]
+        mask = plan.kept.reshape(plan.kept.shape + (1,) * (out.ndim - 1))
+        return jnp.where(mask, out, fill)
+    return jax.tree.map(gat, buf)

@@ -1,0 +1,264 @@
+"""Commit engines — the HTM-transaction analogue (DESIGN.md §2).
+
+Three tiers, mirroring the paper's atomics → HTM spectrum:
+
+* :func:`atomic_commit` — one scatter element per message (XLA scatter with
+  conflict semantics resolved by the memory system).  This is the
+  *fine-grained atomics* baseline the paper compares against (Graph500-style
+  CAS/ACC).
+* :func:`coarse_commit` — the AAM path: messages are processed in
+  "transactions" of M messages; each transaction's conflicts are resolved
+  on-chip (sort + segment reduction over the tile) and the state is written
+  once per distinct target.  Semantically identical, structurally what the
+  Pallas kernel (:mod:`repro.kernels.coarse_commit`) does on TPU VMEM/MXU.
+* the Pallas kernel itself (used on real TPU via ``use_pallas``).
+
+All commits return a :class:`CommitResult` carrying MF success flags (the
+"did my transaction win" bit routed back for FR messages) and conflict
+telemetry (the abort-statistics analogue of paper Tables 3c/3f).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.messages import Messages
+
+OPS = ("min", "max", "add", "or", "first")
+
+
+def _identity(op: str, dtype):
+    if op == "min":
+        return jnp.array(jnp.iinfo(dtype).max if jnp.issubdtype(dtype, jnp.integer)
+                         else jnp.inf, dtype)
+    if op == "max":
+        return jnp.array(jnp.iinfo(dtype).min if jnp.issubdtype(dtype, jnp.integer)
+                         else -jnp.inf, dtype)
+    if op == "add":
+        return jnp.array(0, dtype)
+    if op == "or":
+        return jnp.array(False, bool)
+    raise ValueError(op)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CommitResult:
+    state: jax.Array        # updated state array [V] (or [V, d])
+    success: jax.Array      # bool [n] — MF: message won; AS: valid mask
+    conflicts: jax.Array    # int32 — duplicate-target messages this batch
+    applied: jax.Array      # int32 — messages that changed state
+
+
+# ---------------------------------------------------------------------------
+# Tier 1: fine-grained baseline (per-message scatter = atomics analogue)
+# ---------------------------------------------------------------------------
+
+
+def atomic_commit(state: jax.Array, msgs: Messages, op: str,
+                  stats: bool = True) -> CommitResult:
+    """One scatter element per message; conflicts resolved by scatter
+    semantics (the TPU analogue of a CAS/FAO per vertex)."""
+    n = msgs.capacity
+    idx = jnp.where(msgs.valid, msgs.target, state.shape[0])  # OOB -> dropped
+    val = msgs.payload
+    old = state
+    mode = jax.lax.GatherScatterMode.FILL_OR_DROP
+    if op == "min":
+        new = state.at[idx].min(val, mode=mode)
+    elif op == "max":
+        new = state.at[idx].max(val, mode=mode)
+    elif op == "add":
+        new = state.at[idx].add(jnp.where(
+            _bcast(msgs.valid, val), val, jnp.zeros_like(val)), mode=mode)
+    elif op == "or":
+        new = state.at[idx].max(val.astype(state.dtype), mode=mode)
+    elif op == "first":
+        # first-writer-wins on empty slots (id -1 = empty), ties -> min msg id
+        return _first_commit(state, msgs)
+    else:
+        raise ValueError(op)
+    if not stats:
+        z = jnp.zeros((), jnp.int32)
+        return CommitResult(new, msgs.valid, z, z)
+    success, conflicts, applied = _success_stats(old, new, msgs, op)
+    return CommitResult(new, success, conflicts, applied)
+
+
+def _bcast(mask, val):
+    return mask.reshape(mask.shape + (1,) * (val.ndim - mask.ndim))
+
+
+# ---------------------------------------------------------------------------
+# Tier 2: coarse transactions (sort + in-tile conflict resolution)
+# ---------------------------------------------------------------------------
+
+
+def coarse_commit(state: jax.Array, msgs: Messages, op: str,
+                  m: int | None = None, sort: bool = True,
+                  stats: bool = True) -> CommitResult:
+    """AAM coarse commit.
+
+    Conflict resolution happens *before* touching state: duplicate targets
+    inside the batch are reduced to one update per distinct target (sort by
+    target + segment reduce), then committed with one conflict-free scatter.
+    ``m`` is the transaction size — the batch is processed in ceil(n/m)
+    tiles via ``lax.map`` (each tile = one "transaction"; the Pallas kernel
+    executes one tile per grid step).  ``sort=False`` models uncoalesced
+    message streams (pure in-tile resolution, cross-tile conflicts still hit
+    the scatter path) — the benchmark knob for paper Fig 4.
+    """
+    n = msgs.capacity
+    if m is None or m >= n:
+        return _resolved_commit(state, msgs, op, sort=sort, stats=stats)
+
+    pad = (-n) % m
+    msgs_p = jax.tree.map(
+        lambda x: jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1)), msgs)
+    msgs_p = dataclasses.replace(
+        msgs_p, valid=jnp.pad(msgs.valid, (0, pad), constant_values=False))
+    tiles = jax.tree.map(
+        lambda x: x.reshape((n + pad) // m, m) if x.ndim == 1
+        else x.reshape(((n + pad) // m, m) + x.shape[1:]), msgs_p)
+
+    def tx(state, tile):
+        r = _resolved_commit(state, tile, op, sort=sort, stats=stats)
+        return r.state, (r.success, r.conflicts, r.applied)
+
+    new_state, (succ, conf, app) = jax.lax.scan(tx, state, tiles)
+    succ = succ.reshape(-1)[:n]
+    return CommitResult(new_state, succ, jnp.sum(conf), jnp.sum(app))
+
+
+def _resolved_commit(state, msgs: Messages, op: str, sort: bool,
+                     stats: bool = True) -> CommitResult:
+    """One transaction: resolve in-batch conflicts, then write state.
+
+    sorted path (coalesced AAM): sort by target, reduce duplicate runs with
+    a segmented associative scan (O(N log N), no O(V) buffers — this is the
+    jnp mirror of the Pallas kernel's in-VMEM resolution), then ONE
+    conflict-free scatter (unique targets).
+    unsorted path: the uncoalesced stream — duplicates go straight to the
+    scatter and conflicts serialize in the memory system (atomics-like).
+    ``stats=False`` skips the O(V) success accounting and reports cheap
+    O(N) conflict/applied counts (success == valid placeholder).
+    """
+    n = msgs.capacity
+    v = state.shape[0]
+    idx = jnp.where(msgs.valid, msgs.target, v)
+    if op == "first":
+        return _first_commit(state, msgs)
+    val = msgs.payload
+    old = state
+    mode = jax.lax.GatherScatterMode.FILL_OR_DROP
+
+    if not sort:
+        if stats:
+            return atomic_commit(state, msgs, op)
+        new = atomic_commit(state, msgs, op).state
+        return CommitResult(new, msgs.valid, jnp.zeros((), jnp.int32),
+                            jnp.zeros((), jnp.int32))
+
+    order = jnp.argsort(idx, stable=True)          # coalescing: sort by target
+    s_idx = idx[order]
+    s_val = val[order]
+    s_valid = msgs.valid[order]
+
+    if op == "add":
+        s_val = jnp.where(_bcast(s_valid, s_val), s_val,
+                          jnp.zeros_like(s_val))
+    elif op == "or":
+        s_val = (s_valid & s_val.astype(bool))
+
+    # segmented inclusive scan over sorted runs of equal target
+    first = jnp.concatenate([jnp.ones((1,), bool), s_idx[1:] != s_idx[:-1]])
+    f = {"min": jnp.minimum, "max": jnp.maximum,
+         "add": jnp.add, "or": jnp.logical_or}[op]
+
+    def comb(a, b):
+        fa, va = a
+        fb, vb = b
+        return fa | fb, jnp.where(_bcast(fb, vb), vb, f(va, vb))
+
+    _, scanned = jax.lax.associative_scan(comb, (first, s_val))
+    last = jnp.concatenate([first[1:], jnp.ones((1,), bool)])
+    # one conflict-free write per distinct target (run reductions at `last`)
+    w_idx = jnp.where(last, s_idx, v)
+    if op == "add":
+        new = state.at[w_idx].add(scanned.astype(state.dtype), mode=mode)
+    elif op == "min":
+        new = state.at[w_idx].min(scanned.astype(state.dtype), mode=mode)
+    elif op == "max":
+        new = state.at[w_idx].max(scanned.astype(state.dtype), mode=mode)
+    else:  # or
+        new = state.at[w_idx].max(scanned.astype(state.dtype), mode=mode)
+    if stats:
+        success, conflicts, applied = _success_stats(old, new, msgs, op)
+    else:
+        n_valid = jnp.sum(s_valid.astype(jnp.int32))
+        n_runs = jnp.sum((first & s_valid).astype(jnp.int32))
+        conflicts = n_valid - n_runs
+        changed = new[jnp.clip(s_idx, 0, v - 1)] != old[jnp.clip(s_idx, 0, v - 1)]
+        applied = jnp.sum((last & s_valid & changed).astype(jnp.int32))
+        success = msgs.valid
+    return CommitResult(new, success, conflicts, applied)
+
+
+def _segment(val, idx, op, num_segments):
+    f = {"min": jax.ops.segment_min, "max": jax.ops.segment_max,
+         "add": jax.ops.segment_sum}[op]
+    return f(val, idx, num_segments=num_segments)
+
+
+def _first_commit(state, msgs: Messages) -> CommitResult:
+    """First-writer-wins into empty (-1) slots; in-batch ties -> lowest
+    message index (the paper's 'one of them succeeds')."""
+    v = state.shape[0]
+    n = msgs.capacity
+    idx = jnp.where(msgs.valid, msgs.target, v)
+    msg_rank = jnp.arange(n, dtype=jnp.int32)
+    winner_rank = jax.ops.segment_min(msg_rank, idx, num_segments=v + 1)[:v]
+    empty = state < 0
+    takes = empty & (winner_rank < n)
+    val = msgs.payload
+    winner_val = jnp.where(
+        takes, val[jnp.clip(winner_rank, 0, n - 1)], state)
+    new = jnp.where(takes, winner_val, state)
+    success = msgs.valid & (msg_rank == winner_rank[jnp.clip(msgs.target, 0, v - 1)]) \
+        & empty[jnp.clip(msgs.target, 0, v - 1)]
+    conflicts = jnp.sum(msgs.valid) - jnp.sum(takes)
+    return CommitResult(new, success, conflicts.astype(jnp.int32),
+                        jnp.sum(takes).astype(jnp.int32))
+
+
+def _success_stats(old, new, msgs: Messages, op: str):
+    n = msgs.capacity
+    v = old.shape[0]
+    tgt = jnp.clip(msgs.target, 0, v - 1)
+    if op == "add":
+        success = msgs.valid
+        applied = jnp.sum(msgs.valid)
+    elif op == "or":
+        success = msgs.valid & ~old[tgt].astype(bool)
+        applied = jnp.sum((new != old).astype(jnp.int32))
+    else:  # min/max — MF: message wins iff it set the final value
+        val = msgs.payload
+        final = new[tgt]
+        improved = (val == final) & (final != old[tgt]) & msgs.valid
+        # first among equal winners
+        msg_rank = jnp.arange(n, dtype=jnp.int32)
+        rank_key = jnp.where(improved, msg_rank, n)
+        idx = jnp.where(improved, msgs.target, v)
+        first_rank = jax.ops.segment_min(rank_key, idx, num_segments=v + 1)[:v]
+        success = improved & (msg_rank == first_rank[tgt])
+        applied = jnp.sum((new != old).astype(jnp.int32))
+    # conflicts = valid messages sharing a target with another message
+    idx = jnp.where(msgs.valid, msgs.target, v)
+    counts = jax.ops.segment_sum(jnp.ones((n,), jnp.int32), idx,
+                                 num_segments=v + 1)[:v]
+    conflicts = jnp.sum(jnp.where(msgs.valid & (counts[tgt] > 1), 1, 0))
+    return success, conflicts.astype(jnp.int32), applied.astype(jnp.int32)

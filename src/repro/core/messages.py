@@ -1,0 +1,84 @@
+"""Atomic Active Messages — message taxonomy (paper §3.2).
+
+Two orthogonal criteria classify every message:
+
+* direction of data flow: Fire-and-Forget (FF) vs Fire-and-Return (FR);
+* activity commits: Always-Succeed (AS) vs May-Fail (MF).
+
+A :class:`Messages` batch is the unit the runtime coarsens (executes M per
+"transaction" tile) and coalesces (buckets per destination shard).  SoA
+layout; payload may be a scalar per message or a vector (LM activations in
+the MoE application).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+class Direction(enum.Enum):
+    FF = "fire_and_forget"
+    FR = "fire_and_return"
+
+
+class CommitMode(enum.Enum):
+    AS = "always_succeed"
+    MF = "may_fail"
+
+
+@dataclasses.dataclass(frozen=True)
+class MessageType:
+    direction: Direction
+    commit: CommitMode
+
+    @property
+    def tag(self) -> str:
+        return f"{'FF' if self.direction is Direction.FF else 'FR'}&" \
+               f"{'AS' if self.commit is CommitMode.AS else 'MF'}"
+
+
+FF_AS = MessageType(Direction.FF, CommitMode.AS)   # PageRank
+FF_MF = MessageType(Direction.FF, CommitMode.MF)   # BFS
+FR_AS = MessageType(Direction.FR, CommitMode.AS)   # ST-connectivity
+FR_MF = MessageType(Direction.FR, CommitMode.MF)   # coloring, Boruvka
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Messages:
+    """A batch of atomic active messages.
+
+    target:  int32 [n] destination element id (global vertex id / expert id)
+    payload: [n] or [n, d] operator argument
+    valid:   bool [n] — lanes beyond the live count are masked out
+    """
+    target: jax.Array
+    payload: Any
+    valid: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        return self.target.shape[0]
+
+    def count(self) -> jax.Array:
+        return jnp.sum(self.valid.astype(jnp.int32))
+
+
+def make_messages(target, payload, valid=None) -> Messages:
+    target = jnp.asarray(target, jnp.int32)
+    if valid is None:
+        valid = jnp.ones(target.shape, bool)
+    return Messages(target=target, payload=payload, valid=valid)
+
+
+def concat_messages(a: Messages, b: Messages) -> Messages:
+    return Messages(
+        target=jnp.concatenate([a.target, b.target]),
+        payload=jax.tree.map(lambda x, y: jnp.concatenate([x, y]),
+                             a.payload, b.payload),
+        valid=jnp.concatenate([a.valid, b.valid]),
+    )

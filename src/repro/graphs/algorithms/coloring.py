@@ -1,0 +1,70 @@
+"""Boman graph coloring — FR&MF messages (paper §3.3.5, Listing 7).
+
+Rounds: every active vertex proposes a color; conflicts (edge endpoints with
+equal color) are resolved by a seeded coin flip choosing which endpoint
+recolors — the paper's "return the ID of a vertex to be recolored" failure
+handler, expressed as the FR path.  Terminates when no edge conflicts
+remain; validity is property-tested.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.csr import Graph
+
+
+def _hash32(x):
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7feb352d)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846ca68b)
+    return x ^ (x >> 16)
+
+
+@partial(jax.jit, static_argnames=("max_rounds",))
+def coloring(g: Graph, *, palette: int | None = None, seed: int = 0,
+             max_rounds: int = 500):
+    v = g.num_vertices
+    max_deg = jnp.max(g.degrees)
+    # Brooks-style palette bound Δ+1 (jnp scalar OK inside where/mod)
+    pal = max_deg + 1
+
+    def propose(active, color, rnd):
+        mix = (jnp.asarray(seed, jnp.uint32)
+               + rnd.astype(jnp.uint32) * jnp.uint32(2654435761))
+        h = _hash32(jnp.arange(v, dtype=jnp.uint32) ^ _hash32(mix))
+        prop = (h % pal.astype(jnp.uint32)).astype(jnp.int32)
+        return jnp.where(active, prop, color)
+
+    def cond(state):
+        _, active, it = state
+        return jnp.any(active) & (it < max_rounds)
+
+    def body(state):
+        color, active, it = state
+        color = propose(active, color, it)
+        cs, cd = color[g.src], color[g.dst]
+        conflict = cs == cd                       # per-edge conflict
+        # seeded coin flip per conflicting edge: loser recolors (FR return)
+        eid = jnp.arange(g.num_edges, dtype=jnp.uint32)
+        coin = (_hash32(eid ^ jnp.asarray(seed * 31 + 7, jnp.uint32) ^
+                        _hash32(jnp.asarray(it).astype(jnp.uint32))) & 1) == 0
+        loser = jnp.where(coin, g.src, g.dst)
+        new_active = jnp.zeros((v,), bool).at[loser].max(
+            conflict, mode="drop")
+        return color, new_active, it + 1
+
+    color0 = jnp.zeros((v,), jnp.int32)
+    active0 = jnp.ones((v,), bool)
+    color, active, rounds = jax.lax.while_loop(
+        cond, body, (color0, active0, jnp.zeros((), jnp.int32)))
+    return color, rounds, jnp.any(active)   # any=True -> didn't converge
+
+
+def validate_coloring(g: Graph, color) -> bool:
+    import numpy as np
+    c = np.asarray(color)
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    return bool((c[src] != c[dst]).all())

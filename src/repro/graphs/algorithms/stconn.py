@@ -1,0 +1,52 @@
+"""ST-connectivity — FR&AS messages (paper §3.3.4, Listing 6).
+
+Two concurrent BFS waves ("grey" from s, "green" from t) color white
+vertices with a first-writer-wins commit; an edge whose endpoints carry
+different non-white colors proves connectivity (the operator's ``return
+true`` routed back to the spawner, which terminates the run)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import commit as C
+from repro.core.messages import make_messages
+from repro.graphs.csr import Graph
+
+WHITE, GREY, GREEN = -1, 1, 2
+
+
+@jax.jit
+def st_connectivity(g: Graph, s, t):
+    v = g.num_vertices
+    color0 = jnp.full((v,), WHITE, jnp.int32).at[s].set(GREY).at[t].set(GREEN)
+    frontier0 = jnp.zeros((v,), bool).at[s].set(True).at[t].set(True)
+
+    def cond(state):
+        color, frontier, found, it = state
+        return jnp.any(frontier) & ~found & (it < v)
+
+    def body(state):
+        color, frontier, found, it = state
+        active = frontier[g.src]
+        # meeting check on live edges (the FR "returns true" path)
+        meet = active & (color[g.src] != WHITE) & (color[g.dst] != WHITE) \
+            & (color[g.src] != color[g.dst])
+        found = found | jnp.any(meet)
+        msgs = make_messages(g.dst, color[g.src], active)
+        res = C.coarse_commit(color, msgs, "first")
+        changed = res.state != color
+        return res.state, changed, found, it + 1
+
+    color, _, found, rounds = jax.lax.while_loop(
+        cond, body, (color0, frontier0, jnp.zeros((), bool),
+                     jnp.zeros((), jnp.int32)))
+    # exhaustive fallback: same color reached both? (disconnected otherwise)
+    return found, rounds
+
+
+def st_reference(g: Graph, s: int, t: int) -> bool:
+    import numpy as np
+    from repro.graphs.algorithms.bfs import bfs_reference
+    dist = bfs_reference(g, s)
+    return bool(dist[t] < 2 ** 29)

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: coarse conflict-resolving commit (DESIGN.md §2.1).
+
+One grid step = one *transaction*: a tile of M messages ``(idx, val)`` is
+resolved against a ``B``-vertex block of the state array entirely in VMEM.
+The M×B one-hot incidence is materialized in registers/VMEM and reduced:
+
+* ``add`` (Always-Succeed accumulate): ``contrib = valᵀ · onehot`` — an MXU
+  matmul (this is why the AS commit is *serialization-free* on TPU, unlike
+  the paper's HTM abort storm for ACC in §5.4.2);
+* ``min``/``max`` (May-Fail): masked VPU reduction over the tile dim.
+
+The (M × B) working set is the transaction's read/write set and must fit
+VMEM — the exact analogue of the paper's HTM speculative-state capacity
+(L1/L2): oversized M spills and "aborts" become tile re-fetches.  M is the
+paper's transaction-size knob; the roofline sweep lives in
+``benchmarks/fig4_coarsening.py``.
+
+Grid = (state_blocks, message_tiles); message tiles iterate innermost so a
+state block stays resident while every transaction visits it.  Messages
+sorted by target (coalescing) make non-incident (tile, block) pairs cheap
+(all-masked compare, no state traffic); unsorted messages model the paper's
+uncoalesced baseline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _identity(op: str, dtype):
+    if op == "min":
+        return (jnp.iinfo(dtype).max if jnp.issubdtype(dtype, jnp.integer)
+                else jnp.inf)
+    if op == "max":
+        return (jnp.iinfo(dtype).min if jnp.issubdtype(dtype, jnp.integer)
+                else -jnp.inf)
+    return 0
+
+
+def _commit_kernel(idx_ref, val_ref, state_ref, out_ref, *, op: str,
+                   tile_m: int, block_v: int):
+    b = pl.program_id(0)
+    m = pl.program_id(1)
+
+    @pl.when(m == 0)
+    def _init():
+        out_ref[...] = state_ref[...]
+
+    idx = idx_ref[...]                                   # [M] int32
+    val = val_ref[...]                                   # [M]
+    base = b * block_v
+    rel = idx - base
+    mask = (rel >= 0) & (rel < block_v) & (idx >= 0)     # idx -1 = invalid
+    relc = jnp.where(mask, rel, 0)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (tile_m, block_v), 1)
+    onehot = (lane == relc[:, None]) & mask[:, None]     # [M, B]
+
+    if op == "add":
+        if jnp.issubdtype(val.dtype, jnp.floating):
+            contrib = jax.lax.dot(
+                val[None, :].astype(jnp.float32),
+                onehot.astype(jnp.float32),
+                precision=jax.lax.Precision.HIGHEST)[0]  # MXU path
+        else:
+            contrib = jnp.sum(
+                jnp.where(onehot, val[:, None], 0), axis=0)
+        out_ref[...] += contrib.astype(out_ref.dtype)
+    elif op == "min":
+        ident = _identity(op, val.dtype)
+        cand = jnp.where(onehot, val[:, None], ident)
+        out_ref[...] = jnp.minimum(out_ref[...], jnp.min(cand, axis=0))
+    elif op == "max":
+        ident = _identity(op, val.dtype)
+        cand = jnp.where(onehot, val[:, None], ident)
+        out_ref[...] = jnp.maximum(out_ref[...], jnp.max(cand, axis=0))
+    else:
+        raise ValueError(op)
+
+
+@functools.partial(jax.jit, static_argnames=("op", "tile_m", "block_v",
+                                             "interpret"))
+def coarse_commit_pallas(state, idx, val, *, op: str = "min",
+                         tile_m: int = 256, block_v: int = 512,
+                         interpret: bool = True):
+    """state: [V]; idx: [N] int32 (-1 = masked); val: [N].
+
+    Returns the committed state.  ``interpret=True`` executes on CPU (this
+    container); on real TPU pass ``interpret=False``.
+    """
+    v = state.shape[0]
+    n = idx.shape[0]
+    vpad = (-v) % block_v
+    npad = (-n) % tile_m
+    ident = _identity(op, state.dtype)
+    state_p = jnp.pad(state, (0, vpad),
+                      constant_values=state.dtype.type(ident) if op != "add"
+                      else 0)
+    idx_p = jnp.pad(idx, (0, npad), constant_values=-1)
+    val_p = jnp.pad(val, (0, npad))
+    nb = (v + vpad) // block_v
+    nm = (n + npad) // tile_m
+
+    out = pl.pallas_call(
+        functools.partial(_commit_kernel, op=op, tile_m=tile_m,
+                          block_v=block_v),
+        grid=(nb, nm),
+        in_specs=[
+            pl.BlockSpec((tile_m,), lambda b, m: (m,)),
+            pl.BlockSpec((tile_m,), lambda b, m: (m,)),
+            pl.BlockSpec((block_v,), lambda b, m: (b,)),
+        ],
+        out_specs=pl.BlockSpec((block_v,), lambda b, m: (b,)),
+        out_shape=jax.ShapeDtypeStruct(state_p.shape, state.dtype),
+        interpret=interpret,
+    )(idx_p, val_p, state_p)
+    return out[:v]

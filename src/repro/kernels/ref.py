@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def coarse_commit_ref(state, idx, val, *, op: str = "min"):
+    """Semantics of the coarse commit: resolve in-batch conflicts with the
+    reduction op, then combine with state.  idx -1 (or OOB) = masked."""
+    v = state.shape[0]
+    valid = (idx >= 0) & (idx < v)
+    safe = jnp.where(valid, idx, v)
+    if op == "add":
+        red = jax.ops.segment_sum(jnp.where(valid, val, 0), safe,
+                                  num_segments=v + 1)[:v]
+        return state + red.astype(state.dtype)
+    if op == "min":
+        red = jax.ops.segment_min(jnp.where(valid, val, _big(val.dtype)),
+                                  safe, num_segments=v + 1)[:v]
+        return jnp.minimum(state, red.astype(state.dtype))
+    if op == "max":
+        red = jax.ops.segment_max(jnp.where(valid, val, _small(val.dtype)),
+                                  safe, num_segments=v + 1)[:v]
+        return jnp.maximum(state, red.astype(state.dtype))
+    raise ValueError(op)
+
+
+def _big(dt):
+    return jnp.iinfo(dt).max if jnp.issubdtype(dt, jnp.integer) else jnp.inf
+
+
+def _small(dt):
+    return jnp.iinfo(dt).min if jnp.issubdtype(dt, jnp.integer) else -jnp.inf
+
+
+def bucket_count_ref(owner, num_buckets: int):
+    """Histogram: messages per bucket. owner -1 = masked."""
+    valid = (owner >= 0) & (owner < num_buckets)
+    safe = jnp.where(valid, owner, num_buckets)
+    return jnp.bincount(safe, length=num_buckets + 1)[:num_buckets] \
+        .astype(jnp.int32)
+
+
+def ssd_chunk_ref(C, B, x, a):
+    """SSD intra-chunk oracle (one chunk, one head).
+
+    C, B: [L, N]; x: [L, P]; a: [L] log-decays.
+    y[t] = sum_{s<=t} (C_t·B_s) exp(cumsum(a)_t - cumsum(a)_s) x_s."""
+    cs = jnp.cumsum(a)
+    L = a.shape[0]
+    decay = jnp.exp(cs[:, None] - cs[None, :])
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    G = (C @ B.T) * jnp.where(tri, decay, 0.0)
+    return G @ x

@@ -1,0 +1,431 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct inputs (no allocation) and record memory / cost / collective
+analyses for the roofline (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+      --shape train_4k [--multi-pod] [--out artifacts/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all   # every cell, both meshes
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.archs import ARCHS, skip_reason
+from repro.configs.base import RunConfig, SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.runtime import sharding as shd
+from repro.train.optimizer import make_optimizer
+from repro.train.train_step import make_train_step
+
+RULES = shd.ShardingRules(shd.TRAIN_RULES)
+
+# optimizer choice per scale (DESIGN.md §4.1): adafactor >= 100B total params
+def pick_optimizer(cfg) -> str:
+    return "adafactor" if cfg.param_count() > 1e11 else "adamw"
+
+
+def batch_shardings(batch_specs, mesh):
+    def spec(path, x):
+        name = path[-1].key
+        if name in ("tokens", "labels", "token"):
+            ax = ("batch", "seq")[:len(x.shape)]
+        elif name in ("frames", "patch_embeds"):
+            ax = ("batch", "seq", "act_embed")
+        elif name == "pos":
+            ax = ()
+        else:
+            ax = (None,) * len(x.shape)
+        return RULES.sharding_for(ax, x.shape, mesh)
+    return jax.tree_util.tree_map_with_path(spec, batch_specs)
+
+
+def _microbatches(arch: str, shape_name: str) -> int:
+    cfg = ARCHS[arch]
+    if shape_name != "train_4k":
+        return 1
+    # keep per-device token count per microbatch <= ~16k for >20B models
+    return 4 if cfg.param_count() > 2e10 else 1
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               extra: dict | None = None):
+    """Lower + compile one cell. Returns the result record."""
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    extra = extra or {}
+    rcfg = RunConfig(
+        model=cfg, shape=shape, multi_pod=multi_pod,
+        optimizer=pick_optimizer(cfg),
+        # remat only matters under grad; for serve kinds it merely creates
+        # reshard boundaries at f32 intermediates (§Perf iteration 8)
+        remat=extra.get("remat", "full" if shape.kind == "train" else "none"),
+        microbatches=extra.get("microbatches", _microbatches(arch, shape_name)),
+        moe_impl=extra.get("moe_impl", "aam"),
+        attn_causal_skip=extra.get("attn_causal_skip", False),
+        shard_grads=extra.get("shard_grads", False),
+        serve_tp=extra.get("serve_tp", False),
+        seq_parallel=extra.get("seq_parallel", False),
+    )
+
+    t0 = time.time()
+    serve_tp = rcfg.serve_tp and shape.kind != "train"
+    rules = (shd.ShardingRules(shd.SERVE_TP_RULES) if serve_tp else RULES)
+    param_dtype = jnp.bfloat16 if serve_tp else jnp.float32
+    params_s = M.param_specs(cfg, param_dtype)
+    param_sh = shd.tree_shardings(rules, params_s, mesh)
+    batch_s = M.input_specs(cfg, shape)
+    batch_sh = batch_shardings(batch_s, mesh)
+
+    with mesh:
+        if shape.kind == "train":
+            opt = make_optimizer(rcfg)
+            opt_s = jax.eval_shape(opt.init, params_s)
+            opt_sh = shd.tree_shardings(RULES, opt_s, mesh)
+            step_fn = make_train_step(cfg, rcfg, opt)
+            step_s = jax.ShapeDtypeStruct((), jnp.int32)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(param_sh, opt_sh, None, batch_sh),
+                out_shardings=(param_sh, opt_sh, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_s, opt_s, step_s, batch_s)
+        elif shape.kind == "prefill":
+            def prefill_fn(params, batch):
+                return M.prefill(cfg, rcfg, params, batch)
+            cache_s = jax.eval_shape(
+                lambda p, b: M.prefill(cfg, rcfg, p, b)[1], params_s, batch_s)
+            cache_sh = shd.tree_shardings(RULES, cache_s, mesh)
+            jitted = jax.jit(prefill_fn,
+                             in_shardings=(param_sh, batch_sh),
+                             out_shardings=(None, cache_sh))
+            lowered = jitted.lower(params_s, batch_s)
+        else:  # decode
+            cache_s = M.cache_specs(cfg, rcfg, shape)
+            cache_sh = shd.tree_shardings(RULES, cache_s, mesh)
+
+            def decode_fn(params, cache, token, pos):
+                return M.decode_step(cfg, rcfg, params, cache, token, pos)
+            jitted = jax.jit(
+                decode_fn,
+                in_shardings=(param_sh, cache_sh,
+                              batch_sh["token"], batch_sh["pos"]),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(params_s, cache_s, batch_s["token"],
+                                   batch_s["pos"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_stats(compiled.as_text())
+
+    # exact jaxpr-level cost (scan/remat aware; global, unsharded)
+    from repro.runtime.flops import cost_of
+    if shape.kind == "train":
+        jc = cost_of(step_fn, params_s, opt_s, step_s, batch_s)
+    elif shape.kind == "prefill":
+        jc = cost_of(prefill_fn, params_s, batch_s)
+    else:
+        jc = cost_of(decode_fn, params_s, cache_s, batch_s["token"],
+                     batch_s["pos"])
+
+    # per-device static state bytes from the actual shardings
+    def sharded_bytes(specs, shardings):
+        tot = 0
+        for s, sh in zip(jax.tree.leaves(specs), jax.tree.leaves(shardings)):
+            shp = sh.shard_shape(s.shape)
+            n = 1
+            for d in shp:
+                n *= d
+            tot += n * jnp.dtype(s.dtype).itemsize
+        return tot
+
+    state_bytes = sharded_bytes(params_s, param_sh)
+    if shape.kind == "train":
+        state_bytes += sharded_bytes(opt_s, opt_sh)
+    elif shape.kind == "decode":
+        state_bytes += sharded_bytes(cache_s, cache_sh)
+
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    n_act = cfg.active_param_count()
+    model_flops = (6 if shape.kind == "train" else 2) * n_act * tokens
+
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": mesh.size,
+        "kind": shape.kind,
+        "optimizer": rcfg.optimizer,
+        "microbatches": rcfg.microbatches,
+        "moe_impl": rcfg.moe_impl,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": memory_record(mem),
+        "state_bytes_per_device": int(state_bytes),
+        "xla_cost": {k: cost.get(k) for k in
+                     ("flops", "bytes accessed", "bytes accessed output",
+                      "optimal_seconds") if k in cost},
+        "jaxpr_cost": {"flops": jc.flops, "dot_flops": jc.dot_flops,
+                       "bytes_unfused": jc.bytes,
+                       "top_prims": dict(sorted(
+                           jc.by_prim.items(), key=lambda kv: -kv[1])[:8])},
+        "model_flops": float(model_flops),
+        "collectives": coll,
+        "params_total": cfg.param_count(),
+        "params_active": n_act,
+    }
+    print(f"memory_analysis: {record['memory']}")
+    print(f"state_bytes/device: {state_bytes/2**30:.2f} GiB")
+    print(f"cost_analysis(xla): {record['xla_cost']}")
+    print(f"jaxpr flops={jc.flops:.3e} dot={jc.dot_flops:.3e} "
+          f"model_flops={model_flops:.3e}")
+    print(f"collectives: {coll['totals']}")
+    return record
+
+
+def memory_record(mem) -> dict:
+    out = {}
+    for f in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "temp_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(mem, f, None)
+        if v is not None:
+            out[f] = int(v)
+    if not out:
+        out["repr"] = str(mem)
+    return out
+
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _parse_computations(hlo_text: str):
+    """name -> (is_entry, [instruction lines])."""
+    comps: dict[str, list[str]] = {}
+    entry = None
+    current = None
+    for ln in hlo_text.splitlines():
+        m = _COMP_HDR_RE.match(ln.strip())
+        if m and not ln.startswith("  "):
+            current = m.group(2)
+            comps[current] = []
+            if m.group(1):
+                entry = current
+            continue
+        if ln.strip() == "}":
+            current = None
+            continue
+        if current is not None:
+            comps[current].append(ln)
+    return comps, entry
+
+
+def _computation_multipliers(comps, entry):
+    """Execution count per computation: while bodies scale by trip count,
+    call/fusion/reduce edges propagate the caller's multiplier."""
+    mult = {name: 0.0 for name in comps}
+    if entry is None:
+        return {name: 1.0 for name in comps}
+    mult[entry] = 1.0
+    # iterate to fixpoint (call graph is a DAG; few passes suffice)
+    for _ in range(len(comps)):
+        changed = False
+        for name, lines in comps.items():
+            m0 = mult.get(name, 0.0)
+            if m0 == 0.0:
+                continue
+            for ln in lines:
+                if " while(" in ln or ln.strip().startswith("%while") \
+                        or "= (" in ln and "while(" in ln:
+                    body = _BODY_RE.search(ln)
+                    trip = _TRIP_RE.search(ln)
+                    n = float(trip.group(1)) if trip else 1.0
+                    for mm, factor in ((body, n), (_COND_RE.search(ln), n + 1)):
+                        if mm and mult.get(mm.group(1), 0.0) < m0 * factor:
+                            mult[mm.group(1)] = m0 * factor
+                            changed = True
+                else:
+                    for cm in _CALL_RE.finditer(ln):
+                        if mult.get(cm.group(1), 0.0) < m0:
+                            mult[cm.group(1)] = m0
+                            changed = True
+        if not changed:
+            break
+    return {k: (v if v > 0 else 1.0) for k, v in mult.items()}
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-collective bytes from the compiled HLO, with while-loop
+    trip-count multipliers (collectives inside the layer scan count
+    num_blocks times).  Records result bytes, estimated wire bytes per
+    device (ring formulas), and the participant-group size."""
+    comps, entry = _parse_computations(hlo_text)
+    mult = _computation_multipliers(comps, entry)
+
+    # name -> result shape string (global, for operand lookup)
+    shapes: dict[str, str] = {}
+    for lines in comps.values():
+        for ln in lines:
+            m = _DEF_RE.match(ln)
+            if m:
+                name, rhs = m.groups()
+                shapes[name] = rhs.split(" ")[0]
+
+    per_op: dict[str, dict] = {c: {"count": 0, "result_bytes": 0,
+                                   "wire_bytes": 0}
+                               for c in _COLLECTIVES}
+    for cname, lines in comps.items():
+        k = mult.get(cname, 1.0)
+        for ln in lines:
+            m = _DEF_RE.match(ln)
+            if not m:
+                continue
+            _, rhs = m.groups()
+            opm = re.search(
+                r"\b(" + "|".join(_COLLECTIVES) + r")(-start)?\(", rhs)
+            if not opm or "-done(" in rhs:
+                continue
+            op = opm.group(1)
+            rb = _shape_bytes(rhs.split(" ")[0])
+            gm = _GROUPS_RE.search(rhs)
+            gsize = int(gm.group(2)) if gm else 0
+            n = max(gsize, 2)
+            ring = (n - 1) / n
+            if op == "all-reduce":
+                wire = 2 * rb * ring
+            elif op == "all-gather":
+                wire = rb * ring          # result is the gathered tensor
+            elif op == "reduce-scatter":
+                wire = rb * (n - 1)       # operand = result * n
+            elif op == "all-to-all":
+                wire = rb * ring
+            else:                          # collective-permute
+                wire = rb
+            per_op[op]["count"] += int(k)
+            per_op[op]["result_bytes"] += int(rb * k)
+            per_op[op]["wire_bytes"] += int(wire * k)
+            per_op[op].setdefault("group_sizes", set()).add(gsize)
+    for v in per_op.values():
+        if "group_sizes" in v:
+            v["group_sizes"] = sorted(v["group_sizes"])
+    totals = {"count": sum(v["count"] for v in per_op.values()),
+              "result_bytes": sum(v["result_bytes"] for v in per_op.values()),
+              "wire_bytes": sum(v["wire_bytes"] for v in per_op.values())}
+    return {"per_op": per_op, "totals": totals}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--moe-impl", default=None,
+                    choices=["aam", "dense", "aam_shmap"])
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--causal-skip", action="store_true")
+    ap.add_argument("--shard-grads", action="store_true")
+    ap.add_argument("--serve-tp", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                for mp in (False, True):
+                    cells.append((a, s, mp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape, args.multi_pod)]
+
+    extra = {}
+    if args.moe_impl:
+        extra["moe_impl"] = args.moe_impl
+    if args.microbatches:
+        extra["microbatches"] = args.microbatches
+    if args.causal_skip:
+        extra["attn_causal_skip"] = True
+    if args.shard_grads:
+        extra["shard_grads"] = True
+    if args.serve_tp:
+        extra["serve_tp"] = True
+    if args.seq_parallel:
+        extra["seq_parallel"] = True
+
+    failures = 0
+    for arch, shape_name, mp in cells:
+        mesh_tag = "2x16x16" if mp else "16x16"
+        stem = f"{arch}__{shape_name}__{mesh_tag}{args.tag}"
+        path = outdir / f"{stem}.json"
+        reason = skip_reason(arch, shape_name)
+        if reason:
+            path.write_text(json.dumps(
+                {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                 "skipped": reason}, indent=1))
+            print(f"[skip] {stem}: {reason}")
+            continue
+        print(f"[cell] {stem} ...", flush=True)
+        try:
+            rec = build_cell(arch, shape_name, mp, extra)
+            rec["tag"] = args.tag
+            path.write_text(json.dumps(rec, indent=1))
+            print(f"[ok]   {stem} compile={rec['compile_s']}s "
+                  f"jaxpr_flops={rec['jaxpr_cost']['flops']:.3e}")
+        except Exception:
+            failures += 1
+            err = traceback.format_exc()
+            path.with_suffix(".err").write_text(err)
+            print(f"[FAIL] {stem}\n{err}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh builders.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (jax locks the device count on first init, and the
+dry-run needs to set XLA_FLAGS first).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per pod (v5e pod slice); multi-pod adds a leading 'pod'
+    axis (2 pods = 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int | None = None):
+    """Small mesh over host devices (tests / CPU-distributed runs)."""
+    if pod is not None:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,289 @@
+"""Attention: GQA with RoPE, local/global windows, softcaps, KV caches.
+
+Two numerically-equivalent paths (property-tested against each other):
+
+* ``direct``  — one [Sq, Sk] logits tensor; used for short sequences and
+  decode (where Sq == 1).
+* ``chunked`` — pure-JAX flash attention: q tiled with ``lax.map``, online
+  softmax over kv chunks with ``lax.scan``.  Bounded memory for 32k prefill.
+  With ``causal_skip`` the q-chunk loop is unrolled and each q chunk scans
+  only its causal prefix of kv chunks (a compute-roofline optimization
+  recorded in EXPERIMENTS.md §Perf).
+
+GQA sharding: K/V are stored grouped ([B, S, KV, D]) but *repeated* to the
+full head count at use so every einsum shards cleanly over the ``model``
+axis even when KV < mesh "model" size (DESIGN.md §4.1 divisibility rule).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init, rope
+
+NEG_INF = -1e30
+
+
+def attn_init(cfg: ModelConfig, key, dtype=jnp.float32, cross: bool = False):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    p, a = {}, {}
+    p["wq"], a["wq"] = dense_init(ks[0], (d, h, hd), ("embed", "heads", "head_dim"), dtype)
+    p["wk"], a["wk"] = dense_init(ks[1], (d, kv, hd), ("embed", "kv_heads", "head_dim"), dtype)
+    p["wv"], a["wv"] = dense_init(ks[2], (d, kv, hd), ("embed", "kv_heads", "head_dim"), dtype)
+    p["wo"], a["wo"] = dense_init(ks[3], (h, hd, d), ("heads", "head_dim", "embed"), dtype)
+    if cfg.qkv_bias:
+        p["bq"], a["bq"] = (jnp.zeros((h, hd), dtype), ("heads", "head_dim"))
+        p["bk"], a["bk"] = (jnp.zeros((kv, hd), dtype), ("kv_heads", "head_dim"))
+        p["bv"], a["bv"] = (jnp.zeros((kv, hd), dtype), ("kv_heads", "head_dim"))
+    if cfg.qk_norm:
+        p["q_norm"], a["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"], a["k_norm"] = rmsnorm_init(hd, dtype)
+    return p, a
+
+
+def project_q(cfg: ModelConfig, p, x, positions, *, use_rope=True):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+    if use_rope and cfg.pos_embedding == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+    return q
+
+
+def project_kv(cfg: ModelConfig, p, x, positions, *, use_rope=True):
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope and cfg.pos_embedding == "rope":
+        k = rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def repeat_kv(x: jax.Array, num_heads: int) -> jax.Array:
+    """[B, S, KV, D] -> [B, S, H, D] by repeating each kv head H//KV times."""
+    b, s, kv, d = x.shape
+    reps = num_heads // kv
+    if reps == 1:
+        return x
+    return jnp.repeat(x, reps, axis=2)
+
+
+def _mask(q_pos, k_pos, *, causal: bool, window: int | None):
+    """q_pos: [B, Sq]; k_pos: [B, Sk] -> bool [B, 1, Sq, Sk]."""
+    qp = q_pos[:, None, :, None]
+    kp = k_pos[:, None, None, :]
+    m = kp >= 0                       # ring-buffer invalid slots carry -1
+    if causal:
+        m &= kp <= qp
+    if window is not None:
+        m &= kp > qp - window
+    return m
+
+
+def _direct(q, k, v, q_pos, k_pos, *, causal, window, softcap_val):
+    # q: [B, Sq, H, D] (already scaled); k, v: [B, Sk, H, D]
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32)
+    if softcap_val:
+        logits = jnp.tanh(logits / softcap_val) * softcap_val
+    mask = _mask(q_pos, k_pos, causal=causal, window=window)
+    logits = jnp.where(mask, logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    m = jnp.maximum(m, NEG_INF)  # guard fully-masked rows
+    w = jnp.exp(logits - m)
+    l = jnp.sum(w, axis=-1, keepdims=True)
+    w = w / jnp.maximum(l, 1e-30)
+    return jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
+
+
+def _chunk_scan_body(q, q_pos, *, causal, window, softcap_val):
+    """Returns a scan body computing online softmax over one kv chunk."""
+    def body(carry, inputs):
+        m_prev, l_prev, acc = carry
+        k_c, v_c, kpos_c = inputs  # [B, Ck, H, D], [B, Ck]
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k_c,
+                            preferred_element_type=jnp.float32)
+        if softcap_val:
+            logits = jnp.tanh(logits / softcap_val) * softcap_val
+        mask = _mask(q_pos, kpos_c, causal=causal, window=window)
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        w = jnp.exp(logits - m_cur[..., None])
+        l_cur = l_prev * alpha + jnp.sum(w, axis=-1)
+        pv = jnp.einsum("bhqk,bkhd->bhqd", w.astype(v_c.dtype), v_c)
+        acc = acc * alpha[..., None].astype(acc.dtype) + pv.astype(acc.dtype)
+        return (m_cur, l_cur, acc), None
+    return body
+
+
+def _chunked(q, k, v, q_pos, k_pos, *, causal, window, softcap_val,
+             chunk_q, chunk_k, causal_skip):
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    cq = min(chunk_q, sq)
+    ck = min(chunk_k, sk)
+    nq, nk = sq // cq, sk // ck
+    assert sq % cq == 0 and sk % ck == 0, (sq, cq, sk, ck)
+
+    k_ch = k.reshape(b, nk, ck, h, d).transpose(1, 0, 2, 3, 4)
+    v_ch = v.reshape(b, nk, ck, h, d).transpose(1, 0, 2, 3, 4)
+    kpos_ch = k_pos.reshape(b, nk, ck).transpose(1, 0, 2)
+
+    def run_q_chunk(q_c, qpos_c, n_kv):
+        m0 = jnp.full((b, h, q_c.shape[1]), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_c.shape[1]), jnp.float32)
+        a0 = jnp.zeros((b, h, q_c.shape[1], d), jnp.float32)
+        body = _chunk_scan_body(q_c, qpos_c, causal=causal, window=window,
+                                softcap_val=softcap_val)
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0),
+            (k_ch[:n_kv], v_ch[:n_kv], kpos_ch[:n_kv]))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 2, 1, 3)  # [B, Cq, H, D]
+
+    if causal_skip and causal and window is None:
+        # unrolled q-chunk loop; chunk i attends to kv chunks [0, i*ck/cq+1)
+        outs = []
+        for i in range(nq):
+            q_c = q[:, i * cq:(i + 1) * cq]
+            qpos_c = q_pos[:, i * cq:(i + 1) * cq]
+            last_k = ((i + 1) * cq - 1) // ck  # last kv chunk with any unmasked key
+            outs.append(run_q_chunk(q_c, qpos_c, last_k + 1))
+        return jnp.concatenate(outs, axis=1).astype(v.dtype)
+
+    q_ch = q.reshape(b, nq, cq, h, d).transpose(1, 0, 2, 3, 4)
+    qpos_chunks = q_pos.reshape(b, nq, cq).transpose(1, 0, 2)
+    out = jax.lax.map(lambda args: run_q_chunk(args[0], args[1], nk),
+                      (q_ch, qpos_chunks))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, d)
+    return out.astype(v.dtype)
+
+
+def attention_core(q, k, v, q_pos, k_pos, *, causal=True, window=None,
+                   softcap_val=None, chunk=2048, causal_skip=False,
+                   force_direct=False, kv_chunk_only=False):
+    """q: [B, Sq, H, D]; k, v: [B, Sk, H, D] (kv already repeated to H).
+
+    q_pos/k_pos: int32 [B, Sq] / [B, Sk]; k slots with pos < 0 are invalid.
+    ``kv_chunk_only``: keep q whole (required under sequence parallelism —
+    lax.map over a seq-sharded q-chunk axis would force an all-gather).
+    """
+    d = q.shape[-1]
+    q = q * jnp.asarray(d ** -0.5, q.dtype)
+    sq, sk = q.shape[1], k.shape[1]
+    if force_direct or sq == 1 or sk <= chunk:
+        return _direct(q, k, v, q_pos, k_pos, causal=causal, window=window,
+                       softcap_val=softcap_val)
+    # choose divisible chunk sizes
+    cq = sq if kv_chunk_only else _largest_divisor_leq(sq, max(chunk // 2, 1))
+    ck = _largest_divisor_leq(sk, chunk)
+    return _chunked(q, k, v, q_pos, k_pos, causal=causal, window=window,
+                    softcap_val=softcap_val, chunk_q=cq, chunk_k=ck,
+                    causal_skip=causal_skip and not kv_chunk_only)
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    for c in range(min(cap, n), 0, -1):
+        if n % c == 0:
+            return c
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# Full attention layer (projections + core + output), with KV cache support.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AttnCall:
+    """Static attention-call options resolved from the layer kind."""
+    causal: bool = True
+    window: int | None = None
+    use_rope: bool = True
+
+
+def attn_apply(cfg: ModelConfig, p, x, positions, call: AttnCall,
+               *, chunk=None, causal_skip=False, seq_parallel=False):
+    """Training / prefill self-attention (no cache). Returns (out, (k, v))."""
+    q = project_q(cfg, p, x, positions, use_rope=call.use_rope)
+    k, v = project_kv(cfg, p, x, positions, use_rope=call.use_rope)
+    if seq_parallel:
+        # SP: residual/q stay seq-sharded over 'model'; only the grouped
+        # K/V (kv_heads << heads) gathers to full sequence length.  The
+        # double constraint pins the all-gather AFTER the projection so XLA
+        # cannot hoist it to the (16x larger, f32) norm output.
+        from repro.models.lm import _constraint
+        q = _constraint(q, ("batch", "act_seq", None, None))
+        k = _constraint(_constraint(k, ("batch", "act_seq", None, None)),
+                        ("batch", None, None, None))
+        v = _constraint(_constraint(v, ("batch", "act_seq", None, None)),
+                        ("batch", None, None, None))
+    kf = repeat_kv(k, cfg.num_heads)
+    vf = repeat_kv(v, cfg.num_heads)
+    if seq_parallel:
+        # ...and pin the repeated views replicated so the gather happens on
+        # the grouped K/V (kv_heads), not the H-expanded copy.
+        from repro.models.lm import _constraint
+        kf = _constraint(kf, ("batch", None, None, None))
+        vf = _constraint(vf, ("batch", None, None, None))
+    out = attention_core(
+        q, kf, vf, positions, positions, causal=call.causal,
+        window=call.window, softcap_val=cfg.attn_softcap,
+        chunk=chunk or cfg.attn_chunk, causal_skip=causal_skip,
+        kv_chunk_only=seq_parallel)
+    y = jnp.einsum("bqhd,hdm->bqm", out, p["wo"].astype(x.dtype))
+    return y, (k, v)
+
+
+def attn_decode(cfg: ModelConfig, p, x, pos, cache_k, cache_v, cache_pos,
+                call: AttnCall):
+    """Single-token decode. x: [B, 1, d]; pos: scalar int32 (uniform batch).
+
+    cache_k/v: [B, W, KV, D]; cache_pos: [W] int32 (absolute pos per slot,
+    -1 = empty).  Returns (out, new_cache_k, new_cache_v, new_cache_pos).
+    """
+    b = x.shape[0]
+    w = cache_k.shape[1]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q = project_q(cfg, p, x, positions, use_rope=call.use_rope)
+    k, v = project_kv(cfg, p, x, positions, use_rope=call.use_rope)
+    slot = pos % w
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), slot, axis=1)
+    cache_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache_pos, jnp.full((1,), pos, jnp.int32), slot, axis=0)
+    kf = repeat_kv(cache_k.astype(x.dtype), cfg.num_heads)
+    vf = repeat_kv(cache_v.astype(x.dtype), cfg.num_heads)
+    k_pos = jnp.broadcast_to(cache_pos[None, :], (b, w))
+    out = attention_core(q, kf, vf, positions, k_pos, causal=call.causal,
+                         window=call.window, softcap_val=cfg.attn_softcap,
+                         force_direct=True)
+    y = jnp.einsum("bqhd,hdm->bqm", out, p["wo"].astype(x.dtype))
+    return y, cache_k, cache_v, cache_pos
+
+
+def cross_attn_apply(cfg: ModelConfig, p, x, enc_k, enc_v, enc_valid_len=None):
+    """Encoder-decoder cross attention (whisper). enc_k/v: [B, Se, KV, D]."""
+    b, sq = x.shape[0], x.shape[1]
+    positions = jnp.zeros((b, sq), jnp.int32)
+    q = project_q(cfg, p, x, positions, use_rope=False)
+    kf = repeat_kv(enc_k.astype(x.dtype), cfg.num_heads)
+    vf = repeat_kv(enc_v.astype(x.dtype), cfg.num_heads)
+    se = enc_k.shape[1]
+    k_pos = jnp.broadcast_to(jnp.arange(se, dtype=jnp.int32)[None], (b, se))
+    out = attention_core(q, kf, vf, positions, k_pos, causal=False,
+                         window=None, softcap_val=cfg.attn_softcap,
+                         force_direct=(sq == 1))
+    return jnp.einsum("bqhd,hdm->bqm", out, p["wo"].astype(x.dtype))

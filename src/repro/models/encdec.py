@@ -1,0 +1,161 @@
+"""Encoder-decoder backbone (whisper-small).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings [B, encoder_seq, d_model].  Encoder = bidirectional
+attention stack; decoder = causal self-attention + cross-attention stack with
+learned positional embeddings.  Cross K/V are computed once at prefill.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig, RunConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models.lm import _constraint, _embed_in, _is_axes, _remat
+
+
+def _enc_layer_init(cfg: ModelConfig, key, dtype):
+    ks = jax.random.split(key, 2)
+    p, a = {}, {}
+    p["norm1"], a["norm1"] = L.rmsnorm_init(cfg.d_model, dtype)
+    p["mixer"], a["mixer"] = attn.attn_init(cfg, ks[0], dtype)
+    p["norm2"], a["norm2"] = L.rmsnorm_init(cfg.d_model, dtype)
+    p["mlp"], a["mlp"] = L.mlp_init(cfg, ks[1], dtype=dtype)
+    return p, a
+
+
+def _dec_layer_init(cfg: ModelConfig, key, dtype):
+    ks = jax.random.split(key, 3)
+    p, a = _enc_layer_init(cfg, key, dtype)
+    p["norm_cross"], a["norm_cross"] = L.rmsnorm_init(cfg.d_model, dtype)
+    p["cross"], a["cross"] = attn.attn_init(cfg, ks[2], dtype, cross=True)
+    return p, a
+
+
+def init_encdec(cfg: ModelConfig, key, param_dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    params, axes = {}, {}
+    params["embed"], axes["embed"] = L.embed_init(cfg, ks[0], param_dtype)
+    # encoder positional table (separate from decoder's learned positions)
+    params["enc_pos"], axes["enc_pos"] = L.dense_init(
+        ks[3], (cfg.encoder_seq, cfg.d_model), ("pos", "embed"),
+        param_dtype, scale=0.02)
+
+    def stack(init_fn, n, key):
+        bkeys = jax.random.split(key, n)
+        stacked = jax.vmap(lambda k: init_fn(cfg, k, param_dtype)[0])(bkeys)
+        _, a = init_fn(cfg, key, param_dtype)
+        return stacked, jax.tree.map(lambda ax: (None,) + ax, a,
+                                     is_leaf=_is_axes)
+
+    params["encoder"], axes["encoder"] = stack(
+        _enc_layer_init, cfg.encoder_layers, ks[1])
+    params["decoder"], axes["decoder"] = stack(
+        _dec_layer_init, cfg.num_layers, ks[2])
+    params["enc_final_norm"], axes["enc_final_norm"] = L.rmsnorm_init(
+        cfg.d_model, param_dtype)
+    params["final_norm"], axes["final_norm"] = L.rmsnorm_init(
+        cfg.d_model, param_dtype)
+    return params, axes
+
+
+def encode(cfg: ModelConfig, rcfg: RunConfig, params, frames):
+    """frames: [B, Se, d] stub embeddings -> encoder states [B, Se, d]."""
+    cd = jnp.dtype(rcfg.compute_dtype)
+    x = frames.astype(cd) + params["enc_pos"].astype(cd)[None]
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    call = attn.AttnCall(causal=False, window=None, use_rope=False)
+
+    def layer(x, p):
+        h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
+        y, _ = attn.attn_apply(cfg, p["mixer"], h, positions, call)
+        x = x + y
+        h = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+        x = x + L.mlp_apply(cfg, p["mlp"], h)
+        return _constraint(x, ("batch", "seq", "act_embed")), None
+
+    x, _ = jax.lax.scan(_remat(layer, rcfg), x, params["encoder"])
+    return L.rmsnorm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _cross_kv(cfg, p, enc):
+    k, v = attn.project_kv(cfg, p["cross"], enc,
+                           jnp.zeros(enc.shape[:2], jnp.int32),
+                           use_rope=False)
+    return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+
+
+def forward(cfg: ModelConfig, rcfg: RunConfig, params, tokens, frames,
+            mode="train"):
+    """Teacher-forced decoder over encoder states.
+
+    Returns (logits, cache|None, metrics). cache = (self_kv, cross_kv)."""
+    enc = encode(cfg, rcfg, params, frames)
+    x, positions = _embed_in(cfg, rcfg, params, tokens)
+    call = attn.AttnCall(causal=True, window=None, use_rope=False)
+
+    def layer(x, p):
+        h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
+        y, (k, v) = attn.attn_apply(cfg, p["mixer"], h, positions, call)
+        x = x + y
+        h = L.rmsnorm(x, p["norm_cross"], cfg.norm_eps)
+        x = x + attn.cross_attn_apply(cfg, p["cross"], h, *_cross_kv(cfg, p, enc))
+        h = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+        x = x + L.mlp_apply(cfg, p["mlp"], h)
+        x = _constraint(x, ("batch", "seq", "act_embed"))
+        if mode == "prefill":
+            ck, cv = _cross_kv(cfg, p, enc)
+            cache = {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16),
+                     "pos": positions[0].astype(jnp.int32),
+                     "cross_k": ck, "cross_v": cv}
+        else:
+            cache = None
+        return x, cache
+
+    x, cache = jax.lax.scan(_remat(layer, rcfg), x, params["decoder"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(cfg, params["embed"], x)
+    logits = _constraint(logits, ("batch", "seq", "vocab"))
+    metrics = {"moe_dropped": jnp.zeros((), jnp.int32),
+               "moe_aux": jnp.zeros((), jnp.float32)}
+    return logits, cache, metrics
+
+
+def init_cache(cfg: ModelConfig, rcfg: RunConfig, batch: int, max_len: int):
+    cd = jnp.bfloat16
+    kvshape = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    crshape = (batch, cfg.encoder_seq, cfg.num_kv_heads, cfg.head_dim)
+    e = {"k": jnp.zeros(kvshape, cd), "v": jnp.zeros(kvshape, cd),
+         "pos": jnp.full((max_len,), -1, jnp.int32),
+         "cross_k": jnp.zeros(crshape, cd), "cross_v": jnp.zeros(crshape, cd)}
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape), e)
+
+
+def decode_step(cfg: ModelConfig, rcfg: RunConfig, params, cache, token, pos):
+    """token: [B, 1]; decode one step against cached self+cross K/V."""
+    x, _ = _embed_in(cfg, rcfg, params, token, pos_offset=pos)
+    call = attn.AttnCall(causal=True, window=None, use_rope=False)
+
+    def layer(x, inp):
+        p, c = inp
+        h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
+        y, ck, cv, cp = attn.attn_decode(cfg, p["mixer"], h, pos, c["k"],
+                                         c["v"], c["pos"], call)
+        x = x + y
+        h = L.rmsnorm(x, p["norm_cross"], cfg.norm_eps)
+        x = x + attn.cross_attn_apply(cfg, p["cross"], h, c["cross_k"],
+                                      c["cross_v"])
+        h = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+        x = x + L.mlp_apply(cfg, p["mlp"], h)
+        new_c = {"k": ck, "v": cv, "pos": cp,
+                 "cross_k": c["cross_k"], "cross_v": c["cross_v"]}
+        return x, new_c
+
+    x, new_cache = jax.lax.scan(layer, x, (params["decoder"], cache))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(cfg, params["embed"], x)
+    return logits, new_cache

@@ -1,0 +1,149 @@
+"""Shared building blocks: init helpers, norms, RoPE, MLPs, embeddings.
+
+All layers are pure functions over explicit param pytrees.  Every init
+returns ``(params, logical_axes)`` — two pytrees with identical structure,
+the second holding tuples of logical axis names consumed by
+:mod:`repro.runtime.sharding`.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Axes = tuple  # tuple of logical axis names (str | None)
+
+
+def dense_init(key, shape: Sequence[int], axes: Axes, dtype=jnp.float32,
+               scale: float | None = None):
+    """He/Glorot-ish init for a weight of the given shape."""
+    fan_in = shape[0] if len(shape) > 1 else 1
+    scale = (1.0 / fan_in) ** 0.5 if scale is None else scale
+    w = jax.random.normal(key, shape, dtype=jnp.float32) * scale
+    return w.astype(dtype), axes
+
+
+def zeros_init(shape, axes: Axes, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype=dtype), axes
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return jnp.ones((d,), dtype), ("norm",)
+
+
+def rmsnorm(x, w, eps: float = 1e-6, *, zero_centered: bool = False):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    w = w.astype(jnp.float32)
+    if zero_centered:          # gemma-style (1 + w)
+        w = 1.0 + w
+    return (y * w).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # [..., S, half]
+    angles = angles[..., None, :]                             # [..., S, 1, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    rx1 = x1 * cos - x2 * sin
+    rx2 = x2 * cos + x1 * sin
+    return jnp.concatenate([rx1, rx2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated SwiGLU or plain GELU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(cfg: ModelConfig, key, d_ff: int | None = None, dtype=jnp.float32):
+    d_ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    params, axes = {}, {}
+    if cfg.mlp_gated:
+        params["wi_gate"], axes["wi_gate"] = dense_init(
+            ks[0], (d, d_ff), ("embed", "mlp"), dtype)
+    params["wi"], axes["wi"] = dense_init(ks[1], (d, d_ff), ("embed", "mlp"), dtype)
+    params["wo"], axes["wo"] = dense_init(ks[2], (d_ff, d), ("mlp", "embed"), dtype)
+    return params, axes
+
+
+def mlp_apply(cfg: ModelConfig, p, x):
+    h = x @ p["wi"].astype(x.dtype)
+    if cfg.mlp_gated:
+        g = x @ p["wi_gate"].astype(x.dtype)
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def embed_init(cfg: ModelConfig, key, dtype=jnp.float32):
+    v, d = cfg.padded_vocab, cfg.d_model
+    params, axes = {}, {}
+    params["embedding"], axes["embedding"] = dense_init(
+        key, (v, d), ("vocab", "embed"), dtype, scale=1.0)
+    if not cfg.tie_embeddings:
+        params["lm_head"], axes["lm_head"] = dense_init(
+            jax.random.fold_in(key, 1), (d, v), ("embed", "vocab"), dtype)
+    if cfg.pos_embedding == "learned":
+        n_pos = cfg.max_position or max(cfg.encoder_seq, 8192)
+        params["pos_embedding"], axes["pos_embedding"] = dense_init(
+            jax.random.fold_in(key, 2), (n_pos, d), ("pos", "embed"),
+            dtype, scale=0.02)
+    return params, axes
+
+
+def embed_tokens(cfg: ModelConfig, p, tokens, compute_dtype):
+    x = p["embedding"].astype(compute_dtype)[tokens]
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, compute_dtype)
+    return x
+
+
+def add_positions(cfg: ModelConfig, p, x, positions):
+    if cfg.pos_embedding == "learned":
+        x = x + p["pos_embedding"].astype(x.dtype)[positions]
+    return x
+
+
+def lm_logits(cfg: ModelConfig, p, x):
+    if cfg.tie_embeddings:
+        logits = x @ p["embedding"].astype(x.dtype).T
+    else:
+        logits = x @ p["lm_head"].astype(x.dtype)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    if cfg.padded_vocab != cfg.vocab_size:   # mask padding vocab entries
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    return logits
+
+
+def softcap(x, cap):
+    return jnp.tanh(x / cap) * cap if cap else x

@@ -1,0 +1,288 @@
+"""Generic decoder LM over a repeating heterogeneous layer pattern.
+
+One code path serves all ten assigned architectures: the stack is
+``num_blocks`` repeats of ``cfg.pattern`` (a tuple of LayerSpecs mixing
+attention / local-attention / Mamba mixers with dense / MoE / absent MLPs).
+Parameters for each pattern position are stacked over blocks and the stack
+runs under ``jax.lax.scan`` (+ optional remat), so HLO size is O(|pattern|)
+— 95-layer configs compile in one scan.
+
+Decoder-only families: dense, moe, hybrid, ssm, vlm (patch-prefix stub).
+The enc-dec family (whisper) lives in :mod:`repro.models.encdec`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig, RunConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import ssm
+from repro.moe import moe_layer
+from repro.runtime import sharding as shd
+
+RULES = shd.ShardingRules(shd.TRAIN_RULES)
+
+
+def _constraint(x, axes):
+    return shd.logical_constraint(RULES, x, axes)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def layer_init(cfg: ModelConfig, spec: LayerSpec, key, dtype):
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["norm1"], a["norm1"] = L.rmsnorm_init(cfg.d_model, dtype)
+    if spec.mixer in ("attn", "attn_local"):
+        p["mixer"], a["mixer"] = attn.attn_init(cfg, ks[0], dtype)
+    elif spec.mixer == "mamba":
+        p["mixer"], a["mixer"] = ssm.ssm_init(cfg, ks[0], dtype)
+    else:
+        raise ValueError(spec.mixer)
+    if cfg.use_post_norm:
+        p["post_norm1"], a["post_norm1"] = L.rmsnorm_init(cfg.d_model, dtype)
+    if spec.mlp != "none":
+        p["norm2"], a["norm2"] = L.rmsnorm_init(cfg.d_model, dtype)
+        if spec.mlp == "dense":
+            p["mlp"], a["mlp"] = L.mlp_init(cfg, ks[1], dtype=dtype)
+        elif spec.mlp == "moe":
+            p["mlp"], a["mlp"] = moe_layer.moe_init(cfg, ks[1], dtype)
+        if cfg.use_post_norm:
+            p["post_norm2"], a["post_norm2"] = L.rmsnorm_init(cfg.d_model, dtype)
+    return p, a
+
+
+def init_lm(cfg: ModelConfig, key, param_dtype=jnp.float32):
+    """Returns (params, logical_axes) with block params stacked over
+    num_blocks (leading axis consumed by lax.scan)."""
+    keys = jax.random.split(key, 2 + len(cfg.full_pattern))
+    params: dict[str, Any] = {}
+    axes: dict[str, Any] = {}
+    params["embed"], axes["embed"] = L.embed_init(cfg, keys[0], param_dtype)
+    blocks_p, blocks_a = [], []
+    for i, spec in enumerate(cfg.full_pattern):
+        def one(k, spec=spec):
+            return layer_init(cfg, spec, k, param_dtype)[0]
+        bkeys = jax.random.split(keys[1 + i], cfg.num_blocks)
+        stacked = jax.vmap(one)(bkeys)
+        _, a = layer_init(cfg, spec, keys[1 + i], param_dtype)
+        blocks_p.append(stacked)
+        blocks_a.append(jax.tree.map(lambda ax: (None,) + ax, a,
+                                     is_leaf=_is_axes))
+    params["blocks"] = blocks_p
+    axes["blocks"] = blocks_a
+    params["final_norm"], axes["final_norm"] = L.rmsnorm_init(
+        cfg.d_model, param_dtype)
+    return params, axes
+
+
+def _is_axes(x):
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None)))
+                                        for e in x)
+
+
+# ---------------------------------------------------------------------------
+# Layer application (shared by train forward / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def _attn_call(cfg: ModelConfig, spec: LayerSpec) -> attn.AttnCall:
+    window = cfg.sliding_window if spec.mixer == "attn_local" else None
+    return attn.AttnCall(causal=True, window=window,
+                         use_rope=cfg.pos_embedding == "rope")
+
+
+def apply_layer(cfg: ModelConfig, rcfg: RunConfig, spec: LayerSpec, p, x,
+                positions, cache=None, pos=None, mode="train"):
+    """Returns (x, new_cache_entry, metrics)."""
+    metrics = {}
+    h = L.rmsnorm(x, p["norm1"], cfg.norm_eps, zero_centered=cfg.use_post_norm)
+    if spec.mixer in ("attn", "attn_local"):
+        call = _attn_call(cfg, spec)
+        if mode == "decode":
+            y, ck, cv, cp = attn.attn_decode(
+                cfg, p["mixer"], h, pos, cache["k"], cache["v"],
+                cache["pos"], call)
+            new_cache = {"k": _constraint(ck, CACHE_KV_AXES),
+                         "v": _constraint(cv, CACHE_KV_AXES), "pos": cp}
+        else:
+            y, (k, v) = attn.attn_apply(
+                cfg, p["mixer"], h, positions, call,
+                causal_skip=getattr(rcfg, "attn_causal_skip", False),
+                seq_parallel=rcfg.seq_parallel)
+            new_cache = _prefill_cache(cfg, spec, k, v, positions, mode)
+    else:  # mamba
+        if mode == "decode":
+            y, (cs, hs) = ssm.ssm_decode(cfg, p["mixer"], h, cache["conv"],
+                                         cache["ssm"])
+            new_cache = {"conv": cs, "ssm": hs}
+        else:
+            y, (cs, hs) = ssm.ssm_apply(cfg, p["mixer"], h,
+                                        use_pallas=rcfg.use_pallas)
+            new_cache = ({"conv": cs.astype(jnp.bfloat16),
+                          "ssm": hs} if mode == "prefill" else None)
+    if cfg.use_post_norm:
+        y = L.rmsnorm(y, p["post_norm1"], cfg.norm_eps, zero_centered=True)
+    x = x + y
+    if spec.mlp != "none":
+        h = L.rmsnorm(x, p["norm2"], cfg.norm_eps,
+                      zero_centered=cfg.use_post_norm)
+        if spec.mlp == "dense":
+            y = L.mlp_apply(cfg, p["mlp"], h)
+        else:
+            b, s, d = h.shape
+            y2d, metrics = moe_layer.moe_apply(cfg, p["mlp"],
+                                               h.reshape(b * s, d),
+                                               impl=rcfg.moe_impl)
+            y = y2d.reshape(b, s, d)
+        if cfg.use_post_norm:
+            y = L.rmsnorm(y, p["post_norm2"], cfg.norm_eps, zero_centered=True)
+        x = x + y
+    seq_ax = "act_seq" if (rcfg.seq_parallel and mode != "decode") else "seq"
+    x = _constraint(x, ("batch", seq_ax, "act_embed"))
+    return x, new_cache, metrics
+
+
+CACHE_KV_AXES = ("batch", "cache_seq", "kv_heads", "head_dim")
+
+
+def _prefill_cache(cfg, spec, k, v, positions, mode):
+    if mode != "prefill":
+        return None
+    # local layers keep only the trailing window (ring layout: slot = pos % W)
+    s = k.shape[1]
+    if spec.mixer == "attn_local" and cfg.sliding_window and \
+            cfg.sliding_window < s:
+        w = cfg.sliding_window
+        k, v = k[:, -w:], v[:, -w:]
+        pos_slice = positions[0, -w:]
+        # re-order so slot i holds position with pos % w == i
+        slots = pos_slice % w
+        order = jnp.argsort(slots)
+        k, v, pos_slice = k[:, order], v[:, order], pos_slice[order]
+    else:
+        pos_slice = positions[0]
+    return {"k": _constraint(k.astype(jnp.bfloat16), CACHE_KV_AXES),
+            "v": _constraint(v.astype(jnp.bfloat16), CACHE_KV_AXES),
+            "pos": pos_slice.astype(jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Full forward (train / prefill) and decode
+# ---------------------------------------------------------------------------
+
+
+def _embed_in(cfg: ModelConfig, rcfg: RunConfig, params, tokens,
+              extra_embeds=None, pos_offset=0):
+    cd = jnp.dtype(rcfg.compute_dtype)
+    x = L.embed_tokens(cfg, params["embed"], tokens, cd)
+    if extra_embeds is not None:   # vlm/audio prefix stub
+        x = jnp.concatenate([extra_embeds.astype(cd), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(
+        jnp.arange(s, dtype=jnp.int32)[None] + pos_offset, (b, s))
+    x = L.add_positions(cfg, params["embed"], x, positions)
+    x = _constraint(x, ("batch", "seq", "act_embed"))
+    return x, positions
+
+
+def _remat(f, rcfg: RunConfig):
+    if rcfg.remat == "none":
+        return f
+    policy = (jax.checkpoint_policies.nothing_saveable if rcfg.remat == "full"
+              else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(f, policy=policy)
+
+
+def forward(cfg: ModelConfig, rcfg: RunConfig, params, tokens,
+            extra_embeds=None, mode="train"):
+    """tokens: [B, S] -> (logits [B, S', V], cache|None, metrics).
+
+    mode="train": returns logits over the full sequence, no cache.
+    mode="prefill": also returns the stacked KV/SSM cache.
+    """
+    x, positions = _embed_in(cfg, rcfg, params, tokens, extra_embeds)
+
+    def block_fn(x, block_params):
+        caches, mets = [], []
+        for i, spec in enumerate(cfg.full_pattern):
+            x, c, m = apply_layer(cfg, rcfg, spec, block_params[i], x,
+                                  positions, mode=mode)
+            caches.append(c)
+            mets.append(m)
+        met = _merge_metrics(mets)
+        return x, (caches if mode == "prefill" else None, met)
+
+    x, (cache, mets) = jax.lax.scan(
+        _remat(block_fn, rcfg), x, params["blocks"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps,
+                  zero_centered=cfg.use_post_norm)
+    logits = L.lm_logits(cfg, params["embed"], x)
+    logits = _constraint(logits, ("batch", "seq", "vocab"))
+    metrics = jax.tree.map(jnp.sum, mets)
+    return logits, cache, metrics
+
+
+def _merge_metrics(mets: list[dict]) -> dict:
+    out: dict[str, jax.Array] = {}
+    for m in mets:
+        for k_, v_ in m.items():
+            out[k_] = out.get(k_, 0) + v_
+    if not out:
+        out = {"moe_dropped": jnp.zeros((), jnp.int32),
+               "moe_aux": jnp.zeros((), jnp.float32)}
+    return out
+
+
+def init_cache(cfg: ModelConfig, rcfg: RunConfig, batch: int, max_len: int):
+    """Zero cache for decode-from-scratch (shapes match prefill output)."""
+    entries = []
+    cd = jnp.bfloat16
+    for spec in cfg.full_pattern:
+        if spec.mixer in ("attn", "attn_local"):
+            w = max_len
+            if spec.mixer == "attn_local" and cfg.sliding_window:
+                w = min(max_len, cfg.sliding_window)
+            e = {"k": jnp.zeros((batch, w, cfg.num_kv_heads, cfg.head_dim), cd),
+                 "v": jnp.zeros((batch, w, cfg.num_kv_heads, cfg.head_dim), cd),
+                 "pos": jnp.full((w,), -1, jnp.int32)}
+        else:
+            e = {"conv": jnp.zeros(
+                    (batch, cfg.ssm_conv_kernel - 1,
+                     cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state), cd),
+                 "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                                   cfg.ssm_state), jnp.float32)}
+        entries.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.num_blocks,) + x.shape), e))
+    return entries
+
+
+def decode_step(cfg: ModelConfig, rcfg: RunConfig, params, cache, token, pos):
+    """token: [B, 1]; pos: scalar int32. Returns (logits [B, 1, V], cache)."""
+    x, _ = _embed_in(cfg, rcfg, params, token, pos_offset=pos)
+    positions = None
+
+    def block_fn(x, inp):
+        block_params, block_cache = inp
+        new_caches = []
+        for i, spec in enumerate(cfg.full_pattern):
+            x, c, _ = apply_layer(cfg, rcfg, spec, block_params[i], x,
+                                  positions, cache=block_cache[i], pos=pos,
+                                  mode="decode")
+            new_caches.append(c)
+        return x, new_caches
+
+    x, new_cache = jax.lax.scan(block_fn, x, (params["blocks"], cache))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps,
+                  zero_centered=cfg.use_post_norm)
+    logits = L.lm_logits(cfg, params["embed"], x)
+    return logits, new_cache

@@ -1,0 +1,118 @@
+"""Unified model API: init / loss / prefill / decode across all families,
+plus ``input_specs`` — ShapeDtypeStruct stand-ins for every model input
+(the dry-run contract; no device allocation).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import encdec, lm
+
+
+def is_encdec(cfg: ModelConfig) -> bool:
+    return cfg.encoder_layers > 0
+
+
+def init(cfg: ModelConfig, key, param_dtype=jnp.float32):
+    if is_encdec(cfg):
+        return encdec.init_encdec(cfg, key, param_dtype)
+    return lm.init_lm(cfg, key, param_dtype)
+
+
+def _forward(cfg, rcfg, params, batch, mode):
+    if is_encdec(cfg):
+        return encdec.forward(cfg, rcfg, params, batch["tokens"],
+                              batch["frames"], mode=mode)
+    extra = batch.get("patch_embeds")
+    return lm.forward(cfg, rcfg, params, batch["tokens"],
+                      extra_embeds=extra, mode=mode)
+
+
+def loss_fn(cfg: ModelConfig, rcfg: RunConfig, params, batch):
+    """Next-token cross entropy (labels < 0 are ignored) + MoE aux."""
+    logits, _, metrics = _forward(cfg, rcfg, params, batch, mode="train")
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:  # vlm prefix: pad labels with -1
+        pad = logits.shape[1] - labels.shape[1]
+        labels = jnp.pad(labels, ((0, 0), (pad, 0)), constant_values=-1)
+    valid = labels >= 0
+    labels_c = jnp.clip(labels, 0, cfg.padded_vocab - 1)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels_c[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    ce = -jnp.sum(jnp.where(valid, ll, 0.0)) / denom
+    total = ce + cfg.router_aux_weight * metrics.get(
+        "moe_aux", jnp.zeros((), jnp.float32)) / max(cfg.num_layers, 1)
+    metrics = dict(metrics)
+    metrics["ce"] = ce
+    return total, metrics
+
+
+def prefill(cfg: ModelConfig, rcfg: RunConfig, params, batch):
+    logits, cache, _ = _forward(cfg, rcfg, params, batch, mode="prefill")
+    return logits[:, -1:], cache
+
+
+def init_cache(cfg: ModelConfig, rcfg: RunConfig, batch: int, max_len: int):
+    if is_encdec(cfg):
+        return encdec.init_cache(cfg, rcfg, batch, max_len)
+    return lm.init_cache(cfg, rcfg, batch, max_len)
+
+
+def decode_step(cfg: ModelConfig, rcfg: RunConfig, params, cache, token, pos):
+    if is_encdec(cfg):
+        return encdec.decode_step(cfg, rcfg, params, cache, token, pos)
+    return lm.decode_step(cfg, rcfg, params, cache, token, pos)
+
+
+# ---------------------------------------------------------------------------
+# input_specs — the dry-run contract
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                compute_dtype=jnp.bfloat16) -> dict[str, Any]:
+    """ShapeDtypeStructs for every model input of this (arch, shape) cell.
+
+    train/prefill: {"tokens", "labels"?, frontend stubs}
+    decode:        {"token", "pos"} (cache comes from cache_specs()).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def sds(shp, dt):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    if shape.kind == "decode":
+        return {"token": sds((b, 1), i32), "pos": sds((), i32)}
+
+    batch: dict[str, Any] = {}
+    if is_encdec(cfg):
+        batch["frames"] = sds((b, cfg.encoder_seq, cfg.d_model), compute_dtype)
+        batch["tokens"] = sds((b, s), i32)
+    elif cfg.frontend == "patch":
+        f = cfg.frontend_seq
+        batch["patch_embeds"] = sds((b, f, cfg.d_model), compute_dtype)
+        batch["tokens"] = sds((b, s - f), i32)
+    else:
+        batch["tokens"] = sds((b, s), i32)
+    if shape.kind == "train":
+        batch["labels"] = sds((b, s), i32)
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, rcfg: RunConfig, shape: ShapeConfig):
+    """Abstract KV/SSM cache shapes for the decode dry-run."""
+    return jax.eval_shape(
+        lambda: init_cache(cfg, rcfg, shape.global_batch, shape.seq_len))
+
+
+def param_specs(cfg: ModelConfig, param_dtype=jnp.float32):
+    """Abstract params (ShapeDtypeStructs) without touching devices.
+    Sharding comes from path-based resolution (runtime.sharding)."""
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: init(cfg, k, param_dtype)[0], key)

@@ -1,0 +1,213 @@
+"""Mamba2 (SSD — state-space duality) mixer, chunked-scan formulation.
+
+Math (per head h, state size N, head dim P):
+    H_t = exp(A_h * dt_t) * H_{t-1} + dt_t * (B_t ⊗ x_t)        H: [P, N]
+    y_t = H_t @ C_t + D_h * x_t
+The chunked algorithm splits S into chunks of length L: an intra-chunk
+quadratic (attention-like) term computed on the MXU plus an inter-chunk
+recurrence over chunk states via ``lax.scan`` — the standard SSD trade that
+maps the recurrence onto matmul hardware (this IS the TPU-native layout; no
+CUDA-specific mechanism is ported, see DESIGN.md §7).
+
+``ssm_ref`` is the sequential oracle used by property tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rmsnorm
+
+
+def ssm_init(cfg: ModelConfig, key, dtype=jnp.float32):
+    d, din = cfg.d_model, cfg.d_inner
+    g, st, nh, kk = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv_kernel
+    ks = jax.random.split(key, 12)
+    p, a = {}, {}
+    p["wz"], a["wz"] = dense_init(ks[0], (d, din), ("embed", "ssm_inner"), dtype)
+    p["wx"], a["wx"] = dense_init(ks[1], (d, din), ("embed", "ssm_inner"), dtype)
+    p["wB"], a["wB"] = dense_init(ks[2], (d, g * st), ("embed", "ssm_state"), dtype)
+    p["wC"], a["wC"] = dense_init(ks[3], (d, g * st), ("embed", "ssm_state"), dtype)
+    p["wdt"], a["wdt"] = dense_init(ks[4], (d, nh), ("embed", "ssm_heads"), dtype)
+    p["conv_x"], a["conv_x"] = dense_init(
+        ks[5], (kk, din), ("conv_kernel", "ssm_inner"), dtype, scale=(1 / kk) ** 0.5)
+    p["conv_B"], a["conv_B"] = dense_init(
+        ks[6], (kk, g * st), ("conv_kernel", "ssm_state"), dtype, scale=(1 / kk) ** 0.5)
+    p["conv_C"], a["conv_C"] = dense_init(
+        ks[7], (kk, g * st), ("conv_kernel", "ssm_state"), dtype, scale=(1 / kk) ** 0.5)
+    # A in [-16, -1): A_log ~ log(U[1, 16))
+    u = jax.random.uniform(ks[8], (nh,), minval=1.0, maxval=16.0)
+    p["A_log"], a["A_log"] = jnp.log(u).astype(dtype), ("ssm_heads",)
+    p["D"], a["D"] = jnp.ones((nh,), dtype), ("ssm_heads",)
+    # dt init: softplus(dt_bias) ~ logspace[1e-3, 1e-1]
+    dt = jnp.exp(jax.random.uniform(ks[9], (nh,),
+                                    minval=jnp.log(1e-3), maxval=jnp.log(1e-1)))
+    p["dt_bias"], a["dt_bias"] = (
+        (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype), ("ssm_heads",))
+    p["norm"], a["norm"] = jnp.ones((din,), dtype), ("ssm_inner",)
+    p["wo"], a["wo"] = dense_init(ks[10], (din, d), ("ssm_inner", "embed"), dtype)
+    return p, a
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x: [B, S, C]; w: [K, C].
+
+    state: [B, K-1, C] previous inputs (decode/prefill chaining) or None.
+    Returns (y [B, S, C], new_state [B, K-1, C]).
+    """
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else state
+    return y, new_state
+
+
+def _segsum_mask(a):
+    """a: [..., L] log-decays -> M[..., t, s] = exp(sum_{s<u<=t} a_u), s<=t."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]       # [..., t, s]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(tri, jnp.exp(diff), 0.0)
+
+
+def _project(cfg, p, x):
+    cd = x.dtype
+    z = x @ p["wz"].astype(cd)
+    xin = x @ p["wx"].astype(cd)
+    B = x @ p["wB"].astype(cd)
+    C = x @ p["wC"].astype(cd)
+    dt = jax.nn.softplus((x @ p["wdt"].astype(cd)).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    return z, xin, B, C, dt
+
+
+def _finish(cfg, p, y, x_heads, z):
+    b, s = y.shape[0], y.shape[1]
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * x_heads.astype(jnp.float32)
+    y = y.reshape(b, s, cfg.d_inner).astype(z.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    return y @ p["wo"].astype(z.dtype)
+
+
+def ssm_apply(cfg: ModelConfig, p, x, *, chunk: int = 128, initial_state=None,
+              use_pallas: bool = False):
+    """x: [B, S, d]. Returns (out [B, S, d], (conv_state, ssm_state))."""
+    b, s, _ = x.shape
+    nh, hd, st, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    z, xin, B, C, dt = _project(cfg, p, x)
+
+    conv_in = jnp.concatenate([xin, B, C], axis=-1)
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], axis=-1)
+    conv_state_in = initial_state[0] if initial_state is not None else None
+    conv_out, conv_state = _causal_conv(conv_in, conv_w, conv_state_in)
+    conv_out = jax.nn.silu(conv_out)
+    xin = conv_out[..., :cfg.d_inner]
+    B = conv_out[..., cfg.d_inner:cfg.d_inner + g * st]
+    C = conv_out[..., cfg.d_inner + g * st:]
+
+    L = min(chunk, s)
+    while s % L:
+        L -= 1
+    nc = s // L
+    xh = xin.reshape(b, nc, L, nh, hd).astype(jnp.float32)
+    Bh = B.reshape(b, nc, L, g, st).astype(jnp.float32)
+    Ch = C.reshape(b, nc, L, g, st).astype(jnp.float32)
+    # broadcast groups over heads
+    hpg = nh // g
+    Bh = jnp.repeat(Bh, hpg, axis=3)                     # [b, nc, L, nh, st]
+    Ch = jnp.repeat(Ch, hpg, axis=3)
+    dtc = dt.reshape(b, nc, L, nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))         # [nh]
+    a = dtc * A[None, None, None, :]                     # log decay [b,nc,L,nh]
+    a_t = jnp.swapaxes(a, -1, -2)                        # [b, nc, nh, L]
+    xdt = xh * dtc[..., None]                            # dt-weighted input
+
+    # --- intra-chunk (quadratic, MXU-friendly) ---
+    if use_pallas:
+        # fused Pallas kernel: one (batch·chunk·head) cell per grid step
+        from repro.kernels import ops as kops
+        g_ = b * nc * nh
+        Cg = Ch.transpose(0, 1, 3, 2, 4).reshape(g_, L, st)
+        Bg = Bh.transpose(0, 1, 3, 2, 4).reshape(g_, L, st)
+        xg = xdt.transpose(0, 1, 3, 2, 4).reshape(g_, L, hd)
+        ag = a_t.reshape(g_, L)
+        yg = kops.ssd_chunk(Cg, Bg, xg, ag)
+        y_intra = yg.reshape(b, nc, nh, L, hd).transpose(0, 1, 3, 2, 4)
+    else:
+        G = jnp.einsum("bclhn,bcshn->bchls", Ch, Bh)     # [b,nc,nh,L,L]
+        M = _segsum_mask(a_t)                            # [b,nc,nh,L,L]
+        y_intra = jnp.einsum("bchls,bcshp->bclhp", G * M, xdt)
+
+    # --- chunk states ---
+    cs = jnp.cumsum(a_t, axis=-1)
+    decay_to_end = jnp.exp(cs[..., -1:] - cs)            # [b,nc,nh,L]
+    S_c = jnp.einsum("bchl,bclhn,bclhp->bchpn", decay_to_end, Bh, xdt)
+
+    # --- inter-chunk recurrence ---
+    chunk_decay = jnp.exp(cs[..., -1])                   # [b,nc,nh]
+    h0 = (initial_state[1].astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((b, nh, hd, st), jnp.float32))
+
+    def body(h, inp):
+        dec, s_c = inp                                   # [b,nh], [b,nh,hd,st]
+        h_new = h * dec[..., None, None] + s_c
+        return h_new, h                                  # emit state *before* chunk
+
+    (h_final, h_prevs) = jax.lax.scan(
+        body, h0, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(S_c, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                # [b,nc,nh,hd,st]
+
+    decay_from_start = jnp.exp(cs)                       # [b,nc,nh,L]
+    y_inter = jnp.einsum("bclhn,bchpn,bchl->bclhp", Ch, h_prevs,
+                         decay_from_start)
+    y = (y_intra + y_inter).reshape(b, s, nh, hd)
+    out = _finish(cfg, p, y, xin.reshape(b, s, nh, hd), z)
+    return out, (conv_state, h_final.astype(jnp.float32))
+
+
+def ssm_decode(cfg: ModelConfig, p, x, conv_state, ssm_state):
+    """One-token decode. x: [B, 1, d]. States as returned by ssm_apply."""
+    b = x.shape[0]
+    nh, hd, st, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    z, xin, B, C, dt = _project(cfg, p, x)
+    conv_in = jnp.concatenate([xin, B, C], axis=-1)
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, conv_w,
+                                        conv_state.astype(conv_in.dtype))
+    conv_out = jax.nn.silu(conv_out)
+    xin = conv_out[..., :cfg.d_inner]
+    B = conv_out[..., cfg.d_inner:cfg.d_inner + g * st]
+    C = conv_out[..., cfg.d_inner + g * st:]
+
+    xh = xin.reshape(b, nh, hd).astype(jnp.float32)
+    Bh = jnp.repeat(B.reshape(b, g, st), nh // g, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C.reshape(b, g, st), nh // g, axis=1).astype(jnp.float32)
+    dt1 = dt[:, 0]                                       # [b, nh]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dec = jnp.exp(dt1 * A[None, :])                      # [b, nh]
+    h = ssm_state.astype(jnp.float32)
+    h = h * dec[..., None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt1, xh, Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", h, Ch)[:, None]      # [b, 1, nh, hd]
+    out = _finish(cfg, p, y, xh[:, None], z)
+    return out, (conv_state, h.astype(jnp.float32))
+
+
+def ssm_ref(cfg: ModelConfig, p, x):
+    """Sequential oracle: step ssm_decode over every position."""
+    b, s, _ = x.shape
+    nh, hd, st = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_state = jnp.zeros((b, cfg.ssm_conv_kernel - 1,
+                            cfg.d_inner + 2 * cfg.ssm_groups * st), x.dtype)
+    h = jnp.zeros((b, nh, hd, st), jnp.float32)
+    outs = []
+    for t in range(s):
+        o, (conv_state, h) = ssm_decode(cfg, p, x[:, t:t + 1], conv_state, h)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,142 @@
+"""Mixture-of-Experts on Atomic Active Messages (DESIGN.md §3).
+
+A token routed to an expert is an FF&AS atomic active message: target =
+expert (owner shard under expert parallelism), payload = activation, handler
+= expert MLP, combine = weighted-accumulate commit.  Two dispatch paths:
+
+* ``aam``   — sort/bucket tokens per expert with the coalescing planner
+  (:func:`repro.core.coalescing.plan_buckets_sorted`) into a fixed
+  ``[E, C, d]`` buffer; the buffer is the coalesced message payload, C is
+  the coalescing factor.  The combine gathers each token's top-k results —
+  the FR return path.  This is the framework default.
+* ``dense`` — GShard-style one-hot einsum dispatch; the fine-grained
+  baseline (kept small-scale: used by tests as the oracle and by the
+  dispatch benchmark as the comparison point).
+
+Both paths drop over-capacity tokens with identical (arrival-order)
+priority, so they agree exactly — property-tested.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.coalescing import plan_buckets_sorted, scatter_to_buckets
+from repro.models.layers import dense_init
+from repro.runtime import sharding as shd
+
+
+def moe_init(cfg: ModelConfig, key, dtype=jnp.float32):
+    d, e, ff = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["router"], a["router"] = dense_init(ks[0], (d, e), ("embed", "experts"), dtype)
+    if cfg.mlp_gated:
+        p["wi_gate"], a["wi_gate"] = dense_init(
+            ks[1], (e, d, ff), ("experts", "embed", "mlp"), dtype)
+    p["wi"], a["wi"] = dense_init(ks[2], (e, d, ff), ("experts", "embed", "mlp"), dtype)
+    p["wo"], a["wo"] = dense_init(ks[3], (e, ff, d), ("experts", "mlp", "embed"), dtype)
+    return p, a
+
+
+def _route(cfg: ModelConfig, p, x):
+    """x: [T, d] -> (weights [T, k], experts [T, k], router probs [T, E])."""
+    logits = (x @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, e = jax.lax.top_k(probs, cfg.experts_per_token)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)          # renormalize top-k
+    return w, e.astype(jnp.int32), probs
+
+
+def _expert_ffn(cfg: ModelConfig, p, xb):
+    """xb: [E, C, d] -> [E, C, d] through each expert's MLP."""
+    h = jnp.einsum("ecd,edf->ecf", xb, p["wi"].astype(xb.dtype))
+    if cfg.mlp_gated:
+        g = jnp.einsum("ecd,edf->ecf", xb, p["wi_gate"].astype(xb.dtype))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(xb.dtype))
+
+
+def _capacity(cfg: ModelConfig, t: int) -> int:
+    c = int(t * cfg.experts_per_token * cfg.capacity_factor / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)   # round up to 8 lanes
+
+
+def aux_loss(cfg: ModelConfig, probs, experts):
+    """Switch-style load-balancing loss."""
+    e = cfg.num_experts
+    me = jnp.mean(probs, axis=0)                               # [E]
+    assign = jax.nn.one_hot(experts[:, 0], e, dtype=jnp.float32)
+    fe = jnp.mean(assign, axis=0)
+    return e * jnp.sum(me * fe)
+
+
+def moe_apply_aam(cfg: ModelConfig, p, x):
+    """AAM dispatch. x: [T, d] -> (y [T, d], aux metrics dict)."""
+    t, d = x.shape
+    k, e = cfg.experts_per_token, cfg.num_experts
+    cap = _capacity(cfg, t)
+    w, experts, probs = _route(cfg, p, x)
+
+    # flatten T×k assignments into one message batch
+    owner = experts.reshape(-1)                                # [T*k]
+    token = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)      # [T*k]
+    valid = jnp.ones((t * k,), bool)
+    plan, _ = plan_buckets_sorted(owner, valid, e, cap)
+
+    # coalesced payload: [E, C, d] activation buffer
+    xb = scatter_to_buckets(plan, x[token], e, cap, fill=0)
+    xb = shd.logical_constraint(shd.ShardingRules(shd.TRAIN_RULES), xb,
+                                ("experts", "expert_capacity", None))
+    yb = _expert_ffn(cfg, p, xb)
+
+    # FR return path: each token gathers its k expert outputs
+    pos = plan.position.reshape(t, k)
+    kept = plan.kept.reshape(t, k)
+    flat = experts * cap + jnp.clip(pos, 0, cap - 1)           # [T, k]
+    y = yb.reshape(e * cap, d)[flat]                           # [T, k, d]
+    wk = jnp.where(kept, w, 0.0).astype(x.dtype)
+    out = jnp.einsum("tkd,tk->td", y, wk)
+    metrics = {
+        "moe_dropped": plan.dropped,
+        "moe_aux": aux_loss(cfg, probs, experts),
+    }
+    return out, metrics
+
+
+def moe_apply_dense(cfg: ModelConfig, p, x):
+    """GShard one-hot dispatch baseline (oracle for tests/benchmarks)."""
+    t, d = x.shape
+    k, e = cfg.experts_per_token, cfg.num_experts
+    cap = _capacity(cfg, t)
+    w, experts, probs = _route(cfg, p, x)
+
+    onehot = jax.nn.one_hot(experts, e, dtype=jnp.int32)       # [T, k, E]
+    kth = jnp.sum(onehot, axis=1)                              # [T, E] (0/1)
+    pos = jnp.cumsum(kth, axis=0) - kth                        # [T, E] rank
+    pos_k = jnp.sum(onehot * pos[:, None, :], axis=-1)         # [T, k]
+    keep_k = pos_k < cap                                       # [T, k]
+    poh = jax.nn.one_hot(jnp.where(keep_k, pos_k, cap), cap,
+                         dtype=x.dtype)                        # [T, k, C]
+    dmat = jnp.einsum("tke,tkc->tec", onehot.astype(x.dtype), poh)
+    xb = jnp.einsum("td,tec->ecd", x, dmat)
+    yb = _expert_ffn(cfg, p, xb)
+    wmat = jnp.einsum("tk,tke,tkc->tec", w.astype(x.dtype),
+                      onehot.astype(x.dtype), poh)
+    out = jnp.einsum("ecd,tec->td", yb, wmat)
+    dropped = (t * k - jnp.sum(keep_k)).astype(jnp.int32)
+    metrics = {"moe_dropped": dropped,
+               "moe_aux": aux_loss(cfg, probs, experts)}
+    return out, metrics
+
+
+def moe_apply(cfg: ModelConfig, p, x2d, impl: str = "aam"):
+    if impl == "dense":
+        return moe_apply_dense(cfg, p, x2d)
+    if impl == "aam_shmap":
+        from repro.moe.shmap_moe import moe_apply_shmap
+        return moe_apply_shmap(cfg, p, x2d)
+    return moe_apply_aam(cfg, p, x2d)

@@ -1,0 +1,117 @@
+"""Fault tolerance: supervised train loop with checkpoint/restart, straggler
+watchdog, and failure injection (for tests).
+
+On a real fleet the supervisor wraps per-step execution; a host failure
+surfaces as an exception (collective timeout / halted device) → restore
+from the last committed checkpoint and replay.  The data pipeline is
+step-indexed (repro.data.pipeline), so replay is exact.  The watchdog
+implements the paper-adjacent straggler story at the system level: step
+times exceeding ``threshold ×`` a running median are flagged; the fleet
+hook (``on_straggler``) would evict/reshuffle the slow host — here it
+feeds metrics and tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+@dataclasses.dataclass
+class WatchdogStats:
+    steps: int = 0
+    flagged: int = 0
+    median_s: float = 0.0
+
+
+class StragglerWatchdog:
+    """Flags steps slower than ``threshold`` x the running median."""
+
+    def __init__(self, threshold: float = 3.0, window: int = 32,
+                 on_straggler: Callable[[int, float], None] | None = None):
+        self.threshold = threshold
+        self.window = window
+        self.times: list[float] = []
+        self.stats = WatchdogStats()
+        self.on_straggler = on_straggler
+
+    def observe(self, step: int, dt: float) -> bool:
+        self.stats.steps += 1
+        hist = self.times[-self.window:]
+        flagged = False
+        if len(hist) >= 8:
+            med = sorted(hist)[len(hist) // 2]
+            self.stats.median_s = med
+            if dt > self.threshold * med:
+                flagged = True
+                self.stats.flagged += 1
+                if self.on_straggler:
+                    self.on_straggler(step, dt)
+        self.times.append(dt)
+        return flagged
+
+
+class TrainSupervisor:
+    """Run a step function with periodic async checkpoints and
+    restore-on-failure.  ``fail_injector(step)`` raising simulates a node
+    loss (tests); any exception triggers restore + replay."""
+
+    def __init__(self, ckpt: Checkpointer, *, save_every: int = 50,
+                 max_restarts: int = 10,
+                 watchdog: StragglerWatchdog | None = None):
+        self.ckpt = ckpt
+        self.save_every = save_every
+        self.max_restarts = max_restarts
+        self.watchdog = watchdog or StragglerWatchdog()
+        self.restarts = 0
+
+    def run(self, state: Any, step_fn, data_fn, *, start_step: int,
+            num_steps: int, fail_injector=None, log_every: int = 10,
+            log=print) -> tuple[Any, int, list]:
+        """state: pytree; step_fn(state, step, batch) -> (state, metrics).
+        Returns (state, final_step, metric_log)."""
+        metrics_log = []
+        step = start_step
+        while step < num_steps:
+            try:
+                t0 = time.time()
+                if fail_injector is not None:
+                    fail_injector(step)
+                batch = data_fn(step)
+                state, metrics = step_fn(state, step, batch)
+                dt = time.time() - t0
+                slow = self.watchdog.observe(step, dt)
+                if slow:
+                    log(f"[watchdog] step {step} took {dt:.3f}s "
+                        f"(median {self.watchdog.stats.median_s:.3f}s)")
+                step += 1
+                if step % log_every == 0 or step == num_steps:
+                    metrics_log.append((step, jax_device_get(metrics)))
+                    log(f"[train] step {step}: {metrics_log[-1][1]}")
+                if step % self.save_every == 0:
+                    self.ckpt.save(step, state, blocking=False)
+            except KeyboardInterrupt:
+                raise
+            except Exception as e:  # noqa: BLE001 — any fault → restart
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise RuntimeError(
+                        f"exceeded {self.max_restarts} restarts") from e
+                last = self.ckpt.latest_step()
+                log(f"[supervisor] step {step} failed ({type(e).__name__}: "
+                    f"{e}); restoring from {last}")
+                if last is None:
+                    raise
+                self.ckpt.wait()
+                state, step = self.ckpt.restore(state)
+        self.ckpt.wait()
+        self.ckpt.save(num_steps, state, blocking=True)
+        return state, step, metrics_log
+
+
+def jax_device_get(tree):
+    import jax
+    return jax.tree.map(lambda x: float(x) if hasattr(x, "shape") and
+                        x.shape == () else x, jax.device_get(tree))

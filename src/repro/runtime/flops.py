@@ -1,0 +1,180 @@
+"""Exact FLOP / byte accounting by walking jaxprs.
+
+``compiled.cost_analysis()`` on the CPU backend counts ``while``/``scan``
+bodies ONCE regardless of trip count (verified in EXPERIMENTS.md §Dry-run),
+so roofline compute terms would be wildly understated for scanned layer
+stacks.  This walker recurses through scan/while/pjit/remat/cond with the
+correct multipliers and produces:
+
+* ``flops``      — total floating-point ops (dots = 2·M·N·K, elementwise = n)
+* ``hbm_bytes``  — *unfused upper bound*: every op's operands + results
+  (XLA fusion only lowers this; the roofline table reports it alongside the
+  model-state lower bound computed analytically)
+* ``dot_flops``  — matmul-only FLOPs (MXU share)
+* per-primitive breakdowns for §Perf iteration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.extend import core as jcore
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    dot_flops: float = 0.0
+    bytes: float = 0.0
+    by_prim: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.dot_flops += other.dot_flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.by_prim.items():
+            self.by_prim[k] += v * mult
+
+
+def _aval_bytes(aval) -> int:
+    if not hasattr(aval, "shape"):
+        return 0
+    n = 1
+    for d in aval.shape:
+        n *= int(d)
+    return n * jnp.dtype(aval.dtype).itemsize
+
+
+def _size(aval) -> int:
+    n = 1
+    for d in getattr(aval, "shape", ()):
+        n *= int(d)
+    return n
+
+
+# elementwise-ish primitives costed at 1 flop per output element
+_CHEAP = {
+    "add", "sub", "mul", "div", "max", "min", "neg", "abs", "sign",
+    "exp", "log", "tanh", "logistic", "rsqrt", "sqrt", "pow", "integer_pow",
+    "erf", "floor", "ceil", "round", "select_n", "clamp", "and", "or",
+    "not", "xor", "eq", "ne", "lt", "le", "gt", "ge", "expm1", "log1p",
+    "cos", "sin", "stop_gradient", "convert_element_type", "nextafter",
+    "rem", "shift_left", "shift_right_logical", "shift_right_arithmetic",
+    "squeeze", "cumsum", "cummax", "cummin", "cumprod", "is_finite",
+}
+_FREE = {
+    "reshape", "broadcast_in_dim", "transpose", "slice", "concatenate",
+    "pad", "rev", "iota", "dynamic_slice", "dynamic_update_slice",
+    "copy", "device_put", "sharding_constraint", "split",
+    "squeeze", "expand_dims", "bitcast_convert_type", "real", "imag",
+    "create_token", "optimization_barrier", "pvary",
+}
+_SUBJAXPR_MULT_KEYS = ("length",)
+
+
+def _dot_flops(eqn) -> float:
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    dims = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dims
+    batch = 1
+    for d in lb:
+        batch *= lhs.shape[d]
+    contract = 1
+    for d in lc:
+        contract *= lhs.shape[d]
+    m = 1
+    for i, d in enumerate(lhs.shape):
+        if i not in lc and i not in lb:
+            m *= d
+    n = 1
+    for i, d in enumerate(rhs.shape):
+        if i not in rc and i not in rb:
+            n *= d
+    return 2.0 * batch * m * n * contract
+
+
+def jaxpr_cost(jaxpr: jcore.Jaxpr) -> Cost:
+    cost = Cost()
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        out_bytes = sum(_aval_bytes(v.aval) for v in eqn.outvars)
+        in_bytes = sum(_aval_bytes(v.aval) for v in eqn.invars
+                       if hasattr(v, "aval"))
+        sub = _subjaxprs(eqn)
+        if sub:
+            mult = _multiplier(eqn)
+            inner = Cost()
+            for sj in sub:
+                inner.add(jaxpr_cost(sj))
+            cost.add(inner, mult)
+            cost.by_prim[name] += inner.flops * mult
+            continue
+        if name == "dot_general":
+            f = _dot_flops(eqn)
+            cost.flops += f
+            cost.dot_flops += f
+            cost.bytes += in_bytes + out_bytes
+            cost.by_prim[name] += f
+        elif name in _FREE:
+            # layout/movement: bytes only (XLA usually fuses; upper bound)
+            cost.bytes += out_bytes
+        elif name in _CHEAP:
+            f = sum(_size(v.aval) for v in eqn.outvars)
+            cost.flops += f
+            cost.bytes += in_bytes + out_bytes
+            cost.by_prim[name] += f
+        elif name.startswith("reduce_") or name in ("argmax", "argmin"):
+            f = sum(_size(v.aval) for v in eqn.invars if hasattr(v, "aval"))
+            cost.flops += f
+            cost.bytes += in_bytes + out_bytes
+            cost.by_prim[name] += f
+        elif name in ("gather", "scatter", "scatter-add", "scatter_add",
+                      "scatter_min", "scatter_max", "take_along_axis",
+                      "sort", "top_k", "argsort"):
+            f = out_bytes  # index math ~ O(out)
+            cost.flops += f
+            cost.bytes += in_bytes + out_bytes
+            cost.by_prim[name] += f
+        else:
+            # default: elementwise-ish
+            f = sum(_size(v.aval) for v in eqn.outvars)
+            cost.flops += f
+            cost.bytes += in_bytes + out_bytes
+            cost.by_prim[name] += f
+    return cost
+
+
+def _subjaxprs(eqn):
+    out = []
+    for k, v in eqn.params.items():
+        if isinstance(v, jcore.ClosedJaxpr):
+            out.append(v.jaxpr)
+        elif isinstance(v, jcore.Jaxpr):
+            out.append(v)
+        elif k == "branches" and isinstance(v, (tuple, list)):
+            # cond: cost of the most expensive branch
+            costs = [(jaxpr_cost(b.jaxpr if hasattr(b, "jaxpr") else b), b)
+                     for b in v]
+            best = max(costs, key=lambda cb: cb[0].flops)
+            out.append(best[1].jaxpr if hasattr(best[1], "jaxpr") else best[1])
+    return out
+
+
+def _multiplier(eqn) -> float:
+    name = eqn.primitive.name
+    if name == "scan":
+        return float(eqn.params.get("length", 1))
+    if name == "while":
+        # model code uses bounded loops only via scan; graph algorithms use
+        # while — callers report those separately.
+        return 1.0
+    return 1.0
+
+
+def cost_of(fn, *args, **kwargs) -> Cost:
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    return jaxpr_cost(closed.jaxpr)

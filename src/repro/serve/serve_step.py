@@ -1,0 +1,79 @@
+"""Serving: prefill → pad cache → batched greedy/temperature decode."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import model as M
+
+
+def _pad_entry(e, tgt: int):
+    w = e["k"].shape[-3]
+    if w >= tgt:
+        return e
+    padw = tgt - w
+    out = dict(e)
+    for key_ in ("k", "v"):
+        x = e[key_]
+        pad = [(0, 0)] * x.ndim
+        pad[-3] = (0, padw)
+        out[key_] = jnp.pad(x, pad)
+    pos = e["pos"]
+    ppad = [(0, 0)] * pos.ndim
+    ppad[-1] = (0, padw)
+    out["pos"] = jnp.pad(pos, ppad, constant_values=-1)
+    return out
+
+
+def pad_cache(cfg: ModelConfig, cache, target_len: int):
+    """Grow prefill caches to decode capacity.  Global-attention entries pad
+    their seq dim to ``target_len``; sliding-window entries to the ring size
+    min(window, target); SSM states are fixed-size.  Ring arithmetic stays
+    valid because prefill slots satisfy slot = pos %% W for every W >= S."""
+    if not isinstance(cache, list):       # enc-dec: dict over stacked layers
+        return _pad_entry(cache, target_len)
+    out = []
+    for spec, e in zip(cfg.full_pattern, cache):
+        if spec.mixer == "attn_local" and cfg.sliding_window:
+            out.append(_pad_entry(e, min(cfg.sliding_window, target_len)))
+        elif spec.mixer in ("attn",):
+            out.append(_pad_entry(e, target_len))
+        else:
+            out.append(e)
+    return out
+
+
+def sample(logits, key, temperature: float = 0.0):
+    """logits: [B, 1, V] -> tokens [B, 1]."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits.astype(jnp.float32) / temperature, axis=-1) \
+        .astype(jnp.int32)
+
+
+def generate(cfg: ModelConfig, rcfg: RunConfig, params, batch, *,
+             max_new_tokens: int, temperature: float = 0.0, seed: int = 0):
+    """Prefill the prompt batch then decode ``max_new_tokens`` greedily.
+    Returns tokens [B, max_new_tokens]."""
+    prompt_len = batch["tokens"].shape[1]
+    if cfg.frontend == "patch":
+        prompt_len += cfg.frontend_seq
+    logits, cache = M.prefill(cfg, rcfg, params, batch)
+    cache = pad_cache(cfg, cache, prompt_len + max_new_tokens)
+    key = jax.random.PRNGKey(seed)
+    tok = sample(logits, key, temperature)
+
+    decode = jax.jit(partial(M.decode_step, cfg, rcfg))
+
+    toks = [tok]
+    for i in range(max_new_tokens - 1):
+        key, sub = jax.random.split(key)
+        logits, cache = decode(params, cache, tok,
+                               jnp.int32(prompt_len + i))
+        tok = sample(logits, sub, temperature)
+        toks.append(tok)
+    return jnp.concatenate(toks, axis=1)

@@ -1,0 +1,123 @@
+"""Optimizers implemented in-framework (no optax dependency).
+
+* AdamW — default for ≤70B-scale configs.
+* Adafactor (factored second moment, no first moment by default) — default
+  for the 235B/398B configs so optimizer state fits 16 GB/chip HBM
+  (DESIGN.md §4.1).
+
+State layouts mirror param layouts, so the same sharding rules apply.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Any    # params -> opt_state
+    update: Any  # (grads, opt_state, params, step) -> (new_params, new_state)
+
+
+def _tree_zeros_like(params, dtype=None):
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, dtype or p.dtype), params)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw(rcfg: RunConfig, b1=0.9, b2=0.95, eps=1e-8) -> Optimizer:
+    lr, wd = rcfg.learning_rate, rcfg.weight_decay
+
+    def init(params):
+        return {"m": _tree_zeros_like(params, jnp.float32),
+                "v": _tree_zeros_like(params, jnp.float32)}
+
+    def update(grads, state, params, step):
+        step_f = (step + 1).astype(jnp.float32)
+        c1 = 1.0 - b1 ** step_f
+        c2 = 1.0 - b2 ** step_f
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            u = u + wd * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern, 2018) — factored second moments
+# ---------------------------------------------------------------------------
+
+
+def adafactor(rcfg: RunConfig, decay=0.8, eps=1e-30, clip=1.0) -> Optimizer:
+    lr, wd = rcfg.learning_rate, rcfg.weight_decay
+
+    def init(params):
+        def per(p):
+            if p.ndim >= 2:
+                # factor over the two largest dims (trailing two for weights)
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return jax.tree.map(per, params)
+
+    def update(grads, state, params, step):
+        step_f = (step + 1).astype(jnp.float32)
+        beta = 1.0 - step_f ** (-decay)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                    eps)[..., None]
+                v = vr[..., None] * vc[..., None, :] / denom
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                new_s = {"v": v}
+            u = g / jnp.sqrt(jnp.maximum(v, eps))
+            # update clipping (RMS <= clip)
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip)
+            u = u + wd * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_s
+
+        out = jax.tree_util.tree_map(
+            upd, grads, state, params,
+            is_leaf=lambda x: isinstance(x, dict) and ("vr" in x or "v" in x))
+        # out has tuples at (param, state) positions
+        flat, treedef = jax.tree_util.tree_flatten(
+            out, is_leaf=lambda x: isinstance(x, tuple))
+        new_p = treedef.unflatten([t[0] for t in flat])
+        new_s = treedef.unflatten([t[1] for t in flat])
+        return new_p, new_s
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(rcfg: RunConfig) -> Optimizer:
+    if rcfg.optimizer == "adafactor":
+        return adafactor(rcfg)
+    return adamw(rcfg)

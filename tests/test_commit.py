@@ -1,0 +1,140 @@
+"""Property tests: commit engines == sequential oracle (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.commit import atomic_commit, coarse_commit
+from repro.core.messages import make_messages
+
+SET = dict(max_examples=25, deadline=None)
+
+
+def _oracle(state, tgt, val, valid, op):
+    out = np.array(state, copy=True)
+    for t, v, ok in zip(tgt, val, valid):
+        if not ok:
+            continue
+        if op == "min":
+            out[t] = min(out[t], v)
+        elif op == "max":
+            out[t] = max(out[t], v)
+        elif op == "add":
+            out[t] += v
+        elif op == "or":
+            out[t] = out[t] or True
+    return out
+
+
+@st.composite
+def batches(draw):
+    v = draw(st.integers(4, 200))
+    n = draw(st.integers(1, 300))
+    tgt = draw(st.lists(st.integers(0, v - 1), min_size=n, max_size=n))
+    val = draw(st.lists(st.integers(-50, 50), min_size=n, max_size=n))
+    valid = draw(st.lists(st.booleans(), min_size=n, max_size=n))
+    m = draw(st.sampled_from([None, 1, 7, 32, 1024]))
+    sort = draw(st.booleans())
+    return v, np.array(tgt), np.array(val), np.array(valid), m, sort
+
+
+@given(batches(), st.sampled_from(["min", "max", "add"]))
+@settings(**SET)
+def test_coarse_matches_oracle(b, op):
+    v, tgt, val, valid, m, sort = b
+    state = np.full(v, 1000 if op == "min" else (-1000 if op == "max" else 0),
+                    np.int32)
+    msgs = make_messages(jnp.asarray(tgt, jnp.int32), jnp.asarray(val, jnp.int32),
+                         jnp.asarray(valid))
+    res = coarse_commit(jnp.asarray(state), msgs, op, m=m, sort=sort)
+    exp = _oracle(state, tgt, val, valid, op)
+    np.testing.assert_array_equal(np.asarray(res.state), exp)
+
+
+@given(batches(), st.sampled_from(["min", "max", "add"]))
+@settings(**SET)
+def test_atomic_matches_oracle(b, op):
+    v, tgt, val, valid, m, sort = b
+    state = np.full(v, 1000 if op == "min" else (-1000 if op == "max" else 0),
+                    np.int32)
+    msgs = make_messages(jnp.asarray(tgt, jnp.int32), jnp.asarray(val, jnp.int32),
+                         jnp.asarray(valid))
+    res = atomic_commit(jnp.asarray(state), msgs, op)
+    exp = _oracle(state, tgt, val, valid, op)
+    np.testing.assert_array_equal(np.asarray(res.state), exp)
+
+
+@given(batches())
+@settings(**SET)
+def test_mf_success_winners_cover_changed_vertices(b):
+    """MF semantics (paper §3.2.2): each transaction tile commits at most
+    one winner per vertex; across sequential tiles a vertex may improve
+    repeatedly (like back-to-back HTM transactions), so per vertex the
+    successful values are distinct and their minimum is the final state."""
+    v, tgt, val, valid, m, sort = b
+    state = jnp.full((v,), 1000, jnp.int32)
+    msgs = make_messages(jnp.asarray(tgt, jnp.int32),
+                         jnp.asarray(val, jnp.int32), jnp.asarray(valid))
+    res = coarse_commit(state, msgs, "min", m=m, sort=sort)
+    succ = np.asarray(res.success)
+    final = np.asarray(res.state)
+    changed = set(np.flatnonzero(final != 1000).tolist())
+    winners = tgt[succ]
+    assert set(winners.tolist()) == changed
+    per_vertex: dict[int, list[int]] = {}
+    for i in np.flatnonzero(succ):
+        per_vertex.setdefault(int(tgt[i]), []).append(int(val[i]))
+    for vx, vals in per_vertex.items():
+        assert len(set(vals)) == len(vals), "duplicate winning value"
+        assert min(vals) == final[vx]
+
+
+@given(batches())
+@settings(**SET)
+def test_mf_success_unique_winner_single_transaction(b):
+    """With one whole-batch transaction (m=None) there is EXACTLY one
+    winner per changed vertex."""
+    v, tgt, val, valid, _, sort = b
+    state = jnp.full((v,), 1000, jnp.int32)
+    msgs = make_messages(jnp.asarray(tgt, jnp.int32),
+                         jnp.asarray(val, jnp.int32), jnp.asarray(valid))
+    res = coarse_commit(state, msgs, "min", m=None, sort=sort)
+    succ = np.asarray(res.success)
+    final = np.asarray(res.state)
+    changed = np.flatnonzero(final != 1000)
+    winners = tgt[succ]
+    assert len(set(winners.tolist())) == len(winners)
+    assert set(winners.tolist()) == set(changed.tolist())
+    for i in np.flatnonzero(succ):
+        assert final[tgt[i]] == val[i]
+
+
+@given(batches())
+@settings(**SET)
+def test_as_commit_never_fails(b):
+    """AS semantics: every valid accumulate succeeds (paper §3.2.2)."""
+    v, tgt, val, valid, m, sort = b
+    state = jnp.zeros((v,), jnp.int32)
+    msgs = make_messages(jnp.asarray(tgt, jnp.int32),
+                         jnp.asarray(val, jnp.int32), jnp.asarray(valid))
+    res = coarse_commit(state, msgs, "add", m=m, sort=sort)
+    np.testing.assert_array_equal(np.asarray(res.success), valid)
+
+
+def test_first_commit_ties_break_by_arrival_order():
+    state = jnp.full((4,), -1, jnp.int32)
+    msgs = make_messages(jnp.asarray([2, 2, 2], jnp.int32),
+                         jnp.asarray([7, 8, 9], jnp.int32),
+                         jnp.ones((3,), bool))
+    res = coarse_commit(state, msgs, "first")
+    assert int(res.state[2]) == 7
+    np.testing.assert_array_equal(np.asarray(res.success), [True, False, False])
+
+
+def test_conflict_telemetry_counts_duplicates():
+    state = jnp.zeros((8,), jnp.float32)
+    msgs = make_messages(jnp.asarray([1, 1, 2, 3, 3, 3], jnp.int32),
+                         jnp.ones((6,), jnp.float32), jnp.ones((6,), bool))
+    res = coarse_commit(state, msgs, "add")
+    assert int(res.conflicts) == 5  # 2 on vertex 1 + 3 on vertex 3

@@ -1,0 +1,139 @@
+"""Graph algorithms vs networkx / reference oracles (property-based over
+generated graph families)."""
+import jax.numpy as jnp
+import networkx as nx
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graphs.csr import from_edges
+from repro.graphs.generators import (erdos_renyi, grid2d, kronecker,
+                                     preferential, random_weights)
+from repro.graphs.algorithms.bfs import bfs, bfs_reference
+from repro.graphs.algorithms.boruvka import boruvka, mst_reference
+from repro.graphs.algorithms.coloring import coloring, validate_coloring
+from repro.graphs.algorithms.pagerank import pagerank, pagerank_reference
+from repro.graphs.algorithms.sssp import sssp, sssp_reference
+from repro.graphs.algorithms.stconn import st_connectivity, st_reference
+
+SET = dict(max_examples=10, deadline=None)
+GRAPHS = [
+    kronecker(8, 8, seed=1),
+    erdos_renyi(300, 6.0, seed=2),
+    grid2d(12),
+    preferential(200, 3, seed=3),
+]
+
+
+@st.composite
+def random_graph(draw):
+    n = draw(st.integers(5, 120))
+    m = draw(st.integers(0, 400))
+    rng = np.random.default_rng(draw(st.integers(0, 1000)))
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    return from_edges(src, dst, n, symmetrize=True), \
+        draw(st.integers(0, n - 1))
+
+
+@pytest.mark.parametrize("g", GRAPHS, ids=["kron", "er", "grid", "pref"])
+@pytest.mark.parametrize("commit,m", [("atomic", None), ("coarse", None),
+                                      ("coarse", 64), ("coarse", 1024)])
+def test_bfs_families(g, commit, m):
+    src = int(np.argmax(np.asarray(g.degrees)))
+    r = bfs(g, src, commit=commit, m=m)
+    np.testing.assert_array_equal(np.asarray(r.dist, np.int64),
+                                  bfs_reference(g, src))
+
+
+@given(random_graph())
+@settings(**SET)
+def test_bfs_property(gs):
+    g, src = gs
+    if g.num_edges == 0:
+        return
+    r = bfs(g, src, commit="coarse", m=32)
+    np.testing.assert_array_equal(np.asarray(r.dist, np.int64),
+                                  bfs_reference(g, src))
+
+
+@pytest.mark.parametrize("g", GRAPHS, ids=["kron", "er", "grid", "pref"])
+def test_pagerank_families(g):
+    pr, _ = pagerank(g, iters=15)
+    ref = pagerank_reference(g, iters=15)
+    assert float(np.abs(np.asarray(pr) - ref).max()) < 1e-5
+    assert abs(float(jnp.sum(pr)) - 1.0) < 1e-3
+
+
+def test_pagerank_atomic_equals_coarse():
+    g = GRAPHS[0]
+    pa, _ = pagerank(g, iters=10, commit="atomic")
+    pc, _ = pagerank(g, iters=10, commit="coarse", m=256)
+    np.testing.assert_allclose(np.asarray(pa), np.asarray(pc), atol=1e-6)
+
+
+@pytest.mark.parametrize("g", GRAPHS, ids=["kron", "er", "grid", "pref"])
+def test_sssp_families(g):
+    gw = random_weights(g, seed=7)
+    src = int(np.argmax(np.asarray(g.degrees)))
+    d, _ = sssp(gw, src)
+    ref = sssp_reference(gw, src)
+    reach = ref < 1e38
+    np.testing.assert_allclose(np.asarray(d)[reach], ref[reach], rtol=1e-5)
+
+
+@pytest.mark.parametrize("g", GRAPHS, ids=["kron", "er", "grid", "pref"])
+def test_coloring_families(g):
+    col, rounds, failed = coloring(g, seed=11)
+    assert not bool(failed)
+    assert validate_coloring(g, col)
+
+
+@given(random_graph())
+@settings(**SET)
+def test_coloring_property(gs):
+    g, _ = gs
+    if g.num_edges == 0:
+        return
+    col, _, failed = coloring(g, seed=3)
+    assert not bool(failed) and validate_coloring(g, col)
+
+
+def test_stconn_connected_and_disconnected():
+    g = grid2d(10)
+    f, _ = st_connectivity(g, 0, 99)
+    assert bool(f) == st_reference(g, 0, 99) is True
+    # two disjoint grids
+    side = 6
+    a = grid2d(side)
+    src = np.concatenate([np.asarray(a.src), np.asarray(a.src) + side * side])
+    dst = np.concatenate([np.asarray(a.dst), np.asarray(a.dst) + side * side])
+    g2 = from_edges(src, dst, 2 * side * side)
+    f2, _ = st_connectivity(g2, 0, side * side)
+    assert not bool(f2)
+    assert not st_reference(g2, 0, side * side)
+
+
+@pytest.mark.parametrize("g", GRAPHS, ids=["kron", "er", "grid", "pref"])
+def test_boruvka_families(g):
+    gw = random_weights(g, seed=13)
+    _, w, ne, _ = boruvka(gw)
+    ref = mst_reference(gw)
+    assert abs(float(w) - ref) / max(ref, 1) < 1e-4
+    # forest size = V - #components
+    G = nx.Graph()
+    G.add_nodes_from(range(g.num_vertices))
+    G.add_edges_from(zip(np.asarray(g.src).tolist(),
+                         np.asarray(g.dst).tolist()))
+    ncc = nx.number_connected_components(G)
+    assert int(ne) == g.num_vertices - ncc
+
+
+def test_bfs_conflict_telemetry_nonzero_on_dense_graph():
+    """The abort-statistics analogue (paper Tables 3c/3f): dense graphs
+    produce duplicate-target messages."""
+    g = kronecker(8, 16, seed=5)
+    src = int(np.argmax(np.asarray(g.degrees)))
+    r = bfs(g, src, commit="coarse", m=128)
+    assert int(r.conflicts) > 0
+    assert int(r.applied) <= int(r.messages)

@@ -1,0 +1,51 @@
+"""shard_map MoE (§Perf iteration 2) == SPMD AAM path, on multi-axis
+meshes including a 'pod' axis (subprocess with 8 host devices)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+CHILD = """
+import json, dataclasses, jax, jax.numpy as jnp, numpy as np
+from repro.configs.archs import ARCHS
+from repro.configs.base import smoke_model
+from repro.moe import moe_layer
+
+cfg = dataclasses.replace(smoke_model(ARCHS["qwen3-moe-235b-a22b"]),
+                          d_model=64, moe_d_ff=32, num_experts=8,
+                          experts_per_token=2, capacity_factor=8.0)
+p, _ = moe_layer.moe_init(cfg, jax.random.PRNGKey(0))
+x = jax.random.normal(jax.random.PRNGKey(1), (32, cfg.d_model), jnp.float32)
+out = {}
+for name, mesh in [
+    ("2x2", jax.make_mesh((2, 2), ("data", "model"))),
+    ("pod2x2x2", jax.make_mesh((2, 2, 2), ("pod", "data", "model"))),
+]:
+    with mesh:
+        y0, m0 = jax.jit(lambda p, x: moe_layer.moe_apply(
+            cfg, p, x, impl="aam"))(p, x)
+        y1, m1 = jax.jit(lambda p, x: moe_layer.moe_apply(
+            cfg, p, x, impl="aam_shmap"))(p, x)
+    out[name] = {"diff": float(jnp.max(jnp.abs(y0 - y1))),
+                 "drop0": int(m0["moe_dropped"]),
+                 "drop1": int(m1["moe_dropped"])}
+print("RESULT", json.dumps(out))
+"""
+
+
+def test_shmap_moe_matches_spmd_path_on_multiaxis_meshes():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(REPO / "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(CHILD)],
+                       capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+    for mesh, v in out.items():
+        assert v["diff"] < 1e-5, (mesh, v)
+        assert v["drop0"] == v["drop1"] == 0, (mesh, v)
