@@ -8,12 +8,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timeit
-from repro.core.commit import atomic_commit, coarse_commit
+from repro.core.commit import CommitSpec, commit
 from repro.core.messages import make_messages
 from repro.core.perf_model import crossing_point, fit, select_m
 
 V = 1 << 16
 NS = [1, 2, 4, 8, 16, 32, 64, 128, 256, 512]
+
+FINE = CommitSpec(backend="atomic")
+COARSE = CommitSpec(backend="coarse")
 
 
 def _fine_activity(state, tgt, val):
@@ -22,7 +25,7 @@ def _fine_activity(state, tgt, val):
     def body(st, tv):
         t, v_ = tv
         m = make_messages(t[None], v_[None], jnp.ones((1,), bool))
-        return atomic_commit(st, m, "min").state, None
+        return commit(st, m, "min", FINE).state, None
     out, _ = jax.lax.scan(body, state, (tgt, val))
     return out
 
@@ -30,7 +33,7 @@ def _fine_activity(state, tgt, val):
 @jax.jit
 def _coarse_activity(state, tgt, val):
     m = make_messages(tgt, val, jnp.ones_like(tgt, bool))
-    return coarse_commit(state, m, "min").state
+    return commit(state, m, "min", COARSE).state
 
 
 def main():

@@ -1,22 +1,24 @@
 """Paper Fig 3 + Tables 3c/3f — single-vertex activities under low/high
 contention: CAS-analogue (min, May-Fail) vs ACC-analogue (add,
-Always-Succeed), fine vs coarse, with conflict telemetry (the abort
-statistics analogue)."""
+Always-Succeed), swept over every commit backend via :class:`CommitSpec`,
+with conflict telemetry (the abort statistics analogue)."""
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timeit
-from repro.core.commit import atomic_commit, coarse_commit
+from repro.core.commit import BACKENDS, CommitSpec, commit
 from repro.core.messages import make_messages
 
 V = 1 << 14
 N = 4096  # concurrent "threads" (message lanes)
 
 
-def main():
+def main(backends=BACKENDS):
     rng = np.random.default_rng(0)
     for contention, reps in (("low", 10), ("high", 100)):
         # N lanes target V/reps distinct vertices => each vertex hit ~reps x
@@ -25,20 +27,21 @@ def main():
                         ("add", jnp.zeros((V,), jnp.int32))):
             val = jnp.asarray(rng.integers(0, 100, N), jnp.int32)
             msgs = make_messages(tgt, val, jnp.ones((N,), bool))
-            fine = jax.jit(lambda s, m, op=op: atomic_commit(s, m, op).state)
-            coarse = jax.jit(
-                lambda s, m, op=op: coarse_commit(s, m, op).state)
-            tf = timeit(fine, st0, msgs)
-            tc = timeit(coarse, st0, msgs)
-            res = coarse_commit(st0, msgs, op)
-            emit(f"fig3/{op}/{contention}/fine", tf,
-                 f"conflicts={int(res.conflicts)}")
-            emit(f"fig3/{op}/{contention}/coarse", tc,
-                 f"applied={int(res.applied)}")
-            # Table 3c/3f analogue: conflict fraction
-            emit(f"fig3/{op}/{contention}/conflict_rate", 0.0,
-                 f"{int(res.conflicts)/N:.3f}")
+            for backend in backends:
+                spec = CommitSpec(backend=backend)
+                fn = jax.jit(lambda s, m, op=op, spec=spec:
+                             commit(s, m, op, spec).state)
+                t = timeit(fn, st0, msgs)
+                res = commit(st0, msgs, op, spec)
+                emit(f"fig3/{op}/{contention}/{backend}", t,
+                     f"conflicts={int(res.conflicts)} "
+                     f"applied={int(res.applied)} "
+                     f"conflict_rate={int(res.conflicts)/N:.3f}")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=BACKENDS, default=None,
+                    help="restrict to one commit backend (default: sweep)")
+    args = ap.parse_args()
+    main((args.backend,) if args.backend else BACKENDS)

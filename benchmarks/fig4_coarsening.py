@@ -14,11 +14,14 @@ the derived column.
 """
 from __future__ import annotations
 
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timeit
+from repro.core.commit import BACKENDS, CommitSpec
 from repro.graphs.algorithms.bfs import bfs
 from repro.graphs.generators import kronecker
 
@@ -45,22 +48,23 @@ def conflict_depth(g) -> float:
     return float(np.mean(depths)) if depths else 1.0
 
 
-def main(scale: int = 14, edge_factor: int = 16):
+def main(scale: int = 14, edge_factor: int = 16, backend: str = "coarse"):
     g = kronecker(scale, edge_factor, seed=1)
     src = int(np.argmax(np.asarray(g.degrees)))
-    t_atomic = timeit(lambda: bfs(g, src, commit="atomic"), repeats=3)
+    base = CommitSpec(backend="atomic", stats=False)
+    t_atomic = timeit(lambda: bfs(g, src, spec=base), repeats=3)
     emit(f"fig4/atomic/V=2^{scale}", t_atomic, "T=1 baseline")
     best = (None, float("inf"))
     for m in MS:
         for sort in (True, False):
-            t = timeit(lambda m=m, s=sort: bfs(g, src, commit="coarse",
-                                               m=m, sort=s), repeats=3)
+            spec = CommitSpec(backend=backend, m=m, sort=sort, stats=False)
+            t = timeit(lambda spec=spec: bfs(g, src, spec=spec), repeats=3)
             tag = "sorted" if sort else "unsorted"
-            name = f"fig4/coarse/{tag}/M={m or 'inf'}"
+            name = f"fig4/{backend}/{tag}/M={m or 'inf'}"
             emit(name, t, f"T1_ratio_vs_atomic={t_atomic/t:.2f}")
             if not sort and t < best[1]:
                 best = (m, t)
-    r = bfs(g, src, commit="coarse", m=best[0])
+    r = bfs(g, src, spec=CommitSpec(backend=backend, m=best[0], stats=False))
     depth = conflict_depth(g)
     emit("fig4/M_best_T1", best[1],
          f"M={best[0] or 'inf'} T1_ratio={t_atomic/best[1]:.2f} "
@@ -69,4 +73,10 @@ def main(scale: int = 14, edge_factor: int = 16):
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=BACKENDS, default="coarse",
+                    help="commit backend swept over transaction size M")
+    ap.add_argument("--scale", type=int, default=14)
+    ap.add_argument("--edge-factor", type=int, default=16)
+    args = ap.parse_args()
+    main(args.scale, args.edge_factor, args.backend)

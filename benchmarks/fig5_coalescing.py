@@ -4,6 +4,7 @@ coalescing factor C, and the distributed-transaction scenarios O-1..O-4
 devices (the parent bench process keeps 1 device, per the assignment)."""
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import subprocess
@@ -12,14 +13,18 @@ import textwrap
 from pathlib import Path
 
 from benchmarks.common import emit
+from repro.core.commit import BACKENDS
 
 CHILD = """
-import json, time, numpy as np, jax, jax.numpy as jnp
+import json, os, time, numpy as np, jax, jax.numpy as jnp
 from repro.launch.mesh import make_host_mesh
 from repro.graphs.generators import kronecker
+from repro.core.commit import CommitSpec
 from repro.core.engine import distributed_bfs, distributed_pagerank
 from repro.core.ownership import run_transactions
 
+spec = CommitSpec(backend=os.environ.get("AAM_BACKEND", "coarse"),
+                  stats=True)
 mesh = make_host_mesh(8, 1)
 g = kronecker(13, 8, seed=2)
 src = int(np.argmax(np.asarray(g.degrees)))
@@ -34,12 +39,13 @@ def t(fn, reps=3):
 # remote marking (BFS-wave) vs coalescing factor C  [Fig 5c/5d analogue]
 for C in (64, 256, 1024, 4096, 16384):
     out[f"bfs_C={C}"] = t(lambda C=C: distributed_bfs(
-        mesh, g, src, capacity=C)[0].block_until_ready())
+        mesh, g, src, capacity=C, spec=spec)[0].block_until_ready())
 
 # remote accumulate (PR) vs C  [Fig 5e/5f analogue]
 for C in (256, 4096, 16384):
     out[f"pr_C={C}"] = t(lambda C=C: distributed_pagerank(
-        mesh, g, iters=3, capacity=C).block_until_ready(), reps=2)
+        mesh, g, iters=3, capacity=C, spec=spec).block_until_ready(),
+        reps=2)
 
 # ownership-protocol scenarios [Fig 5i]: x txns of a local + b remote
 rng = np.random.default_rng(0)
@@ -61,10 +67,11 @@ print("RESULT", json.dumps(out))
 """
 
 
-def main():
+def main(backend: str = "coarse"):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = str(Path(__file__).resolve().parent.parent / "src")
+    env["AAM_BACKEND"] = backend
     p = subprocess.run([sys.executable, "-c", textwrap.dedent(CHILD)],
                        capture_output=True, text=True, env=env, timeout=1200)
     if p.returncode != 0:
@@ -77,8 +84,11 @@ def main():
             emit(f"fig5/own/{k}", v["s"],
                  f"rounds={v['rounds']} retries={v['retries']}")
         else:
-            emit(f"fig5/{k}", v)
+            emit(f"fig5/{backend}/{k}", v)
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=BACKENDS, default="coarse",
+                    help="commit backend used by the owner-side commits")
+    main(ap.parse_args().backend)

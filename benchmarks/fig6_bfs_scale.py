@@ -2,31 +2,39 @@
 AAM coarse transactions vs the fine-atomics Graph500 baseline."""
 from __future__ import annotations
 
+import argparse
+
 import numpy as np
 
 from benchmarks.common import emit, timeit
+from repro.core.commit import BACKENDS, CommitSpec
 from repro.graphs.algorithms.bfs import bfs
 from repro.graphs.generators import kronecker
 
+ATOMIC = CommitSpec(backend="atomic", stats=False)
 
-def main():
+
+def main(backend: str = "coarse"):
+    aam = CommitSpec(backend=backend, m=4096, sort=False, stats=False)
     # |V| sweep at fixed edge factor
     for scale in (12, 13, 14, 15):
         g = kronecker(scale, 16, seed=3)
         src = int(np.argmax(np.asarray(g.degrees)))
-        ta = timeit(lambda: bfs(g, src, commit="atomic"), repeats=3)
-        tc = timeit(lambda: bfs(g, src, commit="coarse", m=4096, sort=False), repeats=3)
+        ta = timeit(lambda: bfs(g, src, spec=ATOMIC), repeats=3)
+        tc = timeit(lambda: bfs(g, src, spec=aam), repeats=3)
         emit(f"fig6/V=2^{scale}/atomic", ta)
         emit(f"fig6/V=2^{scale}/aam", tc, f"T1_ratio={ta/tc:.2f}")
     # density sweep at fixed |V|
     for d in (4, 16, 64):
         g = kronecker(13, d, seed=4)
         src = int(np.argmax(np.asarray(g.degrees)))
-        ta = timeit(lambda: bfs(g, src, commit="atomic"), repeats=3)
-        tc = timeit(lambda: bfs(g, src, commit="coarse", m=4096, sort=False), repeats=3)
+        ta = timeit(lambda: bfs(g, src, spec=ATOMIC), repeats=3)
+        tc = timeit(lambda: bfs(g, src, spec=aam), repeats=3)
         emit(f"fig6/d={d}/atomic", ta)
         emit(f"fig6/d={d}/aam", tc, f"T1_ratio={ta/tc:.2f}")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=BACKENDS, default="coarse")
+    main(ap.parse_args().backend)

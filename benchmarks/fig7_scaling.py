@@ -40,15 +40,18 @@ print("RESULT", json.dumps(out))
 
 def main():
     # single-shard PBGL-like baseline: per-edge atomic accumulate PR
+    from repro.core.commit import CommitSpec
     from repro.graphs.algorithms.pagerank import pagerank
     from repro.graphs.generators import kronecker
     import numpy as np
     g = kronecker(13, 8, seed=5)
-    tb = timeit(lambda: pagerank(g, iters=5, commit="atomic")[0]
-                .block_until_ready(), repeats=2)
-    ta = timeit(lambda: pagerank(g, iters=5, commit="coarse",
-                                 sort=False)[0]
-                .block_until_ready(), repeats=2)
+    tb = timeit(lambda: pagerank(
+        g, iters=5, spec=CommitSpec(backend="atomic", stats=False))[0]
+        .block_until_ready(), repeats=2)
+    ta = timeit(lambda: pagerank(
+        g, iters=5, spec=CommitSpec(backend="coarse", sort=False,
+                                    stats=False))[0]
+        .block_until_ready(), repeats=2)
     emit("fig7/pr/1shard/pbgl_like", tb)
     emit("fig7/pr/1shard/aam", ta, f"T1_ratio={tb/ta:.2f}")
 

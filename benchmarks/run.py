@@ -5,6 +5,7 @@ documented in DESIGN.md §6; fig5/fig7 spawn child processes with forced
 host-device counts (this process keeps 1 device).
 
   PYTHONPATH=src python -m benchmarks.run [--only fig4,table1]
+                                           [--backend atomic|coarse|pallas]
 """
 from __future__ import annotations
 
@@ -16,6 +17,7 @@ import traceback
 from benchmarks import (bench_moe, fig2_perf_model, fig3_single_vertex,
                         fig4_coarsening, fig5_coalescing, fig6_bfs_scale,
                         fig7_scaling, table1_realworld)
+from repro.core.commit import BACKENDS
 
 SUITES = {
     "fig2": fig2_perf_model.main,
@@ -28,11 +30,23 @@ SUITES = {
     "moe": bench_moe.main,
 }
 
+# suites whose commit mechanism is a first-class CommitSpec axis:
+# suite -> kwargs for a single-backend run
+BACKEND_AWARE = {
+    "fig3": lambda b: {"backends": (b,)},
+    "fig4": lambda b: {"backend": b},
+    "fig5": lambda b: {"backend": b},
+    "fig6": lambda b: {"backend": b},
+    "table1": lambda b: {"backend": b},
+}
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of " + ",".join(SUITES))
+    ap.add_argument("--backend", default=None, choices=BACKENDS,
+                    help="commit backend for the backend-aware suites")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(SUITES)
     print("name,us_per_call,derived")
@@ -40,7 +54,13 @@ def main() -> None:
     for n in names:
         t0 = time.time()
         try:
-            SUITES[n]()
+            if args.backend and n in BACKEND_AWARE:
+                SUITES[n](**BACKEND_AWARE[n](args.backend))
+            else:
+                if args.backend and n not in BACKEND_AWARE:
+                    print(f"{n}: --backend not applicable, ignored",
+                          file=sys.stderr)
+                SUITES[n]()
         except Exception:
             failures += 1
             traceback.print_exc()

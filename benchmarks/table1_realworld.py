@@ -4,9 +4,12 @@ the fine-atomics baseline.  The paper's finding that graph families cluster
 around similar M* is checked here."""
 from __future__ import annotations
 
+import argparse
+
 import numpy as np
 
 from benchmarks.common import emit, timeit
+from repro.core.commit import BACKENDS, CommitSpec
 from repro.graphs.algorithms.bfs import bfs
 from repro.graphs.generators import TABLE1_FAMILIES
 
@@ -14,22 +17,25 @@ MS = [64, 512, 4096, 16384]
 N = 1 << 13
 
 
-def main():
+def main(backend: str = "coarse"):
+    base = CommitSpec(backend="atomic", stats=False)
     for fam, gen in TABLE1_FAMILIES.items():
         g = gen(N)
         deg = np.asarray(g.degrees)
         src = int(np.argmax(deg))
-        ta = timeit(lambda: bfs(g, src, commit="atomic"), repeats=3)
+        ta = timeit(lambda: bfs(g, src, spec=base), repeats=3)
         best = (None, float("inf"))
         for m in MS:
-            t = timeit(lambda m=m: bfs(g, src, commit="coarse", m=m,
-                                       sort=False), repeats=3)
+            spec = CommitSpec(backend=backend, m=m, sort=False, stats=False)
+            t = timeit(lambda spec=spec: bfs(g, src, spec=spec), repeats=3)
             if t < best[1]:
                 best = (m, t)
-        emit(f"table1/{fam}", best[1],
+        emit(f"table1/{fam}/{backend}", best[1],
              f"V={g.num_vertices} E={g.num_edges} M*={best[0]} "
              f"T1_ratio={ta/best[1]:.2f}")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=BACKENDS, default="coarse")
+    main(ap.parse_args().backend)

@@ -6,6 +6,7 @@ import time
 
 import numpy as np
 
+from repro.core.commit import CommitSpec
 from repro.graphs.generators import (erdos_renyi, grid2d, kronecker,
                                      random_weights)
 from repro.graphs.algorithms.bfs import bfs
@@ -31,7 +32,7 @@ def run(name, msg_type, fn):
 
 run("BFS", "FF&MF", lambda: (lambda r:
     f"rounds={int(r.rounds)} conflicts={int(r.conflicts)}")(
-    bfs(g, src, commit='coarse', m=4096)))
+    bfs(g, src, spec=CommitSpec(backend="coarse", m=4096, stats=False))))
 run("PageRank", "FF&AS", lambda: (lambda r:
     f"sum={float(r[0].sum()):.4f} conflicting-accs={int(r[1])}")(
     pagerank(g, iters=20)))

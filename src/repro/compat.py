@@ -1,0 +1,19 @@
+"""Version compatibility helpers for the jax API surface.
+
+The codebase targets the modern ``jax.shard_map`` entry point; on older
+releases (< 0.5, e.g. the 0.4.x in this container) that lives at
+``jax.experimental.shard_map.shard_map`` and the replication-check kwarg
+is ``check_rep`` rather than ``check_vma``.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)

@@ -1,27 +1,32 @@
 """Commit engines — the HTM-transaction analogue (DESIGN.md §2).
 
-Three tiers, mirroring the paper's atomics → HTM spectrum:
+One semantic operation — "commit a batch of atomic active messages" —
+executed by interchangeable mechanisms, mirroring the paper's
+atomics → HTM spectrum (AAM §4–§5):
 
-* :func:`atomic_commit` — one scatter element per message (XLA scatter with
-  conflict semantics resolved by the memory system).  This is the
-  *fine-grained atomics* baseline the paper compares against (Graph500-style
-  CAS/ACC).
-* :func:`coarse_commit` — the AAM path: messages are processed in
-  "transactions" of M messages; each transaction's conflicts are resolved
-  on-chip (sort + segment reduction over the tile) and the state is written
-  once per distinct target.  Semantically identical, structurally what the
-  Pallas kernel (:mod:`repro.kernels.coarse_commit`) does on TPU VMEM/MXU.
-* the Pallas kernel itself (used on real TPU via ``use_pallas``).
+* ``atomic`` — :func:`atomic_commit`: one scatter element per message
+  (XLA scatter with conflict semantics resolved by the memory system).
+  The *fine-grained atomics* baseline the paper compares against
+  (Graph500-style CAS/ACC).
+* ``coarse`` — :func:`coarse_commit`: the AAM path — messages are
+  processed in "transactions" of M messages; each transaction's conflicts
+  are resolved on-chip (sort + segment reduction over the tile) and the
+  state is written once per distinct target.
+* ``pallas`` — :mod:`repro.kernels.coarse_commit` executes one
+  transaction per grid step against VMEM-resident state blocks (interpret
+  mode on CPU, compiled on real TPU).
 
-All commits return a :class:`CommitResult` carrying MF success flags (the
-"did my transaction win" bit routed back for FR messages) and conflict
-telemetry (the abort-statistics analogue of paper Tables 3c/3f).
+:func:`commit` is the single entry point: a :class:`CommitSpec` names the
+backend and its knobs, and every backend returns the same
+:class:`CommitResult` carrying MF success flags (the "did my transaction
+win" bit routed back for FR messages) and conflict telemetry (the
+abort-statistics analogue of paper Tables 3c/3f).  Backends that cannot
+execute a request (e.g. ``pallas`` on vector payloads or unsupported
+dtypes) fall back to ``coarse`` automatically.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +34,7 @@ import jax.numpy as jnp
 from repro.core.messages import Messages
 
 OPS = ("min", "max", "add", "or", "first")
+BACKENDS = ("atomic", "coarse", "pallas")
 
 
 def _identity(op: str, dtype):
@@ -42,6 +48,8 @@ def _identity(op: str, dtype):
         return jnp.array(0, dtype)
     if op == "or":
         return jnp.array(False, bool)
+    if op == "first":
+        return jnp.array(-1, dtype)     # "empty slot" marker
     raise ValueError(op)
 
 
@@ -54,6 +62,102 @@ class CommitResult:
     applied: jax.Array      # int32 — messages that changed state
 
 
+@dataclasses.dataclass(frozen=True)
+class CommitSpec:
+    """How to execute a commit — the mechanism, not the semantics.
+
+    backend:   one of :data:`BACKENDS`; ``pallas`` falls back to ``coarse``
+               for payload shapes/dtypes the kernel does not support.
+    m:         transaction size (messages per transaction); ``None`` = the
+               whole batch is one transaction.
+    sort:      coalesce by sorting messages by target before resolution
+               (jnp tiers only; the kernel always resolves in-VMEM).
+    stats:     compute full MF success flags + O(V) telemetry; ``False``
+               keeps the cheap O(N) conflict/applied counters.
+    tile_m:    pallas transaction tile (used when ``m`` is None).
+    block_v:   pallas state block resident in VMEM.
+    interpret: force pallas interpret mode; ``None`` = off-TPU auto.
+
+    Frozen + hashable so a spec can be a ``static_argnames`` entry of any
+    jitted caller.
+    """
+    backend: str = "coarse"
+    m: int | None = None
+    sort: bool = True
+    stats: bool = True
+    tile_m: int = 256
+    block_v: int = 512
+    interpret: bool | None = None
+
+    def __post_init__(self):
+        if self.m is not None and self.m < 1:
+            raise ValueError(f"transaction size m must be >= 1, got {self.m}")
+        if self.tile_m < 1 or self.block_v < 1:
+            raise ValueError(f"tile_m/block_v must be >= 1, got "
+                             f"{self.tile_m}/{self.block_v}")
+
+
+def commit(state: jax.Array, msgs: Messages, op: str,
+           spec: CommitSpec | None = None) -> CommitResult:
+    """Commit a batch of atomic active messages via ``spec.backend``.
+
+    The single dispatch point for every mechanism tier — algorithm code
+    names *what* (``op``) and the spec names *how*.  All backends agree on
+    the final state for every op in :data:`OPS`; ``success`` masks agree
+    whenever the whole batch is one transaction (``m=None`` — tiled
+    commits may legitimately report one winner per tile, like back-to-back
+    HTM transactions).
+    """
+    spec = spec if spec is not None else CommitSpec()
+    if op not in OPS:
+        raise ValueError(f"op {op!r} not in {OPS}")
+    if spec.backend not in BACKENDS:
+        raise ValueError(f"backend {spec.backend!r} not in {BACKENDS}")
+    if msgs.capacity == 0:
+        z = jnp.zeros((), jnp.int32)
+        return CommitResult(state, jnp.zeros((0,), bool), z, z)
+    backend = spec.backend
+    if backend == "pallas" and not _pallas_supported(state, msgs, op):
+        backend = "coarse"
+    if backend == "atomic":
+        return atomic_commit(state, msgs, op, stats=spec.stats)
+    if backend == "coarse":
+        return coarse_commit(state, msgs, op, m=spec.m, sort=spec.sort,
+                             stats=spec.stats)
+    return _pallas_commit(state, msgs, op, spec)
+
+
+_PALLAS_DTYPES = (jnp.int32, jnp.float32)
+
+
+def _pallas_supported(state, msgs: Messages, op: str) -> bool:
+    payload = msgs.payload
+    return (isinstance(payload, jax.Array) and payload.ndim == 1
+            and state.ndim == 1
+            and state.dtype in _PALLAS_DTYPES
+            and payload.dtype in _PALLAS_DTYPES)
+
+
+def _pallas_commit(state, msgs: Messages, op: str,
+                   spec: CommitSpec) -> CommitResult:
+    from repro.kernels.coarse_commit import coarse_commit_pallas
+    idx = jnp.where(msgs.valid, msgs.target, -1).astype(jnp.int32)
+    interpret = (spec.interpret if spec.interpret is not None
+                 else jax.default_backend() != "tpu")
+    tile_m = spec.m if spec.m is not None else spec.tile_m
+    new, conflicts = coarse_commit_pallas(
+        state, idx, msgs.payload, op=op, tile_m=tile_m,
+        block_v=spec.block_v, interpret=interpret, stats=True)
+    if not spec.stats:
+        z = jnp.zeros((), jnp.int32)
+        return CommitResult(new, msgs.valid, conflicts, z)
+    if op == "first":
+        success, _, applied = _first_stats(state, msgs)
+    else:
+        success, _, applied = _success_stats(state, new, msgs, op)
+    return CommitResult(new, success, conflicts, applied)
+
+
 # ---------------------------------------------------------------------------
 # Tier 1: fine-grained baseline (per-message scatter = atomics analogue)
 # ---------------------------------------------------------------------------
@@ -63,7 +167,6 @@ def atomic_commit(state: jax.Array, msgs: Messages, op: str,
                   stats: bool = True) -> CommitResult:
     """One scatter element per message; conflicts resolved by scatter
     semantics (the TPU analogue of a CAS/FAO per vertex)."""
-    n = msgs.capacity
     idx = jnp.where(msgs.valid, msgs.target, state.shape[0])  # OOB -> dropped
     val = msgs.payload
     old = state
@@ -76,7 +179,8 @@ def atomic_commit(state: jax.Array, msgs: Messages, op: str,
         new = state.at[idx].add(jnp.where(
             _bcast(msgs.valid, val), val, jnp.zeros_like(val)), mode=mode)
     elif op == "or":
-        new = state.at[idx].max(val.astype(state.dtype), mode=mode)
+        # payload is a truth value: all tiers agree on max(state, val != 0)
+        new = state.at[idx].max((val != 0).astype(state.dtype), mode=mode)
     elif op == "first":
         # first-writer-wins on empty slots (id -1 = empty), ties -> min msg id
         return _first_commit(state, msgs)
@@ -147,7 +251,6 @@ def _resolved_commit(state, msgs: Messages, op: str, sort: bool,
     ``stats=False`` skips the O(V) success accounting and reports cheap
     O(N) conflict/applied counts (success == valid placeholder).
     """
-    n = msgs.capacity
     v = state.shape[0]
     idx = jnp.where(msgs.valid, msgs.target, v)
     if op == "first":
@@ -157,11 +260,7 @@ def _resolved_commit(state, msgs: Messages, op: str, sort: bool,
     mode = jax.lax.GatherScatterMode.FILL_OR_DROP
 
     if not sort:
-        if stats:
-            return atomic_commit(state, msgs, op)
-        new = atomic_commit(state, msgs, op).state
-        return CommitResult(new, msgs.valid, jnp.zeros((), jnp.int32),
-                            jnp.zeros((), jnp.int32))
+        return atomic_commit(state, msgs, op, stats=stats)
 
     order = jnp.argsort(idx, stable=True)          # coalescing: sort by target
     s_idx = idx[order]
@@ -208,31 +307,41 @@ def _resolved_commit(state, msgs: Messages, op: str, sort: bool,
     return CommitResult(new, success, conflicts, applied)
 
 
-def _segment(val, idx, op, num_segments):
-    f = {"min": jax.ops.segment_min, "max": jax.ops.segment_max,
-         "add": jax.ops.segment_sum}[op]
-    return f(val, idx, num_segments=num_segments)
-
-
-def _first_commit(state, msgs: Messages) -> CommitResult:
-    """First-writer-wins into empty (-1) slots; in-batch ties -> lowest
-    message index (the paper's 'one of them succeeds')."""
+def _first_winner(state, msgs: Messages):
+    """(winner_rank [V], takes [V]) for first-writer-wins into empty (-1)
+    slots; in-batch ties -> lowest message index."""
     v = state.shape[0]
     n = msgs.capacity
     idx = jnp.where(msgs.valid, msgs.target, v)
     msg_rank = jnp.arange(n, dtype=jnp.int32)
     winner_rank = jax.ops.segment_min(msg_rank, idx, num_segments=v + 1)[:v]
-    empty = state < 0
-    takes = empty & (winner_rank < n)
-    val = msgs.payload
-    winner_val = jnp.where(
-        takes, val[jnp.clip(winner_rank, 0, n - 1)], state)
-    new = jnp.where(takes, winner_val, state)
-    success = msgs.valid & (msg_rank == winner_rank[jnp.clip(msgs.target, 0, v - 1)]) \
-        & empty[jnp.clip(msgs.target, 0, v - 1)]
+    takes = (state < 0) & (winner_rank < n)
+    return winner_rank, takes
+
+
+def _first_stats(state, msgs: Messages):
+    """(success, conflicts, applied) of a whole-batch 'first' commit
+    against the pre-commit ``state``."""
+    v = state.shape[0]
+    winner_rank, takes = _first_winner(state, msgs)
+    tgt = jnp.clip(msgs.target, 0, v - 1)
+    msg_rank = jnp.arange(msgs.capacity, dtype=jnp.int32)
+    success = msgs.valid & (msg_rank == winner_rank[tgt]) & (state < 0)[tgt]
     conflicts = jnp.sum(msgs.valid) - jnp.sum(takes)
-    return CommitResult(new, success, conflicts.astype(jnp.int32),
-                        jnp.sum(takes).astype(jnp.int32))
+    return success, conflicts.astype(jnp.int32), \
+        jnp.sum(takes).astype(jnp.int32)
+
+
+def _first_commit(state, msgs: Messages) -> CommitResult:
+    """First-writer-wins into empty (-1) slots; in-batch ties -> lowest
+    message index (the paper's 'one of them succeeds')."""
+    n = msgs.capacity
+    winner_rank, takes = _first_winner(state, msgs)
+    winner_val = jnp.where(
+        takes, msgs.payload[jnp.clip(winner_rank, 0, n - 1)], state)
+    new = jnp.where(takes, winner_val, state)
+    success, conflicts, applied = _first_stats(state, msgs)
+    return CommitResult(new, success, conflicts, applied)
 
 
 def _success_stats(old, new, msgs: Messages, op: str):

@@ -21,6 +21,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.core import commit as C
 from repro.core.coalescing import (BucketPlan, gather_from_buckets,
                                    plan_buckets_sorted, scatter_to_buckets)
@@ -35,6 +37,13 @@ class EngineConfig:
     axis: str = "data"
     m: int | None = None    # transaction size (None = whole batch)
     op: str = "min"
+    spec: C.CommitSpec | None = None   # commit backend; None = coarse(m)
+
+    @property
+    def commit_spec(self) -> C.CommitSpec:
+        if self.spec is not None:
+            return self.spec
+        return C.CommitSpec(backend="coarse", m=self.m)
 
 
 def route_wave(ecfg: EngineConfig, state_l, target, payload, pending):
@@ -59,7 +68,7 @@ def route_wave(ecfg: EngineConfig, state_l, target, payload, pending):
     valid = (rt.reshape(-1) >= 0)
     msgs = make_messages(jnp.clip(local_idx, 0, ecfg.block - 1),
                          rp.reshape(-1), valid)
-    res = C.coarse_commit(state_l, msgs, ecfg.op, m=ecfg.m)
+    res = C.commit(state_l, msgs, ecfg.op, ecfg.commit_spec)
     # FR return path: success flags back to spawners
     back = jax.lax.all_to_all(res.success.reshape(P, Cp), ecfg.axis, 0, 0,
                               tiled=True)
@@ -124,13 +133,15 @@ def return_to_spawners(ecfg: EngineConfig, reply, plan):
 
 
 def distributed_bfs(mesh, g, source: int, *, capacity: int = 4096,
-                    m: int | None = None, axis: str = "data"):
+                    m: int | None = None, axis: str = "data",
+                    spec: C.CommitSpec | None = None):
     """BFS over a mesh axis. Returns (dist [P*block], rounds)."""
     from repro.graphs.csr import partition_edges
     P = mesh.shape[axis]
     (src, dst, w, val), part = partition_edges(g, P)
     block = part.block
-    ecfg = EngineConfig(P, block, capacity, axis=axis, m=m, op="min")
+    ecfg = EngineConfig(P, block, capacity, axis=axis, m=m, op="min",
+                        spec=spec)
     INF = jnp.int32(2 ** 30)
     vpad = P * block
     dist0 = jnp.full((vpad,), INF, jnp.int32).at[source].set(0)
@@ -160,7 +171,7 @@ def distributed_bfs(mesh, g, source: int, *, capacity: int = 4096,
         return dist_l, rounds
 
     from jax.sharding import PartitionSpec as Ps
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         shard_fn, mesh=mesh,
         in_specs=(Ps(axis), Ps(axis), Ps(axis), Ps(axis)),
         out_specs=(Ps(axis), Ps()),
@@ -171,13 +182,15 @@ def distributed_bfs(mesh, g, source: int, *, capacity: int = 4096,
 
 def distributed_pagerank(mesh, g, *, iters: int = 20, capacity: int = 4096,
                          m: int | None = None, axis: str = "data",
-                         d: float = 0.85):
+                         d: float = 0.85,
+                         spec: C.CommitSpec | None = None):
     """PageRank over a mesh axis (FF&AS accumulate commits + coalescing)."""
     from repro.graphs.csr import partition_edges
     P = mesh.shape[axis]
     (src, dst, w, val), part = partition_edges(g, P)
     block = part.block
-    ecfg = EngineConfig(P, block, capacity, axis=axis, m=m, op="add")
+    ecfg = EngineConfig(P, block, capacity, axis=axis, m=m, op="add",
+                        spec=spec)
     vpad = P * block
     v = g.num_vertices
     deg_full = jnp.zeros((vpad,), jnp.int32).at[:v].set(
@@ -206,7 +219,7 @@ def distributed_pagerank(mesh, g, *, iters: int = 20, capacity: int = 4096,
 
     from jax.sharding import PartitionSpec as Ps
     rank0 = jnp.where(realv, 1.0 / v, 0.0)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         shard_fn, mesh=mesh,
         in_specs=(Ps(axis),) * 4 + (Ps(axis),) * 3,
         out_specs=Ps(axis), check_vma=False)

@@ -32,20 +32,17 @@ class BfsResult:
     applied: jax.Array
 
 
-def _commit_fn(commit: str, m, sort):
-    if commit == "atomic":
-        return lambda st, msgs: C.atomic_commit(st, msgs, "min", stats=False)
-    return lambda st, msgs: C.coarse_commit(st, msgs, "min", m=m, sort=sort,
-                                            stats=False)
-
-
-@partial(jax.jit, static_argnames=("commit", "m", "sort"))
+@partial(jax.jit, static_argnames=("commit", "m", "sort", "spec"))
 def bfs(g: Graph, source, *, commit: str = "coarse", m: int | None = None,
-        sort: bool = True) -> BfsResult:
+        sort: bool = True, spec: C.CommitSpec | None = None) -> BfsResult:
+    """``spec`` names the commit backend directly; the legacy
+    ``commit``/``m``/``sort`` knobs build one when it is omitted."""
+    if spec is None:
+        spec = C.CommitSpec(backend=commit, m=m, sort=sort, stats=False)
     v = g.num_vertices
     dist0 = jnp.full((v,), INF, jnp.int32).at[source].set(0)
     frontier0 = jnp.zeros((v,), bool).at[source].set(True)
-    cfn = _commit_fn(commit, m, sort)
+    cfn = lambda st, msgs: C.commit(st, msgs, "min", spec)
 
     def cond(state):
         _, frontier, it, *_ = state

@@ -9,9 +9,13 @@ testable against networkx.
 """
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 
+from repro.core import commit as C
+from repro.core.messages import make_messages
 from repro.graphs.csr import Graph
 
 INF = jnp.float32(3.0e38)
@@ -24,8 +28,12 @@ def _shortcut(parent, iters):
     return p
 
 
-@jax.jit
-def boruvka(g: Graph):
+@partial(jax.jit, static_argnames=("spec",))
+def boruvka(g: Graph, *, spec: C.CommitSpec | None = None):
+    if spec is None:
+        # sort=False: scatter-min (atomic tier) == the old segment_min cost;
+        # the sorted path would argsort all E edges per Boruvka round
+        spec = C.CommitSpec(backend="coarse", sort=False, stats=False)
     v, e = g.num_vertices, g.num_edges
     jump = max(int(v).bit_length(), 1)
 
@@ -38,12 +46,16 @@ def boruvka(g: Graph):
         cs, cd = comp[g.src], comp[g.dst]
         cross = cs != cd
         w = jnp.where(cross, g.weights, INF)
-        # two-pass lexicographic segment argmin: (weight, edge id)
-        best_w = jax.ops.segment_min(w, cs, num_segments=v)
+        # two-pass lexicographic argmin (weight, edge id): each pass is an
+        # MF min-commit of per-edge messages into per-component state
+        best_w = C.commit(jnp.full((v,), INF),
+                          make_messages(cs, g.weights, cross),
+                          "min", spec).state
         eid = jnp.arange(e, dtype=jnp.int32)
         cand = cross & (w == best_w[cs]) & (best_w[cs] < INF)
-        best_e = jax.ops.segment_min(jnp.where(cand, eid, e), cs,
-                                     num_segments=v)
+        best_e = C.commit(jnp.full((v,), e, jnp.int32),
+                          make_messages(cs, eid, cand),
+                          "min", spec).state
         has = best_e < e
         sel = jnp.clip(best_e, 0, e - 1)
         # hook: root of cs -> comp of chosen dst

@@ -13,6 +13,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import commit as C
+from repro.core.messages import make_messages
 from repro.graphs.csr import Graph
 
 
@@ -22,9 +24,13 @@ def _hash32(x):
     return x ^ (x >> 16)
 
 
-@partial(jax.jit, static_argnames=("max_rounds",))
+@partial(jax.jit, static_argnames=("max_rounds", "spec"))
 def coloring(g: Graph, *, palette: int | None = None, seed: int = 0,
-             max_rounds: int = 500):
+             max_rounds: int = 500, spec: C.CommitSpec | None = None):
+    if spec is None:
+        # sort=False: the 0/1 recolor mask needs no in-batch resolution —
+        # a plain scatter-max (atomic tier) matches the pre-commit() cost
+        spec = C.CommitSpec(backend="coarse", sort=False, stats=False)
     v = g.num_vertices
     max_deg = jnp.max(g.degrees)
     # Brooks-style palette bound Δ+1 (jnp scalar OK inside where/mod)
@@ -51,8 +57,12 @@ def coloring(g: Graph, *, palette: int | None = None, seed: int = 0,
         coin = (_hash32(eid ^ jnp.asarray(seed * 31 + 7, jnp.uint32) ^
                         _hash32(jnp.asarray(it).astype(jnp.uint32))) & 1) == 0
         loser = jnp.where(coin, g.src, g.dst)
-        new_active = jnp.zeros((v,), bool).at[loser].max(
-            conflict, mode="drop")
+        # the recolor notification is an FF&AS "or" commit into the
+        # next-round active mask (losers may be named by many edges)
+        msgs = make_messages(loser, conflict.astype(jnp.int32),
+                             jnp.ones((g.num_edges,), bool))
+        new_active = C.commit(jnp.zeros((v,), jnp.int32), msgs, "or",
+                              spec).state != 0
         return color, new_active, it + 1
 
     color0 = jnp.zeros((v,), jnp.int32)

@@ -18,18 +18,16 @@ from repro.core.messages import make_messages
 from repro.graphs.csr import Graph
 
 
-@partial(jax.jit, static_argnames=("iters", "commit", "m", "sort"))
+@partial(jax.jit, static_argnames=("iters", "commit", "m", "sort", "spec"))
 def pagerank(g: Graph, *, d: float = 0.85, iters: int = 20,
-             commit: str = "coarse", m: int | None = None, sort: bool = True):
+             commit: str = "coarse", m: int | None = None, sort: bool = True,
+             spec: C.CommitSpec | None = None):
+    if spec is None:
+        spec = C.CommitSpec(backend=commit, m=m, sort=sort, stats=False)
     v = g.num_vertices
     deg = jnp.maximum(g.degrees, 1).astype(jnp.float32)
     dangling = g.degrees == 0
-
-    if commit == "atomic":
-        cfn = lambda st, msgs: C.atomic_commit(st, msgs, "add", stats=False)
-    else:
-        cfn = lambda st, msgs: C.coarse_commit(st, msgs, "add", m=m,
-                                               sort=sort, stats=False)
+    cfn = lambda st, msgs: C.commit(st, msgs, "add", spec)
 
     def body(carry, _):
         rank, conflicts = carry

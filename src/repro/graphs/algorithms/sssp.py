@@ -14,17 +14,15 @@ from repro.graphs.csr import Graph
 INF = jnp.float32(3.0e38)
 
 
-@partial(jax.jit, static_argnames=("commit", "m", "sort"))
+@partial(jax.jit, static_argnames=("commit", "m", "sort", "spec"))
 def sssp(g: Graph, source, *, commit: str = "coarse", m: int | None = None,
-         sort: bool = True):
+         sort: bool = True, spec: C.CommitSpec | None = None):
+    if spec is None:
+        spec = C.CommitSpec(backend=commit, m=m, sort=sort, stats=False)
     v = g.num_vertices
     dist0 = jnp.full((v,), INF, jnp.float32).at[source].set(0.0)
     frontier0 = jnp.zeros((v,), bool).at[source].set(True)
-    if commit == "atomic":
-        cfn = lambda st, msgs: C.atomic_commit(st, msgs, "min", stats=False)
-    else:
-        cfn = lambda st, msgs: C.coarse_commit(st, msgs, "min", m=m,
-                                               sort=sort, stats=False)
+    cfn = lambda st, msgs: C.commit(st, msgs, "min", spec)
 
     def cond(state):
         _, frontier, it = state

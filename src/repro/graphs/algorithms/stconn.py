@@ -6,6 +6,8 @@ different non-white colors proves connectivity (the operator's ``return
 true`` routed back to the spawner, which terminates the run)."""
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 
@@ -16,8 +18,10 @@ from repro.graphs.csr import Graph
 WHITE, GREY, GREEN = -1, 1, 2
 
 
-@jax.jit
-def st_connectivity(g: Graph, s, t):
+@partial(jax.jit, static_argnames=("spec",))
+def st_connectivity(g: Graph, s, t, *, spec: C.CommitSpec | None = None):
+    if spec is None:
+        spec = C.CommitSpec(backend="coarse")
     v = g.num_vertices
     color0 = jnp.full((v,), WHITE, jnp.int32).at[s].set(GREY).at[t].set(GREEN)
     frontier0 = jnp.zeros((v,), bool).at[s].set(True).at[t].set(True)
@@ -34,7 +38,7 @@ def st_connectivity(g: Graph, s, t):
             & (color[g.src] != color[g.dst])
         found = found | jnp.any(meet)
         msgs = make_messages(g.dst, color[g.src], active)
-        res = C.coarse_commit(color, msgs, "first")
+        res = C.commit(color, msgs, "first", spec)
         changed = res.state != color
         return res.state, changed, found, it + 1
 

@@ -7,7 +7,11 @@ The M×B one-hot incidence is materialized in registers/VMEM and reduced:
 * ``add`` (Always-Succeed accumulate): ``contrib = valᵀ · onehot`` — an MXU
   matmul (this is why the AS commit is *serialization-free* on TPU, unlike
   the paper's HTM abort storm for ACC in §5.4.2);
-* ``min``/``max`` (May-Fail): masked VPU reduction over the tile dim.
+* ``min``/``max`` (May-Fail): masked VPU reduction over the tile dim;
+* ``or`` (AS mark): any-reduction of truthy payloads;
+* ``first`` (MF first-writer-wins into empty ``<0`` slots, ties broken by
+  lowest global message id — payloads must be non-negative since negative
+  state encodes "empty").
 
 The (M × B) working set is the transaction's read/write set and must fit
 VMEM — the exact analogue of the paper's HTM speculative-state capacity
@@ -37,11 +41,16 @@ def _identity(op: str, dtype):
     if op == "max":
         return (jnp.iinfo(dtype).min if jnp.issubdtype(dtype, jnp.integer)
                 else -jnp.inf)
+    if op == "first":
+        return -1                                        # empty-slot marker
     return 0
 
 
-def _commit_kernel(idx_ref, val_ref, state_ref, out_ref, *, op: str,
-                   tile_m: int, block_v: int):
+_RANK_INF = 2 ** 30     # plain int: jnp constants can't be kernel captures
+
+
+def _commit_kernel(idx_ref, val_ref, state_ref, out_ref, conf_ref, *,
+                   op: str, tile_m: int, block_v: int):
     b = pl.program_id(0)
     m = pl.program_id(1)
 
@@ -57,6 +66,11 @@ def _commit_kernel(idx_ref, val_ref, state_ref, out_ref, *, op: str,
     relc = jnp.where(mask, rel, 0)
     lane = jax.lax.broadcasted_iota(jnp.int32, (tile_m, block_v), 1)
     onehot = (lane == relc[:, None]) & mask[:, None]     # [M, B]
+
+    # conflict telemetry: in-transaction messages sharing a target in this
+    # block (the abort-statistics analogue; summed over the grid outside)
+    cnt = jnp.sum(onehot.astype(jnp.int32), axis=0)      # [B]
+    conf_ref[0, 0] = jnp.sum(jnp.where(cnt > 1, cnt, 0))
 
     if op == "add":
         if jnp.issubdtype(val.dtype, jnp.floating):
@@ -76,34 +90,57 @@ def _commit_kernel(idx_ref, val_ref, state_ref, out_ref, *, op: str,
         ident = _identity(op, val.dtype)
         cand = jnp.where(onehot, val[:, None], ident)
         out_ref[...] = jnp.maximum(out_ref[...], jnp.max(cand, axis=0))
+    elif op == "or":
+        hit = jnp.any(onehot & (val[:, None] != 0), axis=0)
+        out_ref[...] = jnp.maximum(out_ref[...], hit.astype(out_ref.dtype))
+    elif op == "first":
+        # first-writer-wins into empty (<0) slots; tie-break = lowest
+        # global message id.  Transactions execute in grid order, so the
+        # in-tile winner composes to the batch-wide lowest id.
+        cur = out_ref[...]
+        empty = cur < 0
+        rank = (m * tile_m
+                + jax.lax.broadcasted_iota(jnp.int32, (tile_m, block_v), 0))
+        key = jnp.where(onehot & empty[None, :], rank, _RANK_INF)
+        win = jnp.min(key, axis=0)                       # [B]
+        wsel = onehot & (key == win[None, :]) & (win[None, :] < _RANK_INF)
+        wval = jnp.sum(jnp.where(wsel, val[:, None], 0), axis=0)
+        out_ref[...] = jnp.where(empty & (win < _RANK_INF),
+                                 wval.astype(cur.dtype), cur)
     else:
         raise ValueError(op)
 
 
 @functools.partial(jax.jit, static_argnames=("op", "tile_m", "block_v",
-                                             "interpret"))
+                                             "interpret", "stats"))
 def coarse_commit_pallas(state, idx, val, *, op: str = "min",
                          tile_m: int = 256, block_v: int = 512,
-                         interpret: bool = True):
+                         interpret: bool = True, stats: bool = False):
     """state: [V]; idx: [N] int32 (-1 = masked); val: [N].
 
-    Returns the committed state.  ``interpret=True`` executes on CPU (this
-    container); on real TPU pass ``interpret=False``.
+    Returns the committed state; with ``stats=True`` returns
+    ``(state, conflicts)`` where ``conflicts`` is the int32 count of
+    in-transaction duplicate-target messages accumulated over the grid
+    (one transaction = one ``tile_m`` tile), so :class:`CommitResult`
+    telemetry is available from the kernel path too.  ``interpret=True``
+    executes on CPU (this container); on real TPU pass ``interpret=False``.
     """
     v = state.shape[0]
     n = idx.shape[0]
+    if n == 0 or v == 0:
+        return (state, jnp.zeros((), jnp.int32)) if stats else state
     vpad = (-v) % block_v
     npad = (-n) % tile_m
     ident = _identity(op, state.dtype)
     state_p = jnp.pad(state, (0, vpad),
-                      constant_values=state.dtype.type(ident) if op != "add"
-                      else 0)
+                      constant_values=state.dtype.type(ident)
+                      if op not in ("add", "or") else 0)
     idx_p = jnp.pad(idx, (0, npad), constant_values=-1)
     val_p = jnp.pad(val, (0, npad))
     nb = (v + vpad) // block_v
     nm = (n + npad) // tile_m
 
-    out = pl.pallas_call(
+    out, conf = pl.pallas_call(
         functools.partial(_commit_kernel, op=op, tile_m=tile_m,
                           block_v=block_v),
         grid=(nb, nm),
@@ -112,8 +149,16 @@ def coarse_commit_pallas(state, idx, val, *, op: str = "min",
             pl.BlockSpec((tile_m,), lambda b, m: (m,)),
             pl.BlockSpec((block_v,), lambda b, m: (b,)),
         ],
-        out_specs=pl.BlockSpec((block_v,), lambda b, m: (b,)),
-        out_shape=jax.ShapeDtypeStruct(state_p.shape, state.dtype),
+        out_specs=[
+            pl.BlockSpec((block_v,), lambda b, m: (b,)),
+            pl.BlockSpec((1, 1), lambda b, m: (b, m)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(state_p.shape, state.dtype),
+            jax.ShapeDtypeStruct((nb, nm), jnp.int32),
+        ],
         interpret=interpret,
     )(idx_p, val_p, state_p)
+    if stats:
+        return out[:v], jnp.sum(conf)
     return out[:v]

@@ -23,6 +23,19 @@ def coarse_commit_ref(state, idx, val, *, op: str = "min"):
         red = jax.ops.segment_max(jnp.where(valid, val, _small(val.dtype)),
                                   safe, num_segments=v + 1)[:v]
         return jnp.maximum(state, red.astype(state.dtype))
+    if op == "or":
+        red = jax.ops.segment_max(jnp.where(valid, (val != 0).astype(
+            jnp.int32), 0), safe, num_segments=v + 1)[:v]
+        return jnp.maximum(state, red.astype(state.dtype))
+    if op == "first":
+        # first-writer-wins into empty (<0) slots, lowest message id wins
+        n = idx.shape[0]
+        rank = jnp.arange(n, dtype=jnp.int32)
+        win = jax.ops.segment_min(jnp.where(valid, rank, n), safe,
+                                  num_segments=v + 1)[:v]
+        takes = (state < 0) & (win < n)
+        return jnp.where(takes, val[jnp.clip(win, 0, n - 1)].astype(
+            state.dtype), state)
     raise ValueError(op)
 
 

@@ -142,7 +142,8 @@ def apply_layer(cfg: ModelConfig, rcfg: RunConfig, spec: LayerSpec, p, x,
             b, s, d = h.shape
             y2d, metrics = moe_layer.moe_apply(cfg, p["mlp"],
                                                h.reshape(b * s, d),
-                                               impl=rcfg.moe_impl)
+                                               impl=rcfg.moe_impl,
+                                               mode=mode)
             y = y2d.reshape(b, s, d)
         if cfg.use_post_norm:
             y = L.rmsnorm(y, p["post_norm2"], cfg.norm_eps, zero_centered=True)

@@ -60,8 +60,14 @@ def _expert_ffn(cfg: ModelConfig, p, xb):
     return jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(xb.dtype))
 
 
-def _capacity(cfg: ModelConfig, t: int) -> int:
-    c = int(t * cfg.experts_per_token * cfg.capacity_factor / cfg.num_experts)
+def _capacity(cfg: ModelConfig, t: int, dropless: bool = False) -> int:
+    if dropless:
+        # inference: every assignment fits even if all tokens pick one
+        # expert, so stepwise decode reproduces the batched forward
+        c = t * cfg.experts_per_token
+    else:
+        c = int(t * cfg.experts_per_token * cfg.capacity_factor
+                / cfg.num_experts)
     return max(8, -(-c // 8) * 8)   # round up to 8 lanes
 
 
@@ -74,11 +80,11 @@ def aux_loss(cfg: ModelConfig, probs, experts):
     return e * jnp.sum(me * fe)
 
 
-def moe_apply_aam(cfg: ModelConfig, p, x):
+def moe_apply_aam(cfg: ModelConfig, p, x, mode: str = "train"):
     """AAM dispatch. x: [T, d] -> (y [T, d], aux metrics dict)."""
     t, d = x.shape
     k, e = cfg.experts_per_token, cfg.num_experts
-    cap = _capacity(cfg, t)
+    cap = _capacity(cfg, t, dropless=mode != "train")
     w, experts, probs = _route(cfg, p, x)
 
     # flatten T×k assignments into one message batch
@@ -107,11 +113,11 @@ def moe_apply_aam(cfg: ModelConfig, p, x):
     return out, metrics
 
 
-def moe_apply_dense(cfg: ModelConfig, p, x):
+def moe_apply_dense(cfg: ModelConfig, p, x, mode: str = "train"):
     """GShard one-hot dispatch baseline (oracle for tests/benchmarks)."""
     t, d = x.shape
     k, e = cfg.experts_per_token, cfg.num_experts
-    cap = _capacity(cfg, t)
+    cap = _capacity(cfg, t, dropless=mode != "train")
     w, experts, probs = _route(cfg, p, x)
 
     onehot = jax.nn.one_hot(experts, e, dtype=jnp.int32)       # [T, k, E]
@@ -133,10 +139,18 @@ def moe_apply_dense(cfg: ModelConfig, p, x):
     return out, metrics
 
 
-def moe_apply(cfg: ModelConfig, p, x2d, impl: str = "aam"):
+def moe_apply(cfg: ModelConfig, p, x2d, impl: str = "aam",
+              mode: str = "train"):
+    """Capacity dropping is a train-time throughput tradeoff; inference
+    modes (prefill/decode) are dropless so a stepwise decode reproduces
+    the batched forward exactly (the shmap path is train-only)."""
     if impl == "dense":
-        return moe_apply_dense(cfg, p, x2d)
+        return moe_apply_dense(cfg, p, x2d, mode=mode)
     if impl == "aam_shmap":
+        if mode != "train":
+            # shmap buffers are sized for train capacity; inference must
+            # be dropless, so serve through the SPMD-auto path
+            return moe_apply_aam(cfg, p, x2d, mode=mode)
         from repro.moe.shmap_moe import moe_apply_shmap
         return moe_apply_shmap(cfg, p, x2d)
-    return moe_apply_aam(cfg, p, x2d)
+    return moe_apply_aam(cfg, p, x2d, mode=mode)

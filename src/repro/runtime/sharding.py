@@ -235,6 +235,18 @@ def _all_auto(m) -> bool:
         return True
 
 
+def _manual_axis_names():
+    """Mesh axes currently bound by a manual region (shard_map/pmap).
+
+    On old jax (0.4.x) ``axis_types`` does not exist; the bound axis names
+    live in the tracing axis env instead."""
+    try:
+        from jax._src import core as _core
+        return tuple(_core.get_axis_env().axis_names())
+    except Exception:
+        return ()
+
+
 def get_abstract_mesh():
     try:
         m = jax.sharding.get_abstract_mesh()
@@ -247,6 +259,8 @@ def get_abstract_mesh():
         from jax._src import mesh as mesh_lib
         m = mesh_lib.thread_resources.env.physical_mesh
         if m is not None and not m.empty:
+            if any(a in m.shape for a in _manual_axis_names()):
+                return None     # inside shard_map over this mesh: no-op
             return m if _all_auto(m) else None
     except Exception:
         pass

@@ -1,0 +1,97 @@
+"""Offline stand-in for the ``hypothesis`` property-testing API.
+
+The tier-1 suite must collect and pass in environments with no network and
+no ``hypothesis`` wheel.  This module re-exports the real library when it
+is importable and otherwise provides a minimal deterministic shim:
+``@given`` runs the test body against ``max_examples`` examples drawn from
+a ``numpy.random.Generator`` seeded from the test name, so failures are
+reproducible run-to-run and the same test bodies work in both
+environments.
+
+Only the API surface this repo uses is implemented: ``given``,
+``settings``, and ``strategies.{integers, booleans, lists, sampled_from,
+composite}``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import types
+    import zlib
+
+    import numpy as np
+
+    DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+        def do_draw(self, rng: np.random.Generator):
+            return self._draw(rng)
+
+    def _integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    def _booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    def _sampled_from(elements):
+        seq = list(elements)
+        return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+    def _lists(elements, *, min_size=0, max_size=10):
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.do_draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    def _composite(fn):
+        def build(*args, **kwargs):
+            def draw(rng):
+                return fn(lambda s: s.do_draw(rng), *args, **kwargs)
+            return _Strategy(draw)
+        return build
+
+    strategies = types.SimpleNamespace(
+        integers=_integers, booleans=_booleans, lists=_lists,
+        sampled_from=_sampled_from, composite=_composite)
+
+    def settings(**kwargs):
+        def deco(fn):
+            fn._shim_settings = kwargs
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            cfg = getattr(fn, "_shim_settings", {})
+            n_examples = cfg.get("max_examples", DEFAULT_MAX_EXAMPLES)
+            # seed from the test name: deterministic, distinct per test
+            seed = zlib.crc32(fn.__qualname__.encode())
+
+            def runner():
+                rng = np.random.default_rng(seed)
+                for i in range(n_examples):
+                    args = [s.do_draw(rng) for s in strats]
+                    try:
+                        fn(*args)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"{fn.__name__} failed on shim example {i}: "
+                            f"args={args!r}") from e
+
+            # zero-arg signature on purpose: pytest must not treat the
+            # property arguments as fixtures (so no functools.wraps)
+            runner.__name__ = fn.__name__
+            runner.__qualname__ = fn.__qualname__
+            runner.__module__ = fn.__module__
+            runner.__doc__ = fn.__doc__
+            runner.hypothesis_shim = True
+            return runner
+        return deco

@@ -3,15 +3,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
-from repro.core.commit import atomic_commit, coarse_commit
+from repro.core.commit import (BACKENDS, OPS, CommitSpec, atomic_commit,
+                               coarse_commit, commit)
 from repro.core.messages import make_messages
 
 SET = dict(max_examples=25, deadline=None)
 
 
 def _oracle(state, tgt, val, valid, op):
+    """Sequential reference: one message at a time, in arrival order."""
     out = np.array(state, copy=True)
     for t, v, ok in zip(tgt, val, valid):
         if not ok:
@@ -23,7 +25,10 @@ def _oracle(state, tgt, val, valid, op):
         elif op == "add":
             out[t] += v
         elif op == "or":
-            out[t] = out[t] or True
+            out[t] = max(out[t], int(v != 0))
+        elif op == "first":
+            if out[t] < 0:
+                out[t] = v
     return out
 
 
@@ -138,3 +143,104 @@ def test_conflict_telemetry_counts_duplicates():
                          jnp.ones((6,), jnp.float32), jnp.ones((6,), bool))
     res = coarse_commit(state, msgs, "add")
     assert int(res.conflicts) == 5  # 2 on vertex 1 + 3 on vertex 3
+
+
+# ---------------------------------------------------------------------------
+# parity matrix: every op x every backend == the sequential oracle
+# ---------------------------------------------------------------------------
+
+V_PAR = 61
+
+
+def _init_state(op, rng):
+    if op == "min":
+        return np.full(V_PAR, 1000, np.int32)
+    if op == "max":
+        return np.full(V_PAR, -1000, np.int32)
+    if op == "first":
+        # mix of empty (-1) and occupied slots
+        return np.where(rng.random(V_PAR) < 0.5, -1, 777).astype(np.int32)
+    return np.zeros(V_PAR, np.int32)    # add / or
+
+
+def _parity_batches(op, rng):
+    """(name, tgt, val, valid) cases incl. the edge cases."""
+    n = 120
+    # 'first' encodes empty as negative state => payloads non-negative;
+    # 'or' payloads are truth values
+    lo = 0 if op == "first" else (-2 if op == "or" else -50)
+    hi = 2 if op == "or" else 50
+    yield ("random", rng.integers(0, V_PAR, n),
+           rng.integers(lo, hi, n), rng.random(n) < 0.8)
+    yield ("duplicate_target", np.full(n, 7),
+           rng.integers(lo, hi, n), np.ones(n, bool))
+    yield ("all_invalid", rng.integers(0, V_PAR, n),
+           rng.integers(lo, hi, n), np.zeros(n, bool))
+    yield ("empty_batch", np.zeros(0, np.int64), np.zeros(0, np.int64),
+           np.zeros(0, bool))
+
+
+@pytest.mark.parametrize("op", OPS)
+def test_parity_matrix(op):
+    """All five ops produce bit-identical final state on every backend via
+    the single commit() entry point, and identical success masks for
+    whole-batch (m=None) transactions."""
+    rng = np.random.default_rng(sum(map(ord, op)))
+    for name, tgt, val, valid in _parity_batches(op, rng):
+        state = _init_state(op, rng)
+        exp = _oracle(state, tgt, val, valid, op)
+        msgs = make_messages(jnp.asarray(tgt, jnp.int32),
+                             jnp.asarray(val, jnp.int32),
+                             jnp.asarray(valid))
+        success = {}
+        for backend in BACKENDS:
+            spec = CommitSpec(backend=backend, m=None, tile_m=32)
+            res = commit(jnp.asarray(state), msgs, op, spec)
+            np.testing.assert_array_equal(
+                np.asarray(res.state), exp,
+                err_msg=f"{op}/{backend}/{name} state diverges from oracle")
+            success[backend] = np.asarray(res.success)
+        for backend in BACKENDS[1:]:
+            np.testing.assert_array_equal(
+                success[BACKENDS[0]], success[backend],
+                err_msg=f"{op}/{backend}/{name} success mask diverges")
+
+
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("m", [1, 7, 32])
+def test_parity_matrix_tiled(op, m):
+    """Transaction size must not change the final state on any backend."""
+    rng = np.random.default_rng(17 + m)
+    for name, tgt, val, valid in _parity_batches(op, rng):
+        state = _init_state(op, rng)
+        exp = _oracle(state, tgt, val, valid, op)
+        msgs = make_messages(jnp.asarray(tgt, jnp.int32),
+                             jnp.asarray(val, jnp.int32),
+                             jnp.asarray(valid))
+        for backend in BACKENDS:
+            res = commit(jnp.asarray(state), msgs, op,
+                         CommitSpec(backend=backend, m=m))
+            np.testing.assert_array_equal(
+                np.asarray(res.state), exp,
+                err_msg=f"{op}/{backend}/{name}/m={m} diverges from oracle")
+
+
+def test_pallas_falls_back_for_unsupported_dtypes():
+    """pallas backend silently degrades to coarse on payloads the kernel
+    does not take (bool state / vector payloads)."""
+    msgs = make_messages(jnp.asarray([0, 1], jnp.int32),
+                         jnp.asarray([True, False]))
+    res = commit(jnp.zeros((4,), bool), msgs, "or",
+                 CommitSpec(backend="pallas"))
+    np.testing.assert_array_equal(np.asarray(res.state),
+                                  [True, False, False, False])
+
+
+def test_commit_rejects_unknown_op_and_backend():
+    msgs = make_messages(jnp.asarray([0], jnp.int32),
+                         jnp.asarray([1], jnp.int32))
+    state = jnp.zeros((2,), jnp.int32)
+    with pytest.raises(ValueError):
+        commit(state, msgs, "xor")
+    with pytest.raises(ValueError):
+        commit(state, msgs, "min", CommitSpec(backend="cuda"))

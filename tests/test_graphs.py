@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import networkx as nx
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.graphs.csr import from_edges
 from repro.graphs.generators import (erdos_renyi, grid2d, kronecker,

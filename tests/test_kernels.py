@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels import ops
 from repro.kernels.ref import bucket_count_ref, coarse_commit_ref, ssd_chunk_ref
@@ -24,6 +24,40 @@ def test_coarse_commit_sweep(op, dtype, v, n):
     out = ops.coarse_commit(state, idx, val, op=op, tile_m=128, block_v=256)
     exp = coarse_commit_ref(state, idx, val, op=op)
     np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5)
+
+
+@pytest.mark.parametrize("op", ["or", "first"])
+@pytest.mark.parametrize("v,n", [(64, 32), (513, 1000), (100, 4096)])
+def test_coarse_commit_or_first_sweep(op, v, n):
+    if op == "or":
+        state = jnp.asarray(RNG.integers(0, 2, v), jnp.int32)
+        val = jnp.asarray(RNG.integers(0, 2, n), jnp.int32)
+    else:  # first: negative state = empty slot, payloads non-negative
+        state = jnp.asarray(np.where(RNG.random(v) < 0.5, -1,
+                                     RNG.integers(0, 50, v)), jnp.int32)
+        val = jnp.asarray(RNG.integers(0, 50, n), jnp.int32)
+    idx = jnp.asarray(RNG.integers(-1, v, n), jnp.int32)
+    out = ops.coarse_commit(state, idx, val, op=op, tile_m=128, block_v=256)
+    exp = coarse_commit_ref(state, idx, val, op=op)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_coarse_commit_stats_output():
+    """stats=True returns the in-transaction duplicate-target count."""
+    from repro.kernels.coarse_commit import coarse_commit_pallas
+    state = jnp.zeros((16,), jnp.int32)
+    idx = jnp.asarray([1, 1, 2, 3, 3, 3, -1, -1], jnp.int32)
+    val = jnp.ones((8,), jnp.int32)
+    out, conf = coarse_commit_pallas(state, idx, val, op="add", tile_m=8,
+                                     block_v=16, stats=True)
+    assert int(conf) == 5  # 2 on vertex 1 + 3 on vertex 3
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(coarse_commit_ref(state, idx, val,
+                                                      op="add")))
+    # two transactions of 4: the duplicate pair on vertex 3 splits 2|1
+    _, conf2 = coarse_commit_pallas(state, idx, val, op="add", tile_m=4,
+                                    block_v=16, stats=True)
+    assert int(conf2) == 4
 
 
 @given(st.integers(1, 500), st.integers(2, 300), st.integers(32, 256),

@@ -53,7 +53,9 @@ def test_arch_smoke_forward_and_grad(arch):
                                   "qwen3-moe-235b-a22b"])
 def test_decode_matches_forward(arch):
     """Stepwise decode (KV cache / ring buffers / SSM states) reproduces the
-    teacher-forced forward logits exactly."""
+    teacher-forced forward logits exactly.  Both sides run inference
+    semantics (prefill): MoE capacity dropping is train-only, so a batched
+    forward and a stepwise decode see identical dropless routing."""
     cfg = smoke_model(ARCHS[arch])
     rcfg = RunConfig(model=cfg, shape=SHAPE, remat="none")
     params, _ = M.init(cfg, KEY)
@@ -61,7 +63,7 @@ def test_decode_matches_forward(arch):
     toks = jax.random.randint(jax.random.PRNGKey(1), (2, s + 1), 0,
                               cfg.vocab_size)
     logits_full, _, _ = M._forward(cfg, rcfg, params, {"tokens": toks},
-                                   mode="train")
+                                   mode="prefill")
     cache = M.init_cache(cfg, rcfg, 2, s + 8)
     lg = None
     for t in range(s + 1):

@@ -7,6 +7,10 @@ import sys
 import textwrap
 from pathlib import Path
 
+import pytest
+
+pytestmark = pytest.mark.slow   # spawns 8-device subprocesses
+
 REPO = Path(__file__).resolve().parent.parent
 
 CHILD = """

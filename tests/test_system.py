@@ -16,6 +16,8 @@ from repro.models import model as M
 from repro.train.optimizer import make_optimizer
 from repro.train.train_step import make_train_step
 
+pytestmark = pytest.mark.slow   # full train-loop / system tests
+
 
 def _train(cfg, rcfg, steps, params=None, opt_state=None, start=0, seed=0):
     opt = make_optimizer(rcfg)
