@@ -1,0 +1,28 @@
+# Test tiers (see README "Tests").
+#
+#   make tier1   fast pre-commit loop: everything except the subprocess-
+#                spawning distributed/system tests
+#   make tier2   the `slow` 8-device subprocess suite under a FIXED XLA
+#                flag matrix: every child inherits the same deterministic
+#                flags (REPRO_XLA_EXTRA is appended to each child's
+#                XLA_FLAGS by tests/test_distributed.py::run_devices), so
+#                tier2 failures reproduce run-to-run
+#   make test    both tiers
+PY ?= python
+export PYTHONPATH := src
+
+TIER2_XLA := --xla_cpu_multi_thread_eigen=false
+TIER2_ENV := REPRO_XLA_EXTRA="$(TIER2_XLA)" PYTHONHASHSEED=0
+
+.PHONY: tier1 tier2 test bench
+
+tier1:
+	$(PY) -m pytest -x -q -m "not slow"
+
+tier2:
+	$(TIER2_ENV) $(PY) -m pytest -q -m slow
+
+test: tier1 tier2
+
+bench:
+	$(PY) -m benchmarks.run

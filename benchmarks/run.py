@@ -37,6 +37,7 @@ BACKEND_AWARE = {
     "fig4": lambda b: {"backend": b},
     "fig5": lambda b: {"backend": b},
     "fig6": lambda b: {"backend": b},
+    "fig7": lambda b: {"backend": b},
     "table1": lambda b: {"backend": b},
 }
 

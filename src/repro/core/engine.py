@@ -6,17 +6,36 @@ shard holds its vertex state slice and the edges whose source it owns.  One
 
   1. bucket messages per destination shard (coalescing, capacity C);
   2. one ``all_to_all`` exchanges the coalesced [P, C] buffers;
-  3. owners run the coarse commit (transactions of size M);
+  3. owners run the commit (transactions of size M, any backend);
   4. (FR) success flags return to spawners by the reverse ``all_to_all``.
 
 Messages beyond C stay *pending* and go in the next sub-round — the
 coalescing factor literally is the paper's C: fewer, larger network
 messages, amortized per-message overhead (§5.6).
+
+The public surface is the *harness*: :func:`run_distributed` executes an
+:class:`AlgorithmSpec` — an ``init`` hook producing sharded state and a
+``round_fn`` hook emitting one round of messages through a
+:class:`WaveRuntime` — and owns partitioning, the round loop, the FR return
+path, and conflict/sub-round telemetry.  All six paper case-studies
+(`repro.graphs.algorithms`) are instances; ``distributed_bfs`` and
+``distributed_pagerank`` re-export from their algorithm modules.
+
+Payloads are *pytrees*: a routed message may carry several fields (e.g.
+SSSP's f32 distances next to i32 targets, ST-connectivity's two frontier
+bits) through one bucket plan and one exchange per field.
+
+.. deprecated::
+   Calling :func:`route_wave` directly is deprecated — it is a single
+   sub-round with no requeue of coalescing overflow and no delivery
+   guarantee.  Go through :func:`run_distributed` (algorithms) or
+   :func:`wave_until_delivered` (custom protocols, e.g.
+   `repro.core.ownership`) instead.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -46,12 +65,18 @@ class EngineConfig:
         return C.CommitSpec(backend="coarse", m=self.m)
 
 
-def route_wave(ecfg: EngineConfig, state_l, target, payload, pending):
-    """One coalescing sub-round under shard_map.
+def _tree_all_to_all(x, axis: str):
+    return jax.tree.map(
+        lambda a: jax.lax.all_to_all(a, axis, 0, 0, tiled=True), x)
 
-    state_l: [block] local owner slice; target: [n] GLOBAL vertex ids;
-    pending: [n] bool messages still to deliver.
-    Returns (state_l, delivered_mask, success, conflicts)."""
+
+def route_wave(ecfg: EngineConfig, state_l, target, payload, pending):
+    """One coalescing sub-round under shard_map (DEPRECATED for direct use —
+    see module docstring; overflow beyond C is NOT requeued here).
+
+    state_l: pytree of [block] local owner slices; payload: matching pytree
+    of [n] fields; target: [n] GLOBAL vertex ids; pending: [n] bool.
+    Returns (state_l, delivered_mask, success pytree, conflicts)."""
     P, Cp = ecfg.num_shards, ecfg.capacity
     owner = target // ecfg.block
     plan, _ = plan_buckets_sorted(owner, pending, P, Cp)
@@ -61,167 +86,359 @@ def route_wave(ecfg: EngineConfig, state_l, target, payload, pending):
                                fill=-1)
     buf_p = scatter_to_buckets(plan, payload, P, Cp, fill=0)
     rt = jax.lax.all_to_all(buf_t, ecfg.axis, 0, 0, tiled=True)
-    rp = jax.lax.all_to_all(buf_p, ecfg.axis, 0, 0, tiled=True)
-    # local commit at the owner
+    rp = _tree_all_to_all(buf_p, ecfg.axis)
+    # local commit at the owner, one per (state, payload) field pair
     shard = jax.lax.axis_index(ecfg.axis)
-    local_idx = rt.reshape(-1) - shard * ecfg.block
+    local_idx = jnp.clip(rt.reshape(-1) - shard * ecfg.block, 0,
+                         ecfg.block - 1)
     valid = (rt.reshape(-1) >= 0)
-    msgs = make_messages(jnp.clip(local_idx, 0, ecfg.block - 1),
-                         rp.reshape(-1), valid)
-    res = C.commit(state_l, msgs, ecfg.op, ecfg.commit_spec)
-    # FR return path: success flags back to spawners
-    back = jax.lax.all_to_all(res.success.reshape(P, Cp), ecfg.axis, 0, 0,
-                              tiled=True)
-    success = gather_from_buckets(back, plan, Cp, fill=False)
-    return res.state, kept, success, res.conflicts
+    st_leaves, tdef = jax.tree_util.tree_flatten(state_l)
+    pl_leaves = tdef.flatten_up_to(rp)
+    new_st, succs = [], []
+    conflicts = jnp.zeros((), jnp.int32)
+    for i, (st, pl) in enumerate(zip(st_leaves, pl_leaves)):
+        res = C.commit(st, make_messages(local_idx, pl.reshape(-1), valid),
+                       ecfg.op, ecfg.commit_spec)
+        new_st.append(res.state)
+        if i == 0:
+            # slot collisions depend on (target, valid) only, which every
+            # payload field shares — count conflicts once per routed
+            # message, not once per field
+            conflicts = res.conflicts
+        succs.append(res.success)
+    # FR return path: ONE reverse exchange carries every field's flags
+    back = jax.lax.all_to_all(
+        jnp.stack(succs, axis=-1).reshape(P, Cp, len(succs)),
+        ecfg.axis, 0, 0, tiled=True)
+    succ = tdef.unflatten(
+        [gather_from_buckets(back[..., i], plan, Cp, fill=False)
+         for i in range(len(succs))])
+    return tdef.unflatten(new_st), kept, succ, conflicts
 
 
 def wave_until_delivered(ecfg: EngineConfig, state_l, target, payload,
                          valid, max_subrounds: int = 64):
-    """Deliver ALL messages (sub-rounds until nothing pending)."""
+    """Deliver ALL messages (sub-rounds until nothing pending).
+
+    Returns (state_l, success pytree, conflicts, subrounds, delivered_all).
+    ``delivered_all`` is False when ``max_subrounds`` was exhausted with
+    messages still pending — callers MUST surface it instead of silently
+    dropping the tail (the capacity-C requeue loop normally terminates for
+    any C >= 1: each sub-round delivers up to C messages per owner)."""
     n = target.shape[0]
+    st_leaves, tdef = jax.tree_util.tree_flatten(state_l)
+    succ0 = tdef.unflatten([jnp.zeros((n,), bool) for _ in st_leaves])
 
     def cond(c):
-        _, pending, *_ = c
+        _, pending, _, _, it = c
         return (jax.lax.psum(jnp.sum(pending.astype(jnp.int32)), ecfg.axis)
-                > 0) & (c[4] < max_subrounds)
+                > 0) & (it < max_subrounds)
 
     def body(c):
         state_l, pending, success, conflicts, it = c
         state_l, kept, succ, cf = route_wave(ecfg, state_l, target, payload,
                                              pending)
-        success = jnp.where(kept, succ, success)
+        success = jax.tree.map(lambda sn, so: jnp.where(kept, sn, so),
+                               succ, success)
         return (state_l, pending & ~kept, success, conflicts + cf, it + 1)
 
-    state_l, _, success, conflicts, subrounds = jax.lax.while_loop(
-        cond, body, (state_l, valid, jnp.zeros((n,), bool),
+    state_l, pending, success, conflicts, subrounds = jax.lax.while_loop(
+        cond, body, (state_l, valid, succ0,
                      jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32)))
-    return state_l, success, conflicts, subrounds
+    delivered_all = (jax.lax.psum(jnp.sum(pending.astype(jnp.int32)),
+                                  ecfg.axis) == 0)
+    # commits run at the owners: the Tables-3c/3f conflict total is the
+    # sum over shards (replicated, so Ps() out-specs stay consistent)
+    conflicts = jax.lax.psum(conflicts, ecfg.axis)
+    return state_l, success, conflicts, subrounds, delivered_all
 
 
 def route_messages(ecfg: EngineConfig, target, payload, valid):
     """Route one sub-round of messages to owners WITHOUT committing —
-    callers implement custom owner-side handlers (ownership protocol).
+    callers implement custom owner-side handlers (ownership protocol,
+    pointer-jumping reads).  ``payload`` may be a pytree of [n] fields, or
+    ``None`` for pure read requests (skips the payload exchange).
 
-    Returns (local_idx [P*C], payload [P*C], rvalid [P*C], plan, kept)."""
+    Returns (local_idx [P*C], payload pytree of [P*C] or None,
+    rvalid [P*C], plan, kept)."""
     P, Cp = ecfg.num_shards, ecfg.capacity
     owner = target // ecfg.block
     plan, _ = plan_buckets_sorted(owner, valid, P, Cp)
     kept = plan.kept
     buf_t = scatter_to_buckets(plan, jnp.where(kept, target, -1), P, Cp,
                                fill=-1)
-    buf_p = scatter_to_buckets(plan, payload, P, Cp, fill=0)
     rt = jax.lax.all_to_all(buf_t, ecfg.axis, 0, 0, tiled=True)
-    rp = jax.lax.all_to_all(buf_p, ecfg.axis, 0, 0, tiled=True)
+    if payload is None:
+        rp_flat = None
+    else:
+        buf_p = scatter_to_buckets(plan, payload, P, Cp, fill=0)
+        rp = _tree_all_to_all(buf_p, ecfg.axis)
+        rp_flat = jax.tree.map(lambda b: b.reshape(-1), rp)
     shard = jax.lax.axis_index(ecfg.axis)
     local_idx = rt.reshape(-1) - shard * ecfg.block
     rvalid = rt.reshape(-1) >= 0
-    return local_idx, rp.reshape(-1), rvalid, plan, kept
+    return local_idx, rp_flat, rvalid, plan, kept
 
 
-def return_to_spawners(ecfg: EngineConfig, reply, plan):
-    """Reverse all_to_all of per-slot replies (FR return path)."""
+def return_to_spawners(ecfg: EngineConfig, reply, plan: BucketPlan, fill=0):
+    """Reverse all_to_all of per-slot replies (FR return path).  ``reply``
+    may be a pytree of [P*C] fields; unkept slots read as ``fill``."""
     P, Cp = ecfg.num_shards, ecfg.capacity
-    back = jax.lax.all_to_all(reply.reshape(P, Cp), ecfg.axis, 0, 0,
-                              tiled=True)
-    return gather_from_buckets(back, plan, Cp, fill=False)
+    back = _tree_all_to_all(
+        jax.tree.map(lambda r: r.reshape(P, Cp), reply), ecfg.axis)
+    return gather_from_buckets(back, plan, Cp, fill=fill)
+
+
+def gather_until_answered(ecfg: EngineConfig, arr_l, idx, valid, fill=0,
+                          max_subrounds: int = 64):
+    """Remote gather: read the distributed array ``arr_l`` (pytree of
+    [block] owner slices) at GLOBAL indices ``idx`` [n], requeueing
+    coalescing overflow until every valid request is answered.  This is the
+    FR read path (``route_messages`` + owner lookup + ``return_to_spawners``)
+    — the ownership-protocol building block Boruvka's pointer-jumping uses.
+
+    Returns (values pytree of [n] — ``fill`` where ~valid, subrounds,
+    delivered_all)."""
+    n = idx.shape[0]
+    leaves, tdef = jax.tree_util.tree_flatten(arr_l)
+    out0 = tdef.unflatten([jnp.full((n,), fill, a.dtype) for a in leaves])
+
+    def cond(c):
+        _, pending, it = c
+        return (jax.lax.psum(jnp.sum(pending.astype(jnp.int32)), ecfg.axis)
+                > 0) & (it < max_subrounds)
+
+    def body(c):
+        out, pending, it = c
+        local_idx, _, rvalid, plan, kept = route_messages(
+            ecfg, idx, None, pending)
+        lidx = jnp.clip(local_idx, 0, ecfg.block - 1)
+        reply = jax.tree.map(
+            lambda a: jnp.where(rvalid, a[lidx], jnp.asarray(fill, a.dtype)),
+            arr_l)
+        back = return_to_spawners(ecfg, reply, plan, fill=fill)
+        out = jax.tree.map(lambda o, b: jnp.where(kept, b, o), out, back)
+        return out, pending & ~kept, it + 1
+
+    out, pending, subrounds = jax.lax.while_loop(
+        cond, body, (out0, valid, jnp.zeros((), jnp.int32)))
+    delivered_all = (jax.lax.psum(jnp.sum(pending.astype(jnp.int32)),
+                                  ecfg.axis) == 0)
+    return out, subrounds, delivered_all
 
 
 # ---------------------------------------------------------------------------
-# Distributed algorithms on the engine
+# The distributed-algorithm harness
 # ---------------------------------------------------------------------------
 
 
-def distributed_bfs(mesh, g, source: int, *, capacity: int = 4096,
+@dataclasses.dataclass(frozen=True)
+class ShardLayout:
+    """Static shapes of one distributed run (1-D partition, paper §3.1)."""
+    num_shards: int
+    block: int          # vertices per shard (padded)
+    emax: int           # edges per shard (padded)
+    num_vertices: int
+    num_edges: int
+
+    @property
+    def vpad(self) -> int:
+        return self.num_shards * self.block
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class EdgeSlice:
+    """One shard's edge slice (sources owned locally, padded to emax)."""
+    src: jax.Array      # int32 [emax] GLOBAL source ids
+    dst: jax.Array      # int32 [emax] GLOBAL destination ids
+    weight: jax.Array   # float32 [emax]
+    valid: jax.Array    # bool [emax]
+    eid: jax.Array      # int32 [emax] ORIGINAL edge ids (tie-breaking)
+    my_src: jax.Array   # int32 [emax] local row of src (clipped to block)
+
+
+class WaveRuntime:
+    """Per-round handle the harness passes to ``round_fn``.
+
+    Wraps the wave primitives with an :class:`EngineConfig` bound to the
+    run and accumulates telemetry (conflicts, sub-rounds, delivery flag)
+    across every wave/gather the round issues.  Do NOT call its methods
+    from inside ``lax.scan``/``lax.while_loop`` bodies of the round — the
+    accumulators are trace-level.
+    """
+
+    def __init__(self, ecfg: EngineConfig, layout: ShardLayout,
+                 max_subrounds: int):
+        self.ecfg = ecfg
+        self.layout = layout
+        self.max_subrounds = max_subrounds
+        self.conflicts = jnp.zeros((), jnp.int32)
+        self.subrounds = jnp.zeros((), jnp.int32)
+        self.delivered_all = jnp.ones((), bool)
+
+    @property
+    def shard(self) -> jax.Array:
+        return jax.lax.axis_index(self.ecfg.axis)
+
+    @property
+    def gid(self) -> jax.Array:
+        """GLOBAL vertex ids of the local block."""
+        return self.shard * self.ecfg.block + jnp.arange(
+            self.ecfg.block, dtype=jnp.int32)
+
+    def psum(self, x):
+        return jax.lax.psum(x, self.ecfg.axis)
+
+    def any(self, mask) -> jax.Array:
+        """Global any() over a per-shard bool array."""
+        return self.psum(jnp.sum(mask.astype(jnp.int32))) > 0
+
+    def wave(self, state_l, target, payload, valid, *, op: str):
+        """Deliver + commit messages ``(target, payload)`` with ``op``;
+        returns (state_l, success pytree).  state_l/payload are matching
+        pytrees of [block]/[n] fields sharing one bucket plan."""
+        ecfg = dataclasses.replace(self.ecfg, op=op)
+        state_l, success, cf, sr, dall = wave_until_delivered(
+            ecfg, state_l, target, payload, valid, self.max_subrounds)
+        self.conflicts = self.conflicts + cf
+        self.subrounds = self.subrounds + sr
+        self.delivered_all = self.delivered_all & dall
+        return state_l, success
+
+    def gather(self, arr_l, idx, valid=None, *, fill=0):
+        """Remote gather of the distributed array ``arr_l`` at GLOBAL
+        indices ``idx`` (``fill`` where ~valid)."""
+        if valid is None:
+            valid = jnp.ones(idx.shape, bool)
+        out, sr, dall = gather_until_answered(
+            self.ecfg, arr_l, idx, valid, fill=fill,
+            max_subrounds=self.max_subrounds)
+        self.subrounds = self.subrounds + sr
+        self.delivered_all = self.delivered_all & dall
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class AlgorithmSpec:
+    """One irregular algorithm expressed as AAM rounds.
+
+    name:         display/registry name.
+    message_type: AAM taxonomy tag of the dominant message ("FF&AS",
+                  "FF&MF", "FR&AS", "FR&MF") — documentation/telemetry.
+    init:         ``(g, layout) -> (state, scalars)``; ``state`` is a
+                  pytree of GLOBAL arrays whose leading dim is divisible by
+                  ``num_shards`` ([vpad] vertex state, [P*emax] edge
+                  state), ``scalars`` a pytree of replicated scalars.
+    round_fn:     ``(rt, edges, state, scalars, it) ->
+                  (state, scalars, active)`` — one round: read the local
+                  :class:`EdgeSlice`, issue waves/gathers through the
+                  :class:`WaveRuntime`, return the globally-consistent
+                  ``active`` bool (False terminates the loop).
+    max_rounds:   ``(g, layout) -> int`` round cap.
+    """
+    name: str
+    message_type: str
+    init: Callable[..., Any]
+    round_fn: Callable[..., Any]
+    max_rounds: Callable[..., int]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DistributedResult:
+    """Harness output: final state + the telemetry the paper tabulates.
+
+    delivered_all is the anti-wedge flag: False means some wave hit
+    ``max_subrounds`` with messages still pending, i.e. the returned state
+    is NOT the fixed point — assert on it (the parity matrix does)."""
+    state: Any              # pytree of GLOBAL (padded) arrays
+    scalars: Any            # replicated scalar pytree
+    rounds: jax.Array       # int32 — algorithm rounds executed
+    conflicts: jax.Array    # int32 — commit conflicts across all waves
+    subrounds: jax.Array    # int32 — coalescing sub-rounds across all waves
+    delivered_all: jax.Array  # bool
+
+
+def run_distributed(alg: AlgorithmSpec, mesh, g, *, capacity: int = 4096,
                     m: int | None = None, axis: str = "data",
-                    spec: C.CommitSpec | None = None):
-    """BFS over a mesh axis. Returns (dist [P*block], rounds)."""
-    from repro.graphs.csr import partition_edges
-    P = mesh.shape[axis]
-    (src, dst, w, val), part = partition_edges(g, P)
-    block = part.block
-    ecfg = EngineConfig(P, block, capacity, axis=axis, m=m, op="min",
-                        spec=spec)
-    INF = jnp.int32(2 ** 30)
-    vpad = P * block
-    dist0 = jnp.full((vpad,), INF, jnp.int32).at[source].set(0)
+                    spec: C.CommitSpec | None = None,
+                    max_subrounds: int = 64,
+                    edges=None) -> DistributedResult:
+    """Execute ``alg`` over ``mesh[axis]`` shards — the one distributed
+    driver behind all six ``distributed_*`` algorithms.
 
-    def shard_fn(dist_l, src_l, dst_l, val_l):
-        src_l, dst_l, val_l = src_l[0], dst_l[0], val_l[0]
+    Owns: 1-D edge partitioning, the shard_map wrapper, the round loop
+    (``while active and rounds < max_rounds``), and telemetry aggregation.
+    ``capacity``/``m`` are the paper's C (coalescing factor) and M
+    (transaction size); ``spec`` picks the commit backend per
+    :class:`repro.core.commit.CommitSpec`.  ``edges`` accepts a
+    precomputed ``partition_edges(g, mesh.shape[axis])`` result so
+    wrappers that also need the lane layout (Boruvka's edge-state
+    finalize) partition only once.
+    """
+    from jax.sharding import PartitionSpec as Ps
+    from repro.graphs.csr import partition_edges
+
+    P = mesh.shape[axis]
+    if edges is None:
+        edges = partition_edges(g, P)
+    (src, dst, w, val, eid), part = edges
+    layout = ShardLayout(P, part.block, src.shape[1], g.num_vertices,
+                         g.num_edges)
+    ecfg = EngineConfig(P, part.block, capacity, axis=axis, m=m, spec=spec)
+    state0, scalars0 = alg.init(g, layout)
+    max_rounds = int(alg.max_rounds(g, layout))
+
+    def shard_fn(state, scalars, src_l, dst_l, w_l, val_l, eid_l):
         shard = jax.lax.axis_index(axis)
-        my_src = src_l - shard * block
+        edges = EdgeSlice(
+            src=src_l[0], dst=dst_l[0], weight=w_l[0], valid=val_l[0],
+            eid=eid_l[0],
+            my_src=jnp.clip(src_l[0] - shard * part.block, 0,
+                            part.block - 1))
+        z = jnp.zeros((), jnp.int32)
 
         def cond(c):
-            _, frontier, it = c
-            total = jax.lax.psum(jnp.sum(frontier.astype(jnp.int32)), axis)
-            return (total > 0) & (it < vpad)
+            return c[-1] & (c[-2] < max_rounds)
 
         def body(c):
-            dist_l, frontier, it = c
-            active = frontier[jnp.clip(my_src, 0, block - 1)] & val_l
-            payload = dist_l[jnp.clip(my_src, 0, block - 1)] + 1
-            new_dist, _, _, _ = wave_until_delivered(
-                ecfg, dist_l, dst_l, payload, active)
-            changed = new_dist != dist_l
-            return new_dist, changed, it + 1
+            state, scalars, conflicts, subrounds, dall, it, _ = c
+            rt = WaveRuntime(ecfg, layout, max_subrounds)
+            state, scalars, active = alg.round_fn(rt, edges, state, scalars,
+                                                  it)
+            return (state, scalars, conflicts + rt.conflicts,
+                    subrounds + rt.subrounds, dall & rt.delivered_all,
+                    it + 1, active)
 
-        frontier0 = dist_l != INF
-        dist_l, _, rounds = jax.lax.while_loop(
-            cond, body, (dist_l, frontier0, jnp.zeros((), jnp.int32)))
-        return dist_l, rounds
+        (state, scalars, conflicts, subrounds, dall, rounds, _) = \
+            jax.lax.while_loop(cond, body,
+                               (state, scalars, z, z, jnp.ones((), bool),
+                                z, jnp.ones((), bool)))
+        return state, scalars, conflicts, subrounds, dall, rounds
 
-    from jax.sharding import PartitionSpec as Ps
+    st_specs = jax.tree.map(lambda _: Ps(axis), state0)
+    sc_specs = jax.tree.map(lambda _: Ps(), scalars0)
     fn = compat.shard_map(
         shard_fn, mesh=mesh,
-        in_specs=(Ps(axis), Ps(axis), Ps(axis), Ps(axis)),
-        out_specs=(Ps(axis), Ps()),
+        in_specs=(st_specs, sc_specs) + (Ps(axis),) * 5,
+        out_specs=(st_specs, sc_specs, Ps(), Ps(), Ps(), Ps()),
         check_vma=False)
-    dist, rounds = jax.jit(fn)(dist0, src, dst, val)
-    return dist[:g.num_vertices], rounds
+    state, scalars, conflicts, subrounds, dall, rounds = jax.jit(fn)(
+        state0, scalars0, src, dst, w, val, eid)
+    return DistributedResult(state=state, scalars=scalars, rounds=rounds,
+                             conflicts=conflicts, subrounds=subrounds,
+                             delivered_all=dall)
 
 
-def distributed_pagerank(mesh, g, *, iters: int = 20, capacity: int = 4096,
-                         m: int | None = None, axis: str = "data",
-                         d: float = 0.85,
-                         spec: C.CommitSpec | None = None):
-    """PageRank over a mesh axis (FF&AS accumulate commits + coalescing)."""
-    from repro.graphs.csr import partition_edges
-    P = mesh.shape[axis]
-    (src, dst, w, val), part = partition_edges(g, P)
-    block = part.block
-    ecfg = EngineConfig(P, block, capacity, axis=axis, m=m, op="add",
-                        spec=spec)
-    vpad = P * block
-    v = g.num_vertices
-    deg_full = jnp.zeros((vpad,), jnp.int32).at[:v].set(
-        jnp.maximum(g.degrees, 1))
-    dangling = jnp.zeros((vpad,), bool).at[:v].set(g.degrees == 0)
-    realv = jnp.zeros((vpad,), bool).at[:v].set(True)
-
-    def shard_fn(rank_l, deg_l, dang_l, real_l, src_l, dst_l, val_l):
-        src_l, dst_l, val_l = src_l[0], dst_l[0], val_l[0]
-        shard = jax.lax.axis_index(axis)
-        my_src = jnp.clip(src_l - shard * block, 0, block - 1)
-
-        def body(rank_l, _):
-            contrib = d * rank_l[my_src] / deg_l[my_src].astype(jnp.float32)
-            acc0 = jnp.zeros((block,), jnp.float32)
-            acc, _, _, _ = wave_until_delivered(ecfg, acc0, dst_l, contrib,
-                                                val_l)
-            dm = jax.lax.psum(
-                jnp.sum(jnp.where(dang_l, rank_l, 0.0)), axis)
-            rank_l = jnp.where(real_l,
-                               (1.0 - d) / v + acc + d * dm / v, 0.0)
-            return rank_l, None
-
-        rank_l, _ = jax.lax.scan(body, rank_l, None, length=iters)
-        return rank_l
-
-    from jax.sharding import PartitionSpec as Ps
-    rank0 = jnp.where(realv, 1.0 / v, 0.0)
-    fn = compat.shard_map(
-        shard_fn, mesh=mesh,
-        in_specs=(Ps(axis),) * 4 + (Ps(axis),) * 3,
-        out_specs=Ps(axis), check_vma=False)
-    rank = jax.jit(fn)(rank0, deg_full, dangling, realv, src, dst, val)
-    return rank[:v]
+# Legacy entry points live with their algorithms now; keep the old import
+# path (`from repro.core.engine import distributed_bfs`) working without a
+# circular import at module load.
+def __getattr__(name):
+    if name == "distributed_bfs":
+        from repro.graphs.algorithms.bfs import distributed_bfs
+        return distributed_bfs
+    if name == "distributed_pagerank":
+        from repro.graphs.algorithms.pagerank import distributed_pagerank
+        return distributed_pagerank
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -73,12 +73,12 @@ def run_transactions(mesh, txns, num_vertices: int, *, axis: str = "data",
             targets = txn.reshape(X * K)
             payload = jnp.repeat(key, K)
             valid = jnp.repeat(~done, K) & ~dup.reshape(X * K)
-            markers, success, _, _ = wave_until_delivered(
+            markers, success, _, _, _ = wave_until_delivered(
                 ecfg_bid, markers, targets, payload, valid)
             granted = success.reshape(X, K) | dup
             win = jnp.all(granted, axis=1) & ~done
             # winners apply atomically (visited-mark wave)
-            visited, _, _, _ = wave_until_delivered(
+            visited, _, _, _, _ = wave_until_delivered(
                 ecfg_apply, visited, targets,
                 jnp.ones((X * K,), bool), jnp.repeat(win, K))
             retries = retries + jnp.sum((~done & ~win).astype(jnp.int32))

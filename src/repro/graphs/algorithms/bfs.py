@@ -64,6 +64,36 @@ def bfs(g: Graph, source, *, commit: str = "coarse", m: int | None = None,
     return BfsResult(dist, rounds, nmsg, ncf, nap)
 
 
+def distributed_bfs(mesh, g: Graph, source: int, *, capacity: int = 4096,
+                    m: int | None = None, axis: str = "data",
+                    spec: C.CommitSpec | None = None, max_subrounds: int = 64,
+                    telemetry: bool = False):
+    """BFS over a mesh axis — FF&MF ``min`` waves on the shared harness.
+
+    Returns (dist [V], rounds); with ``telemetry=True`` returns
+    (dist, DistributedResult)."""
+    from repro.core.engine import AlgorithmSpec, run_distributed
+
+    def init(g, layout):
+        dist0 = jnp.full((layout.vpad,), INF, jnp.int32).at[source].set(0)
+        frontier0 = jnp.zeros((layout.vpad,), bool).at[source].set(True)
+        return {"dist": dist0, "frontier": frontier0}, {}
+
+    def round_fn(rt, e, st, sc, it):
+        dist = st["dist"]
+        active = st["frontier"][e.my_src] & e.valid
+        dist2, _ = rt.wave(dist, e.dst, dist[e.my_src] + 1, active, op="min")
+        changed = dist2 != dist
+        return {"dist": dist2, "frontier": changed}, sc, rt.any(changed)
+
+    alg = AlgorithmSpec("bfs", "FF&MF", init, round_fn,
+                        lambda g, layout: layout.vpad)
+    res = run_distributed(alg, mesh, g, capacity=capacity, m=m, axis=axis,
+                          spec=spec, max_subrounds=max_subrounds)
+    dist = res.state["dist"][:g.num_vertices]
+    return (dist, res) if telemetry else (dist, res.rounds)
+
+
 def bfs_reference(g: Graph, source: int):
     """Pure-python BFS oracle (tests)."""
     import collections

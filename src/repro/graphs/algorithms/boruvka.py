@@ -28,6 +28,28 @@ def _shortcut(parent, iters):
     return p
 
 
+def _dedupe_mst_pairs(g: Graph, in_mst):
+    """Undirected graphs store both directions: an MST edge may be selected
+    from either side — count each canonical pair once (lexsorted dedupe).
+    ``in_mst``: bool [E] per-direction selection.  Returns
+    (weight, n_edges)."""
+    e = g.num_edges
+    lo = jnp.minimum(g.src, g.dst)
+    hi = jnp.maximum(g.src, g.dst)
+    o1 = jnp.argsort(hi, stable=True)
+    order = o1[jnp.argsort(lo[o1], stable=True)]
+    slo, shi, sm = lo[order], hi[order], in_mst[order]
+    first = jnp.concatenate([jnp.ones((1,), bool),
+                             (slo[1:] != slo[:-1]) | (shi[1:] != shi[:-1])])
+    pair_id = jnp.cumsum(first.astype(jnp.int32)) - 1
+    pair_sel = jax.ops.segment_max(sm.astype(jnp.int32), pair_id,
+                                   num_segments=e)
+    uniq = first & (pair_sel[pair_id] > 0)
+    weight = jnp.sum(jnp.where(uniq, g.weights[order], 0.0))
+    n_edges = jnp.sum(uniq.astype(jnp.int32))
+    return weight, n_edges
+
+
 @partial(jax.jit, static_argnames=("spec",))
 def boruvka(g: Graph, *, spec: C.CommitSpec | None = None):
     if spec is None:
@@ -75,22 +97,87 @@ def boruvka(g: Graph, *, spec: C.CommitSpec | None = None):
     in0 = jnp.zeros((e,), bool)
     comp, in_mst, _, rounds = jax.lax.while_loop(
         cond, body, (comp0, in0, jnp.ones((), bool), jnp.zeros((), jnp.int32)))
-    # undirected graphs store both directions: an MST edge may be selected
-    # from either side — count each canonical pair once (lexsorted dedupe).
-    lo = jnp.minimum(g.src, g.dst)
-    hi = jnp.maximum(g.src, g.dst)
-    o1 = jnp.argsort(hi, stable=True)
-    order = o1[jnp.argsort(lo[o1], stable=True)]
-    slo, shi, sm = lo[order], hi[order], in_mst[order]
-    first = jnp.concatenate([jnp.ones((1,), bool),
-                             (slo[1:] != slo[:-1]) | (shi[1:] != shi[:-1])])
-    pair_id = jnp.cumsum(first.astype(jnp.int32)) - 1
-    pair_sel = jax.ops.segment_max(sm.astype(jnp.int32), pair_id,
-                                   num_segments=e)
-    uniq = first & (pair_sel[pair_id] > 0)
-    weight = jnp.sum(jnp.where(uniq, g.weights[order], 0.0))
-    n_edges = jnp.sum(uniq.astype(jnp.int32))
+    weight, n_edges = _dedupe_mst_pairs(g, in_mst)
     return comp, weight, n_edges, rounds
+
+
+def distributed_boruvka(mesh, g: Graph, *, capacity: int = 4096,
+                        m: int | None = None, axis: str = "data",
+                        spec: C.CommitSpec | None = None,
+                        max_subrounds: int = 64, telemetry: bool = False):
+    """Boruvka MST on the shared harness — FR&MF rounds: two ``min``
+    commit waves select each component's lexicographically-minimal outgoing
+    edge (weight, then ORIGINAL edge id, so tie-breaks match the
+    single-shard run exactly), a hook wave writes the component pointers,
+    and pointer-jumping contracts the forest through the FR read path
+    (``route_messages``/``return_to_spawners`` remote gathers).
+
+    Returns (comp [V], weight, n_edges, rounds); ``telemetry=True``
+    appends the DistributedResult."""
+    import numpy as np
+    from repro.core.engine import AlgorithmSpec, run_distributed
+    from repro.graphs.csr import partition_edges
+
+    v, e_tot = g.num_vertices, g.num_edges
+    jump = max(int(v).bit_length(), 1)
+    HOOK_EMPTY = jnp.int32(2 ** 30)
+
+    def init(g, layout):
+        return {"comp": jnp.arange(layout.vpad, dtype=jnp.int32),
+                "in_mst": jnp.zeros((layout.vpad // layout.block
+                                     * layout.emax,), bool)}, {}
+
+    def round_fn(rt, e, st, sc, it):
+        comp, in_mst = st["comp"], st["in_mst"]
+        gid = rt.gid
+        block = comp.shape[0]
+        cs = comp[e.my_src]
+        cd = rt.gather(comp, e.dst, e.valid, fill=0)
+        cross = e.valid & (cs != cd)
+        # lexicographic (weight, edge id) minimum per component: two MF
+        # min-waves into the component owners, mirroring the single-shard
+        # two-pass argmin
+        bw, _ = rt.wave(jnp.full((block,), INF), cs, e.weight, cross,
+                        op="min")
+        bwcs = rt.gather(bw, cs, cross, fill=INF)
+        cand = cross & (e.weight == bwcs) & (bwcs < INF)
+        be, _ = rt.wave(jnp.full((block,), e_tot, jnp.int32), cs, e.eid,
+                        cand, op="min")
+        becs = rt.gather(be, cs, cand, fill=e_tot)
+        winner = cand & (e.eid == becs)
+        in_mst = in_mst | winner
+        # hook: root of cs -> component of the chosen dst (exactly one
+        # winner per component, delivered as a min-wave into empty slots)
+        hook, _ = rt.wave(jnp.full((block,), HOOK_EMPTY, jnp.int32), cs,
+                          cd, winner, op="min")
+        parent = jnp.where(hook < HOOK_EMPTY, hook, gid)
+        # break mutual pairs (a<->b): larger id becomes root
+        gp = rt.gather(parent, parent)
+        mutual = (gp == gid) & (gid > parent)
+        parent = jnp.where(mutual, gid, parent)
+        # pointer jumping via the FR read path (log V remote gathers)
+        for _ in range(jump):
+            parent = rt.gather(parent, parent)
+        new_comp = rt.gather(parent, comp)
+        changed = rt.any(new_comp != comp)
+        return {"comp": new_comp, "in_mst": in_mst}, sc, changed
+
+    alg = AlgorithmSpec("boruvka", "FR&MF", init, round_fn,
+                        lambda g, layout: jump + 1)
+    parts = partition_edges(g, mesh.shape[axis])   # shared with the harness
+    res = run_distributed(alg, mesh, g, capacity=capacity, m=m, axis=axis,
+                          spec=spec, max_subrounds=max_subrounds,
+                          edges=parts)
+    comp = res.state["comp"][:v]
+    # map shard-lane selections back to original edge ids, then reuse the
+    # single-shard canonical-pair dedupe
+    (_, _, _, val_np, eid_np), _ = parts
+    lanes = np.asarray(res.state["in_mst"]).reshape(val_np.shape)
+    sel = np.zeros(e_tot, bool)
+    sel[eid_np[val_np]] = lanes[val_np]
+    weight, n_edges = _dedupe_mst_pairs(g, jnp.asarray(sel))
+    out = (comp, weight, n_edges, res.rounds)
+    return out + (res,) if telemetry else out
 
 
 def mst_reference(g: Graph) -> float:

@@ -24,6 +24,30 @@ def _hash32(x):
     return x ^ (x >> 16)
 
 
+def _pair_loser(src, dst, seed, rnd):
+    """Seeded coin flip per conflicting edge: which endpoint recolors (the
+    paper's FR "return the ID of a vertex to be recolored").  Hashed on the
+    CANONICAL (lo, hi) pair so both stored directions of an undirected edge
+    — and every shard of a distributed run — agree on the loser."""
+    lo = jnp.minimum(src, dst).astype(jnp.uint32)
+    hi = jnp.maximum(src, dst).astype(jnp.uint32)
+    mix = (jnp.asarray(seed * 31 + 7, jnp.uint32)
+           ^ _hash32(jnp.asarray(rnd).astype(jnp.uint32)))
+    coin = (_hash32(lo ^ _hash32(hi ^ mix)) & 1) == 0
+    return jnp.where(coin, lo, hi).astype(jnp.int32)
+
+
+def _propose(ids, active, color, pal, seed, rnd):
+    """Seeded per-round color proposal for the ``active`` vertices — pure
+    function of the GLOBAL vertex id, so every shard proposes exactly what
+    the single-shard run would."""
+    mix = (jnp.asarray(seed, jnp.uint32)
+           + jnp.asarray(rnd).astype(jnp.uint32) * jnp.uint32(2654435761))
+    h = _hash32(ids.astype(jnp.uint32) ^ _hash32(mix))
+    prop = (h % jnp.asarray(pal, jnp.uint32)).astype(jnp.int32)
+    return jnp.where(active, prop, color)
+
+
 @partial(jax.jit, static_argnames=("max_rounds", "spec"))
 def coloring(g: Graph, *, palette: int | None = None, seed: int = 0,
              max_rounds: int = 500, spec: C.CommitSpec | None = None):
@@ -37,11 +61,8 @@ def coloring(g: Graph, *, palette: int | None = None, seed: int = 0,
     pal = max_deg + 1
 
     def propose(active, color, rnd):
-        mix = (jnp.asarray(seed, jnp.uint32)
-               + rnd.astype(jnp.uint32) * jnp.uint32(2654435761))
-        h = _hash32(jnp.arange(v, dtype=jnp.uint32) ^ _hash32(mix))
-        prop = (h % pal.astype(jnp.uint32)).astype(jnp.int32)
-        return jnp.where(active, prop, color)
+        return _propose(jnp.arange(v, dtype=jnp.uint32), active, color, pal,
+                        seed, rnd)
 
     def cond(state):
         _, active, it = state
@@ -52,15 +73,11 @@ def coloring(g: Graph, *, palette: int | None = None, seed: int = 0,
         color = propose(active, color, it)
         cs, cd = color[g.src], color[g.dst]
         conflict = cs == cd                       # per-edge conflict
-        # seeded coin flip per conflicting edge: loser recolors (FR return)
-        eid = jnp.arange(g.num_edges, dtype=jnp.uint32)
-        coin = (_hash32(eid ^ jnp.asarray(seed * 31 + 7, jnp.uint32) ^
-                        _hash32(jnp.asarray(it).astype(jnp.uint32))) & 1) == 0
-        loser = jnp.where(coin, g.src, g.dst)
+        loser = _pair_loser(g.src, g.dst, seed, it)
         # the recolor notification is an FF&AS "or" commit into the
         # next-round active mask (losers may be named by many edges)
-        msgs = make_messages(loser, conflict.astype(jnp.int32),
-                             jnp.ones((g.num_edges,), bool))
+        msgs = make_messages(loser, jnp.ones((g.num_edges,), jnp.int32),
+                             conflict)
         new_active = C.commit(jnp.zeros((v,), jnp.int32), msgs, "or",
                               spec).state != 0
         return color, new_active, it + 1
@@ -70,6 +87,49 @@ def coloring(g: Graph, *, palette: int | None = None, seed: int = 0,
     color, active, rounds = jax.lax.while_loop(
         cond, body, (color0, active0, jnp.zeros((), jnp.int32)))
     return color, rounds, jnp.any(active)   # any=True -> didn't converge
+
+
+def distributed_coloring(mesh, g: Graph, *, seed: int = 0,
+                         max_rounds: int = 500, capacity: int = 4096,
+                         m: int | None = None, axis: str = "data",
+                         spec: C.CommitSpec | None = None,
+                         max_subrounds: int = 64, telemetry: bool = False):
+    """Boman coloring on the shared harness — FR&MF rounds: propose
+    locally, gather remote endpoint colors, and commit the pair-hash
+    loser's recolor notification as an ``or`` wave.  Proposals and coin
+    flips are pure functions of global ids, so the distributed run matches
+    the single-shard :func:`coloring` bit-for-bit.
+
+    Returns (color [V], rounds, not_converged); ``telemetry=True`` appends
+    the DistributedResult."""
+    from repro.core.engine import AlgorithmSpec, run_distributed
+    import numpy as np
+    pal = int(np.asarray(jnp.max(g.degrees))) + 1
+
+    def init(g, layout):
+        return {"color": jnp.zeros((layout.vpad,), jnp.int32),
+                "active": jnp.ones((layout.vpad,), bool)}, {}
+
+    def round_fn(rt, e, st, sc, it):
+        color = _propose(rt.gid, st["active"], st["color"], pal, seed, it)
+        cs = color[e.my_src]
+        cd = rt.gather(color, e.dst, e.valid, fill=-1)
+        conflict = e.valid & (cs == cd)
+        loser = _pair_loser(e.src, e.dst, seed, it)
+        act, _ = rt.wave(jnp.zeros(color.shape, jnp.int32), loser,
+                         jnp.ones_like(e.src), conflict, op="or")
+        new_active = act != 0
+        return ({"color": color, "active": new_active}, sc,
+                rt.any(new_active))
+
+    alg = AlgorithmSpec("coloring", "FR&MF", init, round_fn,
+                        lambda g, layout: max_rounds)
+    res = run_distributed(alg, mesh, g, capacity=capacity, m=m, axis=axis,
+                          spec=spec, max_subrounds=max_subrounds)
+    color = res.state["color"][:g.num_vertices]
+    not_converged = jnp.any(res.state["active"][:g.num_vertices])
+    out = (color, res.rounds, not_converged)
+    return out + (res,) if telemetry else out
 
 
 def validate_coloring(g: Graph, color) -> bool:

@@ -49,6 +49,54 @@ def st_connectivity(g: Graph, s, t, *, spec: C.CommitSpec | None = None):
     return found, rounds
 
 
+def distributed_stconn(mesh, g: Graph, s: int, t: int, *,
+                       capacity: int = 4096, m: int | None = None,
+                       axis: str = "data",
+                       spec: C.CommitSpec | None = None,
+                       max_subrounds: int = 64, telemetry: bool = False):
+    """ST-connectivity on the shared harness — two concurrent BFS waves
+    ("grey" from s, "green" from t) carried as TWO payload fields through
+    ONE coalescing bucket per round (``or`` commits into two frontier
+    marks); connectivity is proven when any vertex holds both marks (the
+    FR "return true" routed back as a psum).
+
+    Returns (found, rounds); ``telemetry=True`` appends the
+    DistributedResult."""
+    from repro.core.engine import AlgorithmSpec, run_distributed
+
+    def init(g, layout):
+        vpad = layout.vpad
+        grey0 = jnp.zeros((vpad,), jnp.int32).at[s].set(1)
+        green0 = jnp.zeros((vpad,), jnp.int32).at[t].set(1)
+        state = {"grey": grey0, "green": green0,
+                 "fgrey": jnp.zeros((vpad,), bool).at[s].set(True),
+                 "fgreen": jnp.zeros((vpad,), bool).at[t].set(True)}
+        return state, {"found": jnp.asarray(s == t, bool)}
+
+    def round_fn(rt, e, st, sc, it):
+        ag = st["fgrey"][e.my_src] & e.valid
+        agr = st["fgreen"][e.my_src] & e.valid
+        marks, _ = rt.wave(
+            {"grey": st["grey"], "green": st["green"]}, e.dst,
+            {"grey": ag.astype(jnp.int32), "green": agr.astype(jnp.int32)},
+            ag | agr, op="or")
+        fgrey = (marks["grey"] != 0) & (st["grey"] == 0)
+        fgreen = (marks["green"] != 0) & (st["green"] == 0)
+        found = sc["found"] | rt.any((marks["grey"] != 0)
+                                     & (marks["green"] != 0))
+        state = {"grey": marks["grey"], "green": marks["green"],
+                 "fgrey": fgrey, "fgreen": fgreen}
+        active = (rt.any(fgrey) | rt.any(fgreen)) & ~found
+        return state, {"found": found}, active
+
+    alg = AlgorithmSpec("stconn", "FR&AS", init, round_fn,
+                        lambda g, layout: layout.vpad)
+    res = run_distributed(alg, mesh, g, capacity=capacity, m=m, axis=axis,
+                          spec=spec, max_subrounds=max_subrounds)
+    out = (res.scalars["found"], res.rounds)
+    return out + (res,) if telemetry else out
+
+
 def st_reference(g: Graph, s: int, t: int) -> bool:
     import numpy as np
     from repro.graphs.algorithms.bfs import bfs_reference

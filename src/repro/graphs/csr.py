@@ -88,7 +88,13 @@ class Partition:
 def partition_edges(g: Graph, num_shards: int):
     """Split edges by OWNER OF THE SOURCE (each shard expands its own
     vertices), padded to equal length.  Returns numpy arrays shaped
-    [num_shards, E_max]: (src, dst, w, valid) + Partition."""
+    [num_shards, E_max]: (src, dst, w, valid, eid) + Partition.
+
+    ``eid`` carries each lane's ORIGINAL edge index (``num_edges`` in
+    padding lanes) so distributed algorithms can tie-break identically to
+    their single-shard counterparts (Boruvka's lexicographic (weight, edge
+    id) selection) and so per-edge shard state maps back to ``g``'s edge
+    order."""
     v = g.num_vertices
     block = -(-v // num_shards)
     src = np.asarray(g.src)
@@ -101,6 +107,8 @@ def partition_edges(g: Graph, num_shards: int):
     d_out = np.zeros((num_shards, emax), np.int32)
     w_out = np.zeros((num_shards, emax), np.float32)
     valid = np.zeros((num_shards, emax), bool)
+    eid = np.full((num_shards, emax), g.num_edges, np.int32)
+    all_eids = np.arange(g.num_edges, dtype=np.int32)
     for p in range(num_shards):
         m = owner == p
         n = int(m.sum())
@@ -108,4 +116,5 @@ def partition_edges(g: Graph, num_shards: int):
         d_out[p, :n] = dst[m]
         w_out[p, :n] = w[m]
         valid[p, :n] = True
-    return (s_out, d_out, w_out, valid), Partition(num_shards, block)
+        eid[p, :n] = all_eids[m]
+    return (s_out, d_out, w_out, valid, eid), Partition(num_shards, block)

@@ -1,0 +1,98 @@
+"""Property tests for the coalescing planner (paper §4.2, §5.6): the
+bucket plan must partition messages exactly into kept + requeued, count
+overflow instead of losing it, and scatter/gather must round-trip."""
+import numpy as np
+import jax.numpy as jnp
+
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core.coalescing import (bucket_message_ids, gather_from_buckets,
+                                   plan_buckets, plan_buckets_sorted,
+                                   scatter_to_buckets)
+
+
+@st.composite
+def _cases(draw):
+    n = draw(st.integers(1, 64))
+    nb = draw(st.integers(1, 8))
+    cap = draw(st.integers(1, 16))
+    owner = draw(st.lists(st.integers(0, nb - 1), min_size=n, max_size=n))
+    valid = draw(st.lists(st.booleans(), min_size=n, max_size=n))
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    return (np.asarray(owner, np.int32), np.asarray(valid, bool),
+            nb, cap, seed)
+
+
+@settings(max_examples=30)
+@given(_cases())
+def test_kept_plus_dropped_partitions_valid_exactly(case):
+    owner, valid, nb, cap, _ = case
+    plan, _ = plan_buckets_sorted(jnp.asarray(owner), jnp.asarray(valid),
+                                  nb, cap)
+    kept = np.asarray(plan.kept)
+    pos = np.asarray(plan.position)
+    counts = np.asarray(plan.counts)
+    assert not np.any(kept & ~valid)                       # kept ⊆ valid
+    assert int(plan.dropped) == int(valid.sum() - kept.sum())
+    for b in range(nb):
+        in_b = valid & (owner == b)
+        assert counts[b] == in_b.sum()
+        # capacity C is honored exactly: min(count, C) kept per bucket
+        assert (kept & in_b).sum() == min(int(in_b.sum()), cap)
+        # kept slots are unique within the bucket and within capacity
+        p = pos[kept & in_b]
+        assert len(set(p.tolist())) == len(p) and (p < cap).all()
+    # the dense O(n·buckets) planner and the sort-based planner agree
+    plan2 = plan_buckets(jnp.asarray(owner), jnp.asarray(valid), nb, cap)
+    assert np.array_equal(kept, np.asarray(plan2.kept))
+    assert np.array_equal(pos[valid], np.asarray(plan2.position)[valid])
+    assert int(plan.dropped) == int(plan2.dropped)
+
+
+@settings(max_examples=30)
+@given(_cases())
+def test_overflow_is_requeued_never_lost(case):
+    owner, valid, nb, cap, _ = case
+    pending = valid.copy()
+    delivered = np.zeros_like(valid, np.int32)
+    for _ in range(len(owner) + 1):
+        if not pending.any():
+            break
+        plan, _ = plan_buckets_sorted(jnp.asarray(owner),
+                                      jnp.asarray(pending), nb, cap)
+        kept = np.asarray(plan.kept)
+        # progress every sub-round: C >= 1 keeps >= 1 message per
+        # non-empty bucket, so the requeue loop terminates
+        assert kept.sum() > 0
+        delivered += kept
+        pending &= ~kept
+    assert not pending.any()
+    # exactly-once delivery over the sub-rounds
+    assert np.array_equal(delivered, valid.astype(np.int32))
+
+
+@settings(max_examples=30)
+@given(_cases())
+def test_gather_scatter_roundtrip_is_identity_on_kept(case):
+    owner, valid, nb, cap, seed = case
+    n = len(owner)
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    owner, valid = owner[perm], valid[perm]                # random order
+    payload = {"i": jnp.asarray(rng.integers(1, 10 ** 6, n), jnp.int32),
+               "f": jnp.asarray(rng.normal(size=n), jnp.float32)}
+    plan, _ = plan_buckets_sorted(jnp.asarray(owner), jnp.asarray(valid),
+                                  nb, cap)
+    kept = np.asarray(plan.kept)
+    buf = scatter_to_buckets(plan, payload, nb, cap, fill=0)
+    out = gather_from_buckets(buf, plan, cap, fill=-7)
+    for k in payload:
+        got = np.asarray(out[k])
+        want = np.asarray(payload[k])
+        assert np.array_equal(got[kept], want[kept])       # identity
+        assert (got[~kept] == -7).all()                    # fill elsewhere
+    # slot ids map each kept message to exactly one buffer slot
+    ids = np.asarray(bucket_message_ids(plan, nb, cap)).reshape(-1)
+    ids = ids[ids >= 0]
+    assert len(set(ids.tolist())) == len(ids)
+    assert set(ids.tolist()) == set(np.flatnonzero(kept).tolist())

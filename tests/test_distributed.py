@@ -1,6 +1,13 @@
 """Distributed tests on 8 forced host devices (subprocess: the dry-run is
 the ONLY place allowed to force 512; tests use their own interpreter so the
-main test session keeps 1 device)."""
+main test session keeps 1 device).
+
+The parity matrix runs every algorithm ported to the shared
+``run_distributed`` harness against its single-shard and numpy-reference
+results, for both ``coarse`` and ``pallas`` commit specs, on a kronecker
+and a uniform random graph — with a coalescing capacity small enough to
+force sub-round requeue, and asserting the harness ``delivered_all``
+anti-wedge flag every time."""
 import json
 import os
 import subprocess
@@ -15,39 +22,259 @@ pytestmark = pytest.mark.slow   # spawns 8-device subprocesses
 REPO = Path(__file__).resolve().parent.parent
 
 
-def run_devices(code: str, n: int = 8) -> dict:
+def _tail(x, n):
+    if x is None:
+        return ""
+    if isinstance(x, bytes):
+        x = x.decode(errors="replace")
+    return x[-n:]
+
+
+def run_devices(code: str, n: int = 8, timeout: int = 900) -> dict:
     env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    flags = f"--xla_force_host_platform_device_count={n}"
+    extra = env.get("REPRO_XLA_EXTRA")      # tier2 pins a fixed flag matrix
+    env["XLA_FLAGS"] = f"{flags} {extra}" if extra else flags
     env["PYTHONPATH"] = str(REPO / "src")
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env,
-                         timeout=900)
+    try:
+        out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                             capture_output=True, text=True, env=env,
+                             timeout=timeout)
+    except subprocess.TimeoutExpired as e:
+        pytest.fail(f"child timed out after {timeout}s\n"
+                    f"--- captured stderr tail ---\n{_tail(e.stderr, 4000)}\n"
+                    f"--- captured stdout tail ---\n{_tail(e.stdout, 2000)}")
     assert out.returncode == 0, out.stderr[-4000:]
     line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")]
     assert line, out.stdout[-2000:]
     return json.loads(line[-1][len("RESULT "):])
 
 
-def test_distributed_bfs_and_pagerank_match_reference():
+# ---------------------------------------------------------------------------
+# Distributed × single-shard × reference parity matrix (all six algorithms)
+# ---------------------------------------------------------------------------
+
+ALGORITHMS = ("bfs", "sssp", "pagerank", "coloring", "boruvka", "stconn")
+
+PARITY_CHILD = """
+import json, numpy as np, jax.numpy as jnp
+from repro.launch.mesh import make_host_mesh
+from repro.core.commit import CommitSpec
+from repro.graphs.generators import kronecker, erdos_renyi, random_weights
+from repro.graphs.algorithms import bfs as B, sssp as S, pagerank as PR
+from repro.graphs.algorithms import coloring as CO, boruvka as BO
+from repro.graphs.algorithms import stconn as ST
+
+ALG = "{alg}"
+mesh = make_host_mesh(8, 1)
+out = {{}}
+graphs = [("kron", kronecker(8, 8, seed=3)),
+          ("uniform", erdos_renyi(300, 6.0, seed=11))]
+for gname, g in graphs:
+    gw = random_weights(g, seed=4)
+    src = int(np.argmax(np.asarray(g.degrees)))
+    t = int(np.argmin(np.asarray(g.degrees)))
+    for backend in ("coarse", "pallas"):
+        # capacity 64 < the hub in-degrees: forces coalescing requeue;
+        # m=48 forces multi-transaction commits on both backends
+        kw = dict(capacity=64, spec=CommitSpec(backend=backend, m=48),
+                  telemetry=True)
+        if ALG == "bfs":
+            ref = B.bfs_reference(g, src)
+            one = B.bfs(g, src)
+            dist, res = B.distributed_bfs(mesh, g, src, **kw)
+            ok = (np.array_equal(np.asarray(dist, np.int64), ref)
+                  and np.array_equal(np.asarray(dist), np.asarray(one.dist)))
+        elif ALG == "sssp":
+            ref = S.sssp_reference(gw, src)
+            one, _ = S.sssp(gw, src)
+            dist, res = S.distributed_sssp(mesh, gw, src, **kw)
+            d = np.asarray(dist, np.float64)
+            reach = np.isfinite(ref)
+            ok = (np.array_equal(np.asarray(dist), np.asarray(one))
+                  and bool(np.allclose(d[reach], ref[reach], rtol=1e-5))
+                  and bool((d[~reach] > 1e37).all()))
+        elif ALG == "pagerank":
+            ref = PR.pagerank_reference(g, iters=8)
+            one, _ = PR.pagerank(g, iters=8)
+            rank, res = PR.distributed_pagerank(mesh, g, iters=8, **kw)
+            r = np.asarray(rank, np.float64)
+            ok = (float(np.abs(r - ref).max()) < 1e-5
+                  and float(np.abs(r - np.asarray(one, np.float64)).max())
+                  < 1e-5)
+        elif ALG == "coloring":
+            one_c, one_r, _ = CO.coloring(g, seed=0)
+            c, r, nc, res = CO.distributed_coloring(mesh, g, seed=0, **kw)
+            ok = (np.array_equal(np.asarray(c), np.asarray(one_c))
+                  and CO.validate_coloring(g, c) and not bool(nc)
+                  and int(r) == int(one_r))
+        elif ALG == "boruvka":
+            one_comp, one_w, one_ne, _ = BO.boruvka(gw)
+            ref_w = BO.mst_reference(gw)
+            comp, w, ne, ro, res = BO.distributed_boruvka(mesh, gw, **kw)
+            ok = (np.array_equal(np.asarray(comp), np.asarray(one_comp))
+                  and abs(float(w) - ref_w) < 1e-3 * max(ref_w, 1.0)
+                  and int(ne) == int(one_ne))
+        else:
+            ref = ST.st_reference(g, src, t)
+            one_f, _ = ST.st_connectivity(g, src, t)
+            f, r, res = ST.distributed_stconn(mesh, g, src, t, **kw)
+            ok = bool(f) == bool(ref) == bool(one_f)
+        out[gname + "/" + backend] = dict(
+            ok=bool(ok), delivered_all=bool(res.delivered_all),
+            subrounds=int(res.subrounds), rounds=int(res.rounds),
+            conflicts=int(res.conflicts))
+print("RESULT", json.dumps(out))
+"""
+
+
+@pytest.mark.parametrize("alg", ALGORITHMS)
+def test_distributed_parity_matrix(alg):
+    r = run_devices(PARITY_CHILD.format(alg=alg), timeout=1500)
+    assert len(r) == 4, r          # 2 graphs x 2 backends
+    for case, row in r.items():
+        assert row["ok"], (alg, case, row)
+        # the anti-wedge flag: capacity C < max in-degree must terminate
+        # by requeueing, never by silently dropping pending messages
+        assert row["delivered_all"], (alg, case, row)
+        assert row["subrounds"] >= row["rounds"], (alg, case, row)
+
+
+# ---------------------------------------------------------------------------
+# Conflict-telemetry invariant (Tables 3c/3f analogue across the refactor)
+# ---------------------------------------------------------------------------
+
+
+def test_distributed_conflicts_match_single_shard_counts():
+    """With capacity >= the whole batch and one transaction per owner, the
+    distributed per-owner conflict totals must equal the single-shard
+    ``coarse_commit(stats=True)`` count on the same message multiset."""
     r = run_devices("""
-        import json, numpy as np, jax
+        import json, numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as Ps
+        from repro import compat
         from repro.launch.mesh import make_host_mesh
-        from repro.graphs.generators import kronecker
-        from repro.graphs.algorithms.bfs import bfs_reference
-        from repro.graphs.algorithms.pagerank import pagerank_reference
-        from repro.core.engine import distributed_bfs, distributed_pagerank
-        mesh = make_host_mesh(8, 1)
-        g = kronecker(9, 8, seed=3)
-        src = int(np.argmax(np.asarray(g.degrees)))
-        dist, rounds = distributed_bfs(mesh, g, src, capacity=256, m=64)
-        ok_bfs = bool(np.array_equal(np.asarray(dist, np.int64),
-                                     bfs_reference(g, src)))
-        pr = distributed_pagerank(mesh, g, iters=8, capacity=256)
-        err = float(np.abs(np.asarray(pr) -
-                           pagerank_reference(g, iters=8)).max())
-        print("RESULT", json.dumps({"bfs": ok_bfs, "pr_err": err}))
-    """)
-    assert r["bfs"] and r["pr_err"] < 1e-5
+        from repro.core import commit as C
+        from repro.core.engine import EngineConfig, wave_until_delivered
+        from repro.core.messages import make_messages
+        mesh = make_host_mesh(4, 1)
+        P, block, n = 4, 32, 512
+        V = P * block
+        rng = np.random.default_rng(0)
+        INIT = {"min": 2**20, "max": -2**20, "add": 0, "or": 0, "first": -1}
+        out = {}
+        for op in ("min", "max", "add", "or", "first"):
+            tgt = rng.integers(0, V, n).astype(np.int32)
+            if op == "or":
+                pay = rng.integers(0, 2, n).astype(np.int32)
+            elif op == "first":
+                pay = rng.integers(0, 100, n).astype(np.int32)
+            else:
+                pay = rng.integers(-50, 50, n).astype(np.int32)
+            state0 = np.full(V, INIT[op], np.int32)
+            ref = C.coarse_commit(jnp.asarray(state0),
+                                  make_messages(tgt, pay), op, stats=True)
+            ecfg = EngineConfig(P, block, capacity=n, op=op)
+            tgt_s = jnp.asarray(tgt.reshape(P, n // P))
+            pay_s = jnp.asarray(pay.reshape(P, n // P))
+
+            def shard_fn(st, tg, pl):
+                st2, _, cf, _, dall = wave_until_delivered(
+                    ecfg, st, tg[0], pl[0],
+                    jnp.ones((n // P,), bool))
+                return st2, cf, dall
+
+            fn = compat.shard_map(
+                shard_fn, mesh=mesh,
+                in_specs=(Ps("data"), Ps("data"), Ps("data")),
+                out_specs=(Ps("data"), Ps(), Ps()), check_vma=False)
+            st2, cf, dall = jax.jit(fn)(jnp.asarray(state0), tgt_s, pay_s)
+            # state parity holds for order-independent ops ('first' tie-
+            # breaks by arrival order, which routing permutes)
+            state_ok = (op == "first"
+                        or np.array_equal(np.asarray(st2),
+                                          np.asarray(ref.state)))
+            out[op] = {"single": int(ref.conflicts), "dist": int(cf),
+                       "state_ok": bool(state_ok), "dall": bool(dall)}
+        # a multi-payload wave carries several fields per routed message —
+        # conflicts must be counted once per message, not once per field
+        tgt = rng.integers(0, V, n).astype(np.int32)
+        pay = rng.integers(0, 2, n).astype(np.int32)
+        ref = C.coarse_commit(jnp.zeros((V,), jnp.int32),
+                              make_messages(tgt, pay), "or", stats=True)
+        ecfg = EngineConfig(P, block, capacity=n, op="or")
+        tgt_s = jnp.asarray(tgt.reshape(P, n // P))
+        pay_s = jnp.asarray(pay.reshape(P, n // P))
+
+        def shard2(st, tg, pl):
+            st2, _, cf, _, _ = wave_until_delivered(
+                ecfg, {"a": st, "b": st}, tg[0],
+                {"a": pl[0], "b": pl[0]}, jnp.ones((n // P,), bool))
+            return st2["a"], cf
+
+        fn2 = compat.shard_map(
+            shard2, mesh=mesh,
+            in_specs=(Ps("data"), Ps("data"), Ps("data")),
+            out_specs=(Ps("data"), Ps()), check_vma=False)
+        st2, cf2 = jax.jit(fn2)(jnp.zeros((V,), jnp.int32), tgt_s, pay_s)
+        out["or_2field"] = {
+            "single": int(ref.conflicts), "dist": int(cf2),
+            "state_ok": bool(np.array_equal(np.asarray(st2),
+                                            np.asarray(ref.state))),
+            "dall": True}
+        print("RESULT", json.dumps(out))
+    """, n=4)
+    for op, row in r.items():
+        assert row["dist"] == row["single"], (op, row)
+        assert row["state_ok"] and row["dall"], (op, row)
+
+
+# ---------------------------------------------------------------------------
+# delivered_all anti-wedge flag (the silent-wedge bugfix)
+# ---------------------------------------------------------------------------
+
+
+def test_wave_surfaces_wedge_instead_of_silent_drop():
+    """max_subrounds exhausted with messages pending => delivered_all is
+    False (previously the wave returned quietly); with enough sub-rounds a
+    capacity far below the per-owner in-degree still terminates and
+    delivers everything."""
+    r = run_devices("""
+        import json, numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as Ps
+        from repro import compat
+        from repro.launch.mesh import make_host_mesh
+        from repro.core.engine import EngineConfig, wave_until_delivered
+        mesh = make_host_mesh(2, 1)
+        P, block, n = 2, 16, 64
+        V = P * block
+        # every shard sends all 64 messages to vertex 0: per-owner load 128
+        tgt = jnp.zeros((n,), jnp.int32)
+        pay = jnp.arange(n, dtype=jnp.int32)
+        out = {}
+        for name, cap, msr in (("wedged", 4, 3), ("requeued", 4, 64)):
+            ecfg = EngineConfig(P, block, capacity=cap, op="min")
+
+            def shard_fn(st):
+                st2, _, _, sr, dall = wave_until_delivered(
+                    ecfg, st, tgt, pay, jnp.ones((n,), bool),
+                    max_subrounds=msr)
+                return st2, sr, dall
+
+            fn = compat.shard_map(shard_fn, mesh=mesh,
+                                  in_specs=(Ps("data"),),
+                                  out_specs=(Ps("data"), Ps(), Ps()),
+                                  check_vma=False)
+            st2, sr, dall = jax.jit(fn)(
+                jnp.full((V,), 2**20, jnp.int32))
+            out[name] = {"delivered_all": bool(dall), "subrounds": int(sr),
+                         "min0": int(np.asarray(st2)[0])}
+        print("RESULT", json.dumps(out))
+    """, n=2)
+    assert not r["wedged"]["delivered_all"], r
+    assert r["requeued"]["delivered_all"], r
+    assert r["requeued"]["min0"] == 0, r       # full multiset committed
+    assert r["requeued"]["subrounds"] == 16, r  # 64 msgs / C=4 per shard
 
 
 def test_ownership_protocol_converges_under_conflict():
