@@ -14,7 +14,7 @@ export PYTHONPATH := src
 TIER2_XLA := --xla_cpu_multi_thread_eigen=false
 TIER2_ENV := REPRO_XLA_EXTRA="$(TIER2_XLA)" PYTHONHASHSEED=0
 
-.PHONY: tier1 tier2 test bench
+.PHONY: tier1 tier2 test bench bench-json
 
 tier1:
 	$(PY) -m pytest -x -q -m "not slow"
@@ -26,3 +26,8 @@ test: tier1 tier2
 
 bench:
 	$(PY) -m benchmarks.run
+
+# the persistent perf trajectory: tiny fig4/fig6 sweeps x every backend x
+# the calibrated auto spec (schema checked by tests/test_autotune.py)
+bench-json:
+	$(PY) -m benchmarks.run --json BENCH_pr3.json --sizes tiny

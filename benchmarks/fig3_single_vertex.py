@@ -41,7 +41,7 @@ def main(backends=BACKENDS):
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--backend", choices=BACKENDS, default=None,
+    ap.add_argument("--backend", choices=BACKENDS + ("auto",), default=None,
                     help="restrict to one commit backend (default: sweep)")
     args = ap.parse_args()
     main((args.backend,) if args.backend else BACKENDS)

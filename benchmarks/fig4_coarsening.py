@@ -48,12 +48,32 @@ def conflict_depth(g) -> float:
     return float(np.mean(depths)) if depths else 1.0
 
 
+def stats_overhead(g, src, backend: str = "pallas"):
+    """Satellite check: commit(stats=False) must beat commit(stats=True)
+    (the kernel skips the per-block conflict reduction and its extra
+    output on the no-stats path)."""
+    t_on = timeit(lambda: bfs(g, src, spec=CommitSpec(
+        backend=backend, m=4096, sort=False, stats=True)), repeats=3)
+    t_off = timeit(lambda: bfs(g, src, spec=CommitSpec(
+        backend=backend, m=4096, sort=False, stats=False)), repeats=3)
+    emit(f"fig4/{backend}/stats_overhead", t_on - t_off,
+         f"stats_on={t_on*1e6:.0f}us stats_off={t_off*1e6:.0f}us "
+         f"nostats_cheaper={t_off < t_on}")
+    return t_on, t_off
+
+
 def main(scale: int = 14, edge_factor: int = 16, backend: str = "coarse"):
     g = kronecker(scale, edge_factor, seed=1)
     src = int(np.argmax(np.asarray(g.degrees)))
     base = CommitSpec(backend="atomic", stats=False)
     t_atomic = timeit(lambda: bfs(g, src, spec=base), repeats=3)
     emit(f"fig4/atomic/V=2^{scale}", t_atomic, "T=1 baseline")
+    if backend == "auto":
+        # the tuner picks backend + M itself: one calibrated run, no sweep
+        spec = CommitSpec(backend="auto", stats=False)
+        t = timeit(lambda: bfs(g, src, spec=spec), repeats=3)
+        emit("fig4/auto/M=auto", t, f"T1_ratio_vs_atomic={t_atomic/t:.2f}")
+        return
     best = (None, float("inf"))
     for m in MS:
         for sort in (True, False):
@@ -70,11 +90,13 @@ def main(scale: int = 14, edge_factor: int = 16, backend: str = "coarse"):
          f"M={best[0] or 'inf'} T1_ratio={t_atomic/best[1]:.2f} "
          f"conflicts={int(r.conflicts)} msgs={int(r.messages)} "
          f"projected_contended_speedup~{depth:.0f}x")
+    stats_overhead(g, src, backend)
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--backend", choices=BACKENDS, default="coarse",
+    ap.add_argument("--backend", choices=BACKENDS + ("auto",),
+                    default="coarse",
                     help="commit backend swept over transaction size M")
     ap.add_argument("--scale", type=int, default=14)
     ap.add_argument("--edge-factor", type=int, default=16)

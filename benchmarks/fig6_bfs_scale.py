@@ -14,19 +14,24 @@ from repro.graphs.generators import kronecker
 ATOMIC = CommitSpec(backend="atomic", stats=False)
 
 
-def main(backend: str = "coarse"):
-    aam = CommitSpec(backend=backend, m=4096, sort=False, stats=False)
+def main(backend: str = "coarse", scales=(12, 13, 14, 15),
+         densities=(4, 16, 64), edge_factor: int = 16,
+         density_scale: int = 13):
+    if backend == "auto":
+        aam = CommitSpec(backend="auto", stats=False)   # tuner picks M
+    else:
+        aam = CommitSpec(backend=backend, m=4096, sort=False, stats=False)
     # |V| sweep at fixed edge factor
-    for scale in (12, 13, 14, 15):
-        g = kronecker(scale, 16, seed=3)
+    for scale in scales:
+        g = kronecker(scale, edge_factor, seed=3)
         src = int(np.argmax(np.asarray(g.degrees)))
         ta = timeit(lambda: bfs(g, src, spec=ATOMIC), repeats=3)
         tc = timeit(lambda: bfs(g, src, spec=aam), repeats=3)
         emit(f"fig6/V=2^{scale}/atomic", ta)
         emit(f"fig6/V=2^{scale}/aam", tc, f"T1_ratio={ta/tc:.2f}")
     # density sweep at fixed |V|
-    for d in (4, 16, 64):
-        g = kronecker(13, d, seed=4)
+    for d in densities:
+        g = kronecker(density_scale, d, seed=4)
         src = int(np.argmax(np.asarray(g.degrees)))
         ta = timeit(lambda: bfs(g, src, spec=ATOMIC), repeats=3)
         tc = timeit(lambda: bfs(g, src, spec=aam), repeats=3)
@@ -36,5 +41,6 @@ def main(backend: str = "coarse"):
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--backend", choices=BACKENDS, default="coarse")
+    ap.add_argument("--backend", choices=BACKENDS + ("auto",),
+                    default="coarse")
     main(ap.parse_args().backend)

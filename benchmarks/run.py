@@ -5,11 +5,17 @@ documented in DESIGN.md §6; fig5/fig7 spawn child processes with forced
 host-device counts (this process keeps 1 device).
 
   PYTHONPATH=src python -m benchmarks.run [--only fig4,table1]
-                                           [--backend atomic|coarse|pallas]
+                                           [--backend atomic|coarse|pallas|auto]
+                                           [--json BENCH_pr3.json [--sizes tiny]]
+
+``--json`` runs the schema-stable tiny perf matrix (fig4/fig6 sweeps ×
+every backend × the calibrated ``auto`` spec) and writes it as JSON — the
+persistent bench trajectory every PR appends to and compares against.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -42,13 +48,189 @@ BACKEND_AWARE = {
 }
 
 
+# --json measurement matrix.  "tiny" backs the committed BENCH_*.json
+# trajectory; "smoke" is the tier-1 CI schema check (seconds, not minutes).
+SCHEMA = "aam-bench/v1"
+JSON_SIZES = {
+    "tiny": dict(fig4=dict(scale=10, edge_factor=8, ms=(64, 1024, None)),
+                 fig6=dict(scales=(9, 10), densities=(16,), edge_factor=8,
+                           density_scale=9),
+                 backends=("atomic", "coarse", "pallas", "auto"), repeats=7),
+    "smoke": dict(fig4=dict(scale=8, edge_factor=4, ms=(64, None)),
+                  fig6=dict(scales=(8,), densities=(4,), edge_factor=4,
+                            density_scale=8),
+                  backends=("atomic", "coarse", "auto"), repeats=2),
+}
+
+
+def _summarize(rows: list) -> dict:
+    """Per suite: calibrated-auto time over the best hand-picked static
+    spec.
+
+    "Best static spec" is ONE spec summed over the suite's points (what a
+    user would actually pin), not a per-point min over every static row —
+    the latter is winner's-curse-biased on a noisy host.  The per-point
+    worst ratio is kept alongside for transparency."""
+    out = {}
+    for suite in ("fig4", "fig6"):
+        srows = [r for r in rows if r["suite"] == suite
+                 and "stats_" not in r["name"]]
+        if not srows:
+            continue
+
+        def point(r):
+            return r["name"].split("/")[1] if suite == "fig6" else "all"
+
+        def spec_id(r):   # fig4 rows are one spec each; fig6 specs span points
+            return r["name"] if suite == "fig4" else r["backend"]
+
+        totals: dict = {}
+        for r in srows:
+            totals[spec_id(r)] = totals.get(spec_id(r), 0.0) \
+                + r["us_per_call"]
+        auto_keys = [k for k in totals if "auto" in str(k)]
+        static = {k: v for k, v in totals.items() if k not in auto_keys}
+        if not auto_keys or not static:
+            continue
+        auto_t = min(totals[k] for k in auto_keys)
+        best_k = min(static, key=static.get)
+        ratio = auto_t / static[best_k]
+        worst_point = max(
+            (min(r["us_per_call"] for r in srows
+                 if point(r) == p and r["backend"] == "auto")
+             / min(r["us_per_call"] for r in srows
+                   if point(r) == p and r["backend"] != "auto"))
+            for p in {point(r) for r in srows})
+        out[suite] = {"auto_over_best_static": round(ratio, 3),
+                      "best_static": str(best_k),
+                      "worst_point_ratio": round(worst_point, 3),
+                      "within_10pct": bool(ratio <= 1.10),
+                      "points": len({point(r) for r in srows})}
+    return out
+
+
+def _measure_interleaved(fns: dict, repeats: int, inner: int = 3) -> dict:
+    """min-of-repeats per entry, measured ROUND-ROBIN so every entry sees
+    the same host-noise environment (sequential per-spec timing lets CPU
+    frequency drift hand arbitrary specs a 30%+ win).  Each sample
+    averages ``inner`` consecutive calls to smooth dispatch jitter, and
+    the order ROTATES every round so no entry systematically runs in the
+    cache shadow of an expensive neighbor (e.g. always right after the
+    interpret-mode pallas burst)."""
+    import jax
+    keys = list(fns)
+    best = {}
+    for k in keys:                      # warmup: compile + calibration
+        jax.block_until_ready(fns[k]())
+        jax.block_until_ready(fns[k]())
+        best[k] = float("inf")
+    for r in range(repeats):
+        rot = keys[r % len(keys):] + keys[:r % len(keys)]
+        for k in rot:
+            t0 = time.perf_counter()
+            for _ in range(inner):
+                jax.block_until_ready(fns[k]())
+            best[k] = min(best[k], (time.perf_counter() - t0) / inner)
+    return best
+
+
+def bench_json(sizes: str) -> dict:
+    """The fig4/fig6 tiny sweeps × every backend × auto, as stable rows."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import autotune as AT
+    from repro.core.commit import CommitSpec
+    from repro.graphs.algorithms.bfs import bfs
+    from repro.graphs.generators import kronecker
+
+    cfg = JSON_SIZES[sizes]
+    reps = cfg["repeats"]
+    rows: list = []
+
+    def add(suite, backend, name, sec, derived=""):
+        rows.append({"suite": suite, "backend": backend, "name": name,
+                     "us_per_call": round(sec * 1e6, 1), "derived": derived})
+
+    def spec_for(backend, m=None):
+        if backend == "auto":
+            # same sort/stats base as the static specs it races against
+            return CommitSpec(backend="auto", sort=False, stats=False)
+        if backend == "atomic":
+            return CommitSpec(backend="atomic", stats=False)
+        return CommitSpec(backend=backend, m=m, sort=False, stats=False)
+
+    # fig4: BFS runtime vs transaction size M on one Kronecker graph
+    f4 = cfg["fig4"]
+    g = kronecker(f4["scale"], f4["edge_factor"], seed=1)
+    src = int(np.argmax(np.asarray(g.degrees)))
+    fns = {}
+    for backend in cfg["backends"]:
+        ms = (None,) if backend in ("atomic", "auto") else f4["ms"]
+        for m in ms:
+            sp = spec_for(backend, m)
+            label = "auto" if backend == "auto" else f"M={m or 'inf'}"
+            fns[(backend, label)] = (
+                lambda sp=sp: bfs(g, src, spec=sp).dist)
+    pol4 = AT.policy_for(spec_for("auto"),
+                         jax.ShapeDtypeStruct((g.num_vertices,),
+                                              jnp.int32),
+                         n=g.src.shape[0])
+    for (backend, label), t in _measure_interleaved(fns, reps).items():
+        add("fig4", backend, f"fig4/{backend}/{label}", t,
+            f"resolved={pol4.backend}" if backend == "auto" else "")
+    if "pallas" in cfg["backends"]:
+        # satellite: the no-stats kernel path must be the cheap one
+        t_on, t_off = fig4_coarsening.stats_overhead(g, src, "pallas")
+        add("fig4", "pallas", "fig4/pallas/stats_on", t_on)
+        add("fig4", "pallas", "fig4/pallas/stats_off", t_off,
+            f"nostats_cheaper={t_off < t_on}")
+
+    # fig6: BFS across |V| and density, per backend
+    f6 = cfg["fig6"]
+    points = [(f"V=2^{s}", kronecker(s, f6["edge_factor"], seed=3))
+              for s in f6["scales"]]
+    points += [(f"d={d}", kronecker(f6["density_scale"], d, seed=4))
+               for d in f6["densities"]]
+    for pname, gg in points:
+        ss = int(np.argmax(np.asarray(gg.degrees)))
+        fns = {b: (lambda sp=spec_for(b, 4096): bfs(gg, ss, spec=sp).dist)
+               for b in cfg["backends"]}
+        polp = AT.policy_for(spec_for("auto"),
+                             jax.ShapeDtypeStruct((gg.num_vertices,),
+                                                  jnp.int32),
+                             n=gg.src.shape[0])
+        for backend, t in _measure_interleaved(fns, reps).items():
+            add("fig6", backend, f"fig6/{pname}/{backend}", t,
+                f"resolved={polp.backend}" if backend == "auto" else "")
+
+    return {"schema": SCHEMA, "sizes": sizes,
+            "platform": jax.default_backend(),
+            "rows": rows, "summary": _summarize(rows)}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of " + ",".join(SUITES))
-    ap.add_argument("--backend", default=None, choices=BACKENDS,
+    ap.add_argument("--backend", default=None,
+                    choices=BACKENDS + ("auto",),
                     help="commit backend for the backend-aware suites")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the schema-stable bench matrix to PATH "
+                         "and exit (skips the CSV suites)")
+    ap.add_argument("--sizes", default="tiny", choices=tuple(JSON_SIZES),
+                    help="problem sizes for --json")
     args = ap.parse_args()
+    if args.json:
+        doc = bench_json(args.sizes)
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+        print(f"wrote {args.json}: {len(doc['rows'])} rows, "
+              f"summary={doc['summary']}", file=sys.stderr)
+        return
     names = args.only.split(",") if args.only else list(SUITES)
     print("name,us_per_call,derived")
     failures = 0

@@ -47,6 +47,10 @@ def run(name, msg_type, fn):
 run("BFS", "FF&MF", lambda: (lambda r:
     f"rounds={int(r.rounds)} conflicts={int(r.conflicts)}")(
     bfs(g, src, spec=CommitSpec(backend="coarse", m=4096, stats=False))))
+run("BFS (auto-tuned)", "FF&MF", lambda: (lambda r:
+    f"rounds={int(r.rounds)} conflicts={int(r.conflicts)} "
+    f"(calibrated backend+M, conflict-feedback sizing)")(
+    bfs(g, src, spec=CommitSpec(backend="auto", stats=False))))
 run("PageRank", "FF&AS", lambda: (lambda r:
     f"sum={float(r[0].sum()):.4f} conflicting-accs={int(r[1])}")(
     pagerank(g, iters=20)))

@@ -37,9 +37,13 @@ src = int(np.argmax(np.asarray(g.degrees)))
 r_atomic = bfs(g, src, spec=CommitSpec(backend="atomic", stats=False))
 r_aam = bfs(g, src,                              # AAM: 4096-message txns
             spec=CommitSpec(backend="coarse", m=4096, stats=False))
+# backend="auto": online calibration picks backend + M*, then the conflict
+# telemetry adapts M round-to-round (README "Auto-tuned commits")
+r_auto = bfs(g, src, spec=CommitSpec(backend="auto", stats=False))
 ref = bfs_reference(g, src)
 assert np.array_equal(np.asarray(r_atomic.dist, np.int64), ref)
 assert np.array_equal(np.asarray(r_aam.dist, np.int64), ref)
+assert np.array_equal(np.asarray(r_auto.dist, np.int64), ref)
 print(f"BFS    rounds={int(r_aam.rounds)} messages={int(r_aam.messages)} "
       f"conflicts={int(r_aam.conflicts)} "
       f"(duplicate-target messages resolved on-chip, zero aborts)")

@@ -1,0 +1,395 @@
+"""Adaptive commit auto-tuner — closing the paper's §5.3–§5.4 loop.
+
+The paper's performance analysis is about *choosing* HTM parameters:
+mechanism tier (atomics vs transactions), transaction size M, coarsening
+factor.  ``CommitSpec`` exposes them as static knobs; this module chooses
+them at runtime, in two stages:
+
+1. **Online calibration** (trace time, concrete).  Timed micro-commits of
+   a synthetic workload run through every mechanism tier, the §5.3 affine
+   model ``T(N) = B + A·N`` is fit per tier
+   (:func:`repro.core.perf_model.fit`), the backend with the lowest
+   predicted time at the workload's batch size wins, and
+   :func:`~repro.core.perf_model.select_m` picks M* from the fine/coarse
+   crossing point.  Results are cached process-wide, so a calibration runs
+   once, not per jit trace.
+
+2. **Conflict-feedback transaction sizing** (traced, per round).  The
+   chosen M* seeds a position on a power-of-two *ladder* of transaction
+   sizes; every round the conflict telemetry already carried by
+   :class:`~repro.core.commit.CommitResult` (the paper's Tables 3c/3f
+   abort statistics) updates the ladder level — abort storms shrink M
+   (smaller speculative state, fewer conflicts per transaction), quiet
+   rounds re-grow it.  The level is a traced ``int32``, the ladder a
+   ``lax.switch`` over pre-built commit branches, so adaptation runs
+   inside ``lax.while_loop`` round loops and under ``shard_map`` —
+   mirroring DyAdHyTM's runtime mechanism switching on one device graph.
+
+Entry points:
+
+* ``CommitSpec(backend="auto")`` through :func:`repro.core.commit.commit`
+  — resolved by :func:`resolve_spec` to a concrete calibrated spec
+  (stage 1 only; per-callsite, zero API change).
+* :func:`make_commit_step` — the uniform handle the single-shard wave
+  loops thread through their carries (stages 1 + 2).
+* :func:`policy_for` / :func:`ladder_commit` / :func:`next_level` — the
+  pieces ``run_distributed`` plumbs through its round loop.
+
+``REPRO_AUTOTUNE=off`` disables the timed calibration (deterministic
+heuristic policy; conflict feedback stays on).  Pin a concrete backend in
+the spec for bit-reproducible mechanism choice across hosts — final
+*state* is backend-independent either way (the parity matrix pins it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import perf_model
+from repro.core.commit import AUTO, BACKENDS, CommitSpec, CommitResult, \
+    _pallas_supported, commit
+from repro.core.messages import Messages, make_messages
+
+# Power-of-two transaction-size ladder (None = whole batch, the M -> inf
+# column of paper Fig 4).  Chosen to bracket the kernel's VMEM-capacity
+# analogue: 4096 * block_v is the largest speculative working set swept in
+# benchmarks/fig4_coarsening.py.
+M_LADDER: tuple = (16, 64, 256, 1024, 4096, None)
+
+# Conflict-density waterlines (conflicts / routed messages per round).
+# Above HIGH the serialization analogue dominates -> shrink M; below LOW
+# transactions are conflict-free -> amortize more dispatch overhead per
+# transaction by growing M.  Between them the level holds (hysteresis).
+HIGH_WATER = 0.30
+LOW_WATER = 0.05
+
+
+@dataclasses.dataclass(frozen=True)
+class TunerPolicy:
+    """Resolved calibration output — frozen + hashable so it can ride in
+    an :class:`~repro.core.engine.EngineConfig` or a jit static arg.
+
+    ``adaptive=False`` (atomic tier: M is meaningless) makes
+    :func:`ladder_commit`/:func:`next_level` degenerate to a plain commit.
+    """
+    backend: str
+    ladder: tuple = M_LADDER
+    init_level: int = len(M_LADDER) - 1
+    adaptive: bool = True
+    high_water: float = HIGH_WATER
+    low_water: float = LOW_WATER
+    sort: bool = True
+    stats: bool = True
+    tile_m: int = 256
+    block_v: int = 512
+    interpret: bool | None = None
+
+    def spec_at(self, level: int) -> CommitSpec:
+        """Concrete CommitSpec for one ladder level."""
+        return CommitSpec(backend=self.backend, m=self.ladder[level],
+                          sort=self.sort, stats=self.stats,
+                          tile_m=self.tile_m, block_v=self.block_v,
+                          interpret=self.interpret)
+
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """Per-tier affine fits from one timed micro-benchmark run."""
+    fine: perf_model.LinearFit          # per-message activity model
+    tiers: tuple                        # ((backend, LinearFit), ...)
+
+    def tier(self, backend: str) -> perf_model.LinearFit | None:
+        for b, f in self.tiers:
+            if b == backend:
+                return f
+        return None
+
+
+def _autotune_enabled() -> bool:
+    return os.environ.get("REPRO_AUTOTUNE", "on").lower() not in (
+        "off", "0", "false")
+
+
+def _sanitize(f: perf_model.LinearFit) -> perf_model.LinearFit:
+    """Clamp a measured fit to the physical region (B, A >= 0).
+
+    Tiny-N timings are noisy; a slightly negative fitted slope
+    extrapolated to a large workload N would predict NEGATIVE time and
+    hand the win to the slowest tier."""
+    return perf_model.LinearFit(intercept=max(f.intercept, 0.0),
+                                slope=max(f.slope, 0.0), r2=f.r2)
+
+
+class AutoTuner:
+    """Process-wide calibration cache + policy factory.
+
+    Measurements use a fixed synthetic ``min``-commit workload (int32,
+    ``v_cal`` vertices) — the mechanism cost is dominated by the
+    sort/scatter/kernel structure shared by every op, so one calibration
+    serves all five ops; the per-call knobs that DO change the executed
+    code (``sort``/``stats``/kernel tiles/interpret) key the cache.
+    """
+
+    def __init__(self, *, ns=(8, 64, 512), v_cal: int = 1 << 12,
+                 warmup: int = 1, repeats: int = 3):
+        self.ns = tuple(ns)
+        self.v_cal = v_cal
+        self.warmup = warmup
+        self.repeats = repeats
+        self._cache: dict = {}
+
+    # -- measurement ------------------------------------------------------
+
+    def _time(self, fn, *args) -> float:
+        import time
+        for _ in range(self.warmup):
+            jax.block_until_ready(fn(*args))
+        ts = []
+        for _ in range(self.repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            ts.append(time.perf_counter() - t0)
+        # min, not median: micro-benchmark noise is one-sided (scheduler
+        # preemption only ever ADDS time), and a polluted sample here
+        # would mis-seed the whole policy
+        return min(ts)
+
+    def _workload(self, n: int):
+        rng = np.random.default_rng(0)
+        state = jnp.full((self.v_cal,), 2 ** 30, jnp.int32)
+        tgt = jnp.asarray(rng.integers(0, self.v_cal, n), jnp.int32)
+        val = jnp.asarray(rng.integers(0, 100, n), jnp.int32)
+        return state, make_messages(tgt, val)
+
+    def calibrate(self, *, sort: bool, stats: bool, tile_m: int,
+                  block_v: int, interpret: bool | None,
+                  with_pallas: bool) -> Calibration:
+        """Timed micro-commits -> per-tier affine fits (cached)."""
+        key = ("cal", sort, stats, tile_m, block_v, interpret, with_pallas)
+        hit = self._cache.get(key)
+        if hit is not None:
+            return hit
+        # fine tier: ONE message per activity => T_fine(N) = N * t_unit
+        state, msgs1 = self._workload(1)
+        spec_f = CommitSpec(backend="atomic", stats=stats)
+        t_unit = self._time(
+            jax.jit(lambda s, m: commit(s, m, "min", spec_f).state),
+            state, msgs1)
+        fine = perf_model.LinearFit(intercept=0.0, slope=t_unit, r2=1.0)
+        tiers = []
+        backends = [b for b in BACKENDS if with_pallas or b != "pallas"]
+        for b in backends:
+            spec = CommitSpec(backend=b, m=None, sort=sort, stats=stats,
+                              tile_m=tile_m, block_v=block_v,
+                              interpret=interpret)
+            fn = jax.jit(lambda s, m, spec=spec:
+                         commit(s, m, "min", spec).state)
+            times = [self._time(fn, *self._workload(n)) for n in self.ns]
+            tiers.append((b, _sanitize(perf_model.fit(self.ns, times))))
+        cal = Calibration(fine=fine, tiers=tuple(tiers))
+        self._cache[key] = cal
+        return cal
+
+    def race(self, finalists: dict, n: int, *, sort: bool, stats: bool,
+             tile_m: int, block_v: int,
+             interpret: bool | None) -> str:
+        """Head-to-head at (near-)workload batch size.
+
+        ``finalists`` maps backend -> the transaction size it would
+        actually RUN with (its ladder seed M*; None = whole batch) — a
+        whole-batch race would make tiers that only differ when tiled
+        indistinguishable.  Affine fits from tiny-N points separate tiers
+        that differ in shape, but tiers within ~20% of each other at the
+        workload's N are inside extrapolation error — measure them
+        directly (cached per power-of-two N bucket) and let the clock
+        decide."""
+        n = min(1 << (max(n, 2) - 1).bit_length(), 8192)
+        key = ("race", tuple(sorted(finalists.items(),
+                                    key=lambda kv: kv[0])), n,
+               sort, stats, tile_m, block_v, interpret)
+        hit = self._cache.get(key)
+        if hit is not None:
+            return hit
+        times = {}
+        for b, m in finalists.items():
+            spec = CommitSpec(backend=b, m=m, sort=sort, stats=stats,
+                              tile_m=tile_m, block_v=block_v,
+                              interpret=interpret)
+            fn = jax.jit(lambda s, msgs, spec=spec:
+                         commit(s, msgs, "min", spec).state)
+            times[b] = self._time(fn, *self._workload(n))
+        winner = min(times, key=times.get)
+        self._cache[key] = winner
+        return winner
+
+    # -- policy -----------------------------------------------------------
+
+    def policy(self, spec: CommitSpec, *, n: int,
+               pallas_ok: bool) -> TunerPolicy:
+        """Backend + M* + ladder seed for an n-message workload."""
+        n = max(int(n), 1)
+        base = dict(sort=spec.sort, stats=spec.stats, tile_m=spec.tile_m,
+                    block_v=spec.block_v, interpret=spec.interpret)
+        if not _autotune_enabled():
+            # deterministic fallback: the paper's default tier (coarse
+            # transactions), M* at the Fig-4 sweet spot bounded by n
+            m_star = min(1024, 1 << max(n - 1, 1).bit_length())
+            backend = "coarse"
+        else:
+            cal = self.calibrate(with_pallas=pallas_ok, **base)
+            cap = max(min(4096, 1 << (n - 1).bit_length()), 2)
+
+            def m_for(b):
+                # the M this tier would seed its ladder with (atomic
+                # ignores M -> whole batch); a user-pinned m wins
+                if b == "atomic":
+                    return None
+                if spec.m is not None:
+                    return spec.m
+                f = cal.tier(b) or cal.tiers[0][1]
+                return perf_model.select_m(cal.fine, f, cap=cap)
+
+            preds = {b: float(f.predict(n)) for b, f in cal.tiers}
+            ranked = sorted(preds, key=preds.get)
+            backend = ranked[0]
+            if (len(ranked) > 1
+                    and preds[ranked[0]] > 0.8 * preds[ranked[1]]):
+                # too close to call from extrapolated fits -> race the
+                # two finalists at the workload's size, each at the M it
+                # would actually run with
+                backend = self.race({b: m_for(b) for b in ranked[:2]}, n,
+                                    **base)
+            m_star = m_for(backend) or n
+        if spec.m is not None:
+            # user pinned the transaction size: tune the backend only
+            return TunerPolicy(backend=backend, ladder=(spec.m,),
+                               init_level=0, adaptive=False, **base)
+        if backend == "atomic":
+            return TunerPolicy(backend=backend, adaptive=False, **base)
+        # stage-2 feedback needs conflict telemetry: stats=True (full), or
+        # the sorted coarse path's cheap O(N) counters.  Without either
+        # (e.g. coarse sort=False stats=False routes through the raw
+        # scatter, conflicts=0) density reads 0.0 forever — degrade
+        # honestly to the calibrated static M* instead of pretending.
+        has_telemetry = spec.stats or (backend == "coarse" and spec.sort)
+        level = next((i for i, m in enumerate(M_LADDER)
+                      if m is not None and m >= m_star), len(M_LADDER) - 1)
+        if m_star >= n:          # whole batch fits one transaction
+            level = len(M_LADDER) - 1
+        return TunerPolicy(backend=backend, ladder=M_LADDER,
+                           init_level=level, adaptive=has_telemetry, **base)
+
+
+DEFAULT_TUNER = AutoTuner()
+
+
+def _pallas_compiled(spec: CommitSpec) -> bool:
+    """True when the pallas tier would run COMPILED for this spec.
+
+    Interpret mode (CPU) is a functional simulator — its flat, huge
+    per-grid-step overhead makes tiny-N calibration fits extrapolate
+    deceptively, and it is never a performance contender; keep it out of
+    the candidate set unless the kernel actually compiles."""
+    if spec.interpret is not None:
+        return not spec.interpret
+    return jax.default_backend() == "tpu"
+
+
+def policy_for(spec: CommitSpec, state, msgs: Messages | None = None, *,
+               n: int | None = None, op: str = "min",
+               tuner: AutoTuner | None = None) -> TunerPolicy:
+    """Resolve an ``"auto"`` spec against a concrete workload shape.
+
+    ``state``/``msgs`` may be tracers — only shapes/dtypes are read; the
+    timed calibration runs on synthetic concrete arrays at trace time.
+    """
+    tuner = tuner or DEFAULT_TUNER
+    if msgs is not None:
+        pallas_ok = _pallas_supported(state, msgs, op)
+        n = msgs.capacity if n is None else n
+    else:
+        pallas_ok = (getattr(state, "ndim", 1) == 1
+                     and state.dtype in (jnp.int32, jnp.float32))
+        n = 1 if n is None else n
+    pallas_ok = pallas_ok and _pallas_compiled(spec)
+    return tuner.policy(spec, n=n, pallas_ok=pallas_ok)
+
+
+def resolve_spec(spec: CommitSpec, state, msgs: Messages,
+                 op: str) -> CommitSpec:
+    """``commit()``'s hook: auto spec -> concrete calibrated spec.
+
+    A user-pinned ``m`` survives (the policy pins its ladder to it)."""
+    pol = policy_for(spec, state, msgs, op=op)
+    return pol.spec_at(pol.init_level)
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: the conflict-feedback ladder (traced)
+# ---------------------------------------------------------------------------
+
+
+def ladder_commit(state, msgs: Messages, op: str, policy: TunerPolicy,
+                  level) -> CommitResult:
+    """Commit at the ladder level selected by the traced ``level`` index.
+
+    A ``lax.switch`` over one pre-built branch per ladder entry — every
+    branch returns identical shapes (final state is M-independent, pinned
+    by ``test_parity_matrix_tiled``), so the transaction size can change
+    round-to-round inside ``lax.while_loop``/``shard_map``.
+    """
+    if not policy.adaptive or msgs.capacity == 0:
+        return commit(state, msgs, op, policy.spec_at(policy.init_level))
+    branches = [
+        (lambda s, m, _sp=policy.spec_at(i): commit(s, m, op, _sp))
+        for i in range(len(policy.ladder))
+    ]
+    lvl = jnp.clip(jnp.asarray(level, jnp.int32), 0, len(branches) - 1)
+    return jax.lax.switch(lvl, branches, state, msgs)
+
+
+def next_level(policy: TunerPolicy, level, conflicts, messages):
+    """One feedback step: conflict density -> ladder move.
+
+    density > high_water (abort storm)  => level-1 (shrink M);
+    density < low_water  (quiet round)  => level+1 (grow M);
+    otherwise hold.  All inputs replicated scalars, so every shard of a
+    distributed run moves in lockstep.
+    """
+    if not policy.adaptive:
+        return level
+    level = jnp.asarray(level, jnp.int32)
+    dens = (conflicts.astype(jnp.float32)
+            / jnp.maximum(messages.astype(jnp.float32), 1.0))
+    step = (jnp.where(dens < policy.low_water, 1, 0)
+            - jnp.where(dens > policy.high_water, 1, 0))
+    return jnp.clip(level + step, 0, len(policy.ladder) - 1)
+
+
+def make_commit_step(spec: CommitSpec | None, op: str, state, msgs_like=None,
+                     *, n: int | None = None):
+    """Uniform per-round commit handle for the single-shard wave loops.
+
+    Returns ``(step, level0)`` where ``step(state, msgs, level) ->
+    (CommitResult, level')``.  For concrete backends the level is a dummy
+    passthrough; for ``backend="auto"`` stage-1 calibration seeds the
+    ladder and ``step`` applies stage-2 conflict feedback.  Call at trace
+    time (outside the loop), carry ``level`` through the loop.
+    """
+    level0 = jnp.zeros((), jnp.int32)
+    if spec is None or spec.backend != AUTO:
+        def step(state, msgs, level, _spec=spec):
+            return commit(state, msgs, op, _spec), level
+        return step, level0
+    policy = policy_for(spec, state, msgs_like, n=n, op=op)
+
+    def step(state, msgs, level):
+        res = ladder_commit(state, msgs, op, policy, level)
+        nv = jnp.sum(msgs.valid.astype(jnp.int32))
+        return res, next_level(policy, level, res.conflicts, nv)
+
+    return step, jnp.asarray(policy.init_level, jnp.int32)

@@ -33,11 +33,30 @@ class BucketPlan:
     dropped: jax.Array        # int32 — overflow count (requeued by caller)
 
 
+# Above this many buckets the dense planner's O(n·num_buckets) one-hot
+# dominates memory (large-mesh routing); the sort-based planner computes the
+# SAME stable ranks in O(n log n) — test_bucket_roundtrip pins the equality.
+DENSE_PLANNER_MAX_BUCKETS = 32
+
+
 def plan_buckets(owner: jax.Array, valid: jax.Array, num_buckets: int,
                  capacity: int) -> BucketPlan:
     """Stable bucketing: position = rank of the message within its bucket
     in original order (priority = arrival order, like the paper's queues and
-    like position-priority MoE routers)."""
+    like position-priority MoE routers).
+
+    Dispatches to :func:`plan_buckets_sorted` above
+    :data:`DENSE_PLANNER_MAX_BUCKETS` so large-mesh routing never
+    materializes the O(n·num_buckets) one-hot; both planners produce
+    identical plans (stable arrival-order ranks)."""
+    if num_buckets > DENSE_PLANNER_MAX_BUCKETS:
+        return plan_buckets_sorted(owner, valid, num_buckets, capacity)[0]
+    return plan_buckets_dense(owner, valid, num_buckets, capacity)
+
+
+def plan_buckets_dense(owner: jax.Array, valid: jax.Array, num_buckets: int,
+                       capacity: int) -> BucketPlan:
+    """The dense one-hot planner (O(n·num_buckets) — small bucket counts)."""
     n = owner.shape[0]
     owner = jnp.where(valid, owner, num_buckets)
     onehot = jax.nn.one_hot(owner, num_buckets + 1, dtype=jnp.int32)

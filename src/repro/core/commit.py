@@ -35,6 +35,7 @@ from repro.core.messages import Messages
 
 OPS = ("min", "max", "add", "or", "first")
 BACKENDS = ("atomic", "coarse", "pallas")
+AUTO = "auto"   # CommitSpec(backend="auto"): online-calibrated backend + M
 
 
 def _identity(op: str, dtype):
@@ -66,14 +67,22 @@ class CommitResult:
 class CommitSpec:
     """How to execute a commit — the mechanism, not the semantics.
 
-    backend:   one of :data:`BACKENDS`; ``pallas`` falls back to ``coarse``
-               for payload shapes/dtypes the kernel does not support.
+    backend:   one of :data:`BACKENDS`, or ``"auto"`` — the
+               :mod:`repro.core.autotune` tuner calibrates the §5.3 perf
+               model at trace time (timed micro-commits of a synthetic
+               workload sized to this call's batch) and picks the
+               backend and transaction size M*; ``pallas`` falls back to
+               ``coarse`` for payload shapes/dtypes the kernel does not
+               support.
     m:         transaction size (messages per transaction); ``None`` = the
                whole batch is one transaction.
     sort:      coalesce by sorting messages by target before resolution
                (jnp tiers only; the kernel always resolves in-VMEM).
-    stats:     compute full MF success flags + O(V) telemetry; ``False``
-               keeps the cheap O(N) conflict/applied counters.
+    stats:     compute full MF success flags + O(V) telemetry.  ``False``:
+               the sorted jnp tiers keep cheap O(N) conflict/applied
+               counters; the unsorted scatter path and the ``pallas``
+               kernel (which then skips its in-kernel conflict reduction
+               and extra output entirely) report zero conflicts.
     tile_m:    pallas transaction tile (used when ``m`` is None).
     block_v:   pallas state block resident in VMEM.
     interpret: force pallas interpret mode; ``None`` = off-TPU auto.
@@ -111,11 +120,15 @@ def commit(state: jax.Array, msgs: Messages, op: str,
     spec = spec if spec is not None else CommitSpec()
     if op not in OPS:
         raise ValueError(f"op {op!r} not in {OPS}")
-    if spec.backend not in BACKENDS:
-        raise ValueError(f"backend {spec.backend!r} not in {BACKENDS}")
+    if spec.backend not in BACKENDS + (AUTO,):
+        raise ValueError(f"backend {spec.backend!r} not in "
+                         f"{BACKENDS + (AUTO,)}")
     if msgs.capacity == 0:
         z = jnp.zeros((), jnp.int32)
         return CommitResult(state, jnp.zeros((0,), bool), z, z)
+    if spec.backend == AUTO:
+        from repro.core.autotune import resolve_spec   # lazy: no cycle
+        spec = resolve_spec(spec, state, msgs, op)
     backend = spec.backend
     if backend == "pallas" and not _pallas_supported(state, msgs, op):
         backend = "coarse"
@@ -145,12 +158,17 @@ def _pallas_commit(state, msgs: Messages, op: str,
     interpret = (spec.interpret if spec.interpret is not None
                  else jax.default_backend() != "tpu")
     tile_m = spec.m if spec.m is not None else spec.tile_m
+    if not spec.stats:
+        # cheap path: the kernel skips the per-block conflict reduction
+        # and its extra output entirely
+        new = coarse_commit_pallas(
+            state, idx, msgs.payload, op=op, tile_m=tile_m,
+            block_v=spec.block_v, interpret=interpret, stats=False)
+        z = jnp.zeros((), jnp.int32)
+        return CommitResult(new, msgs.valid, z, z)
     new, conflicts = coarse_commit_pallas(
         state, idx, msgs.payload, op=op, tile_m=tile_m,
         block_v=spec.block_v, interpret=interpret, stats=True)
-    if not spec.stats:
-        z = jnp.zeros((), jnp.int32)
-        return CommitResult(new, msgs.valid, conflicts, z)
     if op == "first":
         success, _, applied = _first_stats(state, msgs)
     else:

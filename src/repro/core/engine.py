@@ -42,6 +42,7 @@ import jax.numpy as jnp
 
 from repro import compat
 
+from repro.core import autotune as AT
 from repro.core import commit as C
 from repro.core.coalescing import (BucketPlan, gather_from_buckets,
                                    plan_buckets_sorted, scatter_to_buckets)
@@ -57,6 +58,7 @@ class EngineConfig:
     m: int | None = None    # transaction size (None = whole batch)
     op: str = "min"
     spec: C.CommitSpec | None = None   # commit backend; None = coarse(m)
+    tuner: AT.TunerPolicy | None = None  # set by run_distributed for "auto"
 
     @property
     def commit_spec(self) -> C.CommitSpec:
@@ -64,18 +66,27 @@ class EngineConfig:
             return self.spec
         return C.CommitSpec(backend="coarse", m=self.m)
 
+    def _commit(self, state, msgs, level=None):
+        """Owner-side commit: calibrated ladder when a tuner policy is
+        bound (``backend="auto"``), the static spec otherwise."""
+        if self.tuner is not None and level is not None:
+            return AT.ladder_commit(state, msgs, self.op, self.tuner, level)
+        return C.commit(state, msgs, self.op, self.commit_spec)
+
 
 def _tree_all_to_all(x, axis: str):
     return jax.tree.map(
         lambda a: jax.lax.all_to_all(a, axis, 0, 0, tiled=True), x)
 
 
-def route_wave(ecfg: EngineConfig, state_l, target, payload, pending):
+def route_wave(ecfg: EngineConfig, state_l, target, payload, pending,
+               level=None):
     """One coalescing sub-round under shard_map (DEPRECATED for direct use —
     see module docstring; overflow beyond C is NOT requeued here).
 
     state_l: pytree of [block] local owner slices; payload: matching pytree
-    of [n] fields; target: [n] GLOBAL vertex ids; pending: [n] bool.
+    of [n] fields; target: [n] GLOBAL vertex ids; pending: [n] bool;
+    level: traced ladder index for an ``ecfg.tuner`` adaptive commit.
     Returns (state_l, delivered_mask, success pytree, conflicts)."""
     P, Cp = ecfg.num_shards, ecfg.capacity
     owner = target // ecfg.block
@@ -97,8 +108,8 @@ def route_wave(ecfg: EngineConfig, state_l, target, payload, pending):
     new_st, succs = [], []
     conflicts = jnp.zeros((), jnp.int32)
     for i, (st, pl) in enumerate(zip(st_leaves, pl_leaves)):
-        res = C.commit(st, make_messages(local_idx, pl.reshape(-1), valid),
-                       ecfg.op, ecfg.commit_spec)
+        res = ecfg._commit(st, make_messages(local_idx, pl.reshape(-1),
+                                             valid), level)
         new_st.append(res.state)
         if i == 0:
             # slot collisions depend on (target, valid) only, which every
@@ -117,14 +128,16 @@ def route_wave(ecfg: EngineConfig, state_l, target, payload, pending):
 
 
 def wave_until_delivered(ecfg: EngineConfig, state_l, target, payload,
-                         valid, max_subrounds: int = 64):
+                         valid, max_subrounds: int = 64, level=None):
     """Deliver ALL messages (sub-rounds until nothing pending).
 
     Returns (state_l, success pytree, conflicts, subrounds, delivered_all).
     ``delivered_all`` is False when ``max_subrounds`` was exhausted with
     messages still pending — callers MUST surface it instead of silently
     dropping the tail (the capacity-C requeue loop normally terminates for
-    any C >= 1: each sub-round delivers up to C messages per owner)."""
+    any C >= 1: each sub-round delivers up to C messages per owner).
+    ``level`` is the (constant-per-wave) adaptive-ladder index when
+    ``ecfg.tuner`` is set."""
     n = target.shape[0]
     st_leaves, tdef = jax.tree_util.tree_flatten(state_l)
     succ0 = tdef.unflatten([jnp.zeros((n,), bool) for _ in st_leaves])
@@ -137,7 +150,7 @@ def wave_until_delivered(ecfg: EngineConfig, state_l, target, payload,
     def body(c):
         state_l, pending, success, conflicts, it = c
         state_l, kept, succ, cf = route_wave(ecfg, state_l, target, payload,
-                                             pending)
+                                             pending, level)
         success = jax.tree.map(lambda sn, so: jnp.where(kept, sn, so),
                                succ, success)
         return (state_l, pending & ~kept, success, conflicts + cf, it + 1)
@@ -269,12 +282,14 @@ class WaveRuntime:
     """
 
     def __init__(self, ecfg: EngineConfig, layout: ShardLayout,
-                 max_subrounds: int):
+                 max_subrounds: int, level=None):
         self.ecfg = ecfg
         self.layout = layout
         self.max_subrounds = max_subrounds
+        self.level = level          # adaptive-ladder index (traced int32)
         self.conflicts = jnp.zeros((), jnp.int32)
         self.subrounds = jnp.zeros((), jnp.int32)
+        self.messages = jnp.zeros((), jnp.int32)   # routed msgs this round
         self.delivered_all = jnp.ones((), bool)
 
     @property
@@ -300,9 +315,12 @@ class WaveRuntime:
         pytrees of [block]/[n] fields sharing one bucket plan."""
         ecfg = dataclasses.replace(self.ecfg, op=op)
         state_l, success, cf, sr, dall = wave_until_delivered(
-            ecfg, state_l, target, payload, valid, self.max_subrounds)
+            ecfg, state_l, target, payload, valid, self.max_subrounds,
+            self.level)
         self.conflicts = self.conflicts + cf
         self.subrounds = self.subrounds + sr
+        self.messages = self.messages + self.psum(
+            jnp.sum(valid.astype(jnp.int32)))
         self.delivered_all = self.delivered_all & dall
         return state_l, success
 
@@ -358,6 +376,8 @@ class DistributedResult:
     conflicts: jax.Array    # int32 — commit conflicts across all waves
     subrounds: jax.Array    # int32 — coalescing sub-rounds across all waves
     delivered_all: jax.Array  # bool
+    m_final: jax.Array      # int32 — final adaptive transaction size M
+    #                         (0 = whole batch, -1 = static spec, no tuner)
 
 
 def run_distributed(alg: AlgorithmSpec, mesh, g, *, capacity: int = 4096,
@@ -372,10 +392,13 @@ def run_distributed(alg: AlgorithmSpec, mesh, g, *, capacity: int = 4096,
     (``while active and rounds < max_rounds``), and telemetry aggregation.
     ``capacity``/``m`` are the paper's C (coalescing factor) and M
     (transaction size); ``spec`` picks the commit backend per
-    :class:`repro.core.commit.CommitSpec`.  ``edges`` accepts a
-    precomputed ``partition_edges(g, mesh.shape[axis])`` result so
-    wrappers that also need the lane layout (Boruvka's edge-state
-    finalize) partition only once.
+    :class:`repro.core.commit.CommitSpec` — ``backend="auto"`` calibrates
+    the perf model once per run (backend + ladder seed M*) and then
+    adapts the transaction size per round from the psum'd conflict
+    telemetry (Tables 3c/3f feedback).  ``edges`` accepts a precomputed
+    ``partition_edges(g, mesh.shape[axis])`` result so wrappers that also
+    need the lane layout (Boruvka's edge-state finalize) partition only
+    once.
     """
     from jax.sharding import PartitionSpec as Ps
     from repro.graphs.csr import partition_edges
@@ -388,6 +411,16 @@ def run_distributed(alg: AlgorithmSpec, mesh, g, *, capacity: int = 4096,
                          g.num_edges)
     ecfg = EngineConfig(P, part.block, capacity, axis=axis, m=m, spec=spec)
     state0, scalars0 = alg.init(g, layout)
+    tuner = None
+    if ecfg.commit_spec.backend == C.AUTO:
+        # stage-1 calibration BEFORE tracing: per-shard commits see a
+        # [block] state slice and up to P*C routed messages per sub-round
+        leaf = jax.tree_util.tree_leaves(state0)[0]
+        tuner = AT.policy_for(
+            ecfg.commit_spec, jax.ShapeDtypeStruct((part.block,),
+                                                   leaf.dtype),
+            n=min(P * capacity, g.num_edges or 1))
+        ecfg = dataclasses.replace(ecfg, spec=None, tuner=tuner)
     max_rounds = int(alg.max_rounds(g, layout))
 
     def shard_fn(state, scalars, src_l, dst_l, w_l, val_l, eid_l):
@@ -398,37 +431,49 @@ def run_distributed(alg: AlgorithmSpec, mesh, g, *, capacity: int = 4096,
             my_src=jnp.clip(src_l[0] - shard * part.block, 0,
                             part.block - 1))
         z = jnp.zeros((), jnp.int32)
+        level0 = jnp.asarray(tuner.init_level if tuner else 0, jnp.int32)
 
         def cond(c):
             return c[-1] & (c[-2] < max_rounds)
 
         def body(c):
-            state, scalars, conflicts, subrounds, dall, it, _ = c
-            rt = WaveRuntime(ecfg, layout, max_subrounds)
+            state, scalars, conflicts, subrounds, dall, level, it, _ = c
+            rt = WaveRuntime(ecfg, layout, max_subrounds, level=level)
             state, scalars, active = alg.round_fn(rt, edges, state, scalars,
                                                   it)
+            if tuner is not None:
+                # stage-2 feedback: this round's psum'd conflicts vs
+                # routed messages move the ladder (replicated => every
+                # shard steps identically)
+                level = AT.next_level(tuner, level, rt.conflicts,
+                                      rt.messages)
             return (state, scalars, conflicts + rt.conflicts,
                     subrounds + rt.subrounds, dall & rt.delivered_all,
-                    it + 1, active)
+                    level, it + 1, active)
 
-        (state, scalars, conflicts, subrounds, dall, rounds, _) = \
+        (state, scalars, conflicts, subrounds, dall, level, rounds, _) = \
             jax.lax.while_loop(cond, body,
                                (state, scalars, z, z, jnp.ones((), bool),
-                                z, jnp.ones((), bool)))
-        return state, scalars, conflicts, subrounds, dall, rounds
+                                level0, z, jnp.ones((), bool)))
+        if tuner is not None:
+            ms = jnp.asarray([m or 0 for m in tuner.ladder], jnp.int32)
+            m_final = ms[jnp.clip(level, 0, len(tuner.ladder) - 1)]
+        else:
+            m_final = jnp.full((), -1, jnp.int32)
+        return state, scalars, conflicts, subrounds, dall, rounds, m_final
 
     st_specs = jax.tree.map(lambda _: Ps(axis), state0)
     sc_specs = jax.tree.map(lambda _: Ps(), scalars0)
     fn = compat.shard_map(
         shard_fn, mesh=mesh,
         in_specs=(st_specs, sc_specs) + (Ps(axis),) * 5,
-        out_specs=(st_specs, sc_specs, Ps(), Ps(), Ps(), Ps()),
+        out_specs=(st_specs, sc_specs, Ps(), Ps(), Ps(), Ps(), Ps()),
         check_vma=False)
-    state, scalars, conflicts, subrounds, dall, rounds = jax.jit(fn)(
-        state0, scalars0, src, dst, w, val, eid)
+    state, scalars, conflicts, subrounds, dall, rounds, m_final = jax.jit(
+        fn)(state0, scalars0, src, dst, w, val, eid)
     return DistributedResult(state=state, scalars=scalars, rounds=rounds,
                              conflicts=conflicts, subrounds=subrounds,
-                             delivered_all=dall)
+                             delivered_all=dall, m_final=m_final)
 
 
 # Legacy entry points live with their algorithms now; keep the old import

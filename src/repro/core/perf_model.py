@@ -51,9 +51,17 @@ def crossing_point(fine: LinearFit, coarse: LinearFit) -> float | None:
 def select_m(fine: LinearFit, coarse: LinearFit, *, cap: int = 4096,
              safety: float = 2.0) -> int:
     """Pick a transaction size comfortably past the crossing point but
-    bounded by the VMEM-capacity analogue ``cap`` (paper: HTM buffer)."""
+    bounded by the VMEM-capacity analogue ``cap`` (paper: HTM buffer).
+
+    The result is a power of two and NEVER exceeds ``cap``: rounding up
+    could overshoot the speculative-state capacity (e.g. ``cap=3000`` with
+    ``n*safety >= 2049`` used to return 4096), so an overshooting round-up
+    falls back to the largest power of two <= cap."""
     n = crossing_point(fine, coarse)
     if n is None:
         return 1
     m = int(max(2, min(cap, n * safety)))
-    return 1 << (m - 1).bit_length()   # round to power of two tiles
+    p = 1 << (m - 1).bit_length()      # round to power of two tiles
+    while p > cap:                     # respect the HTM-buffer cap
+        p >>= 1
+    return max(p, 1)

@@ -15,6 +15,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import autotune as AT
 from repro.core import commit as C
 from repro.core.messages import Messages, make_messages
 from repro.graphs.csr import Graph
@@ -42,25 +43,27 @@ def bfs(g: Graph, source, *, commit: str = "coarse", m: int | None = None,
     v = g.num_vertices
     dist0 = jnp.full((v,), INF, jnp.int32).at[source].set(0)
     frontier0 = jnp.zeros((v,), bool).at[source].set(True)
-    cfn = lambda st, msgs: C.commit(st, msgs, "min", spec)
+    # backend="auto": calibrated ladder commit; the level rides the carry
+    step, lvl0 = AT.make_commit_step(spec, "min", dist0,
+                                     n=g.src.shape[0])
 
     def cond(state):
         _, frontier, it, *_ = state
         return jnp.any(frontier) & (it < v)
 
     def body(state):
-        dist, frontier, it, nmsg, ncf, nap = state
+        dist, frontier, it, lvl, nmsg, ncf, nap = state
         active = frontier[g.src]
         msgs = make_messages(g.dst, dist[g.src] + 1, active)
-        res = cfn(dist, msgs)
+        res, lvl = step(dist, msgs, lvl)
         changed = res.state != dist
-        return (res.state, changed, it + 1,
+        return (res.state, changed, it + 1, lvl,
                 nmsg + jnp.sum(active.astype(jnp.int32)),
                 ncf + res.conflicts, nap + res.applied)
 
     z = jnp.zeros((), jnp.int32)
-    dist, _, rounds, nmsg, ncf, nap = jax.lax.while_loop(
-        cond, body, (dist0, frontier0, z, z, z, z))
+    dist, _, rounds, _, nmsg, ncf, nap = jax.lax.while_loop(
+        cond, body, (dist0, frontier0, z, lvl0, z, z, z))
     return BfsResult(dist, rounds, nmsg, ncf, nap)
 
 

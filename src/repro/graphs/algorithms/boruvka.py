@@ -14,6 +14,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import autotune as AT
 from repro.core import commit as C
 from repro.core.messages import make_messages
 from repro.graphs.csr import Graph
@@ -58,26 +59,32 @@ def boruvka(g: Graph, *, spec: C.CommitSpec | None = None):
         spec = C.CommitSpec(backend="coarse", sort=False, stats=False)
     v, e = g.num_vertices, g.num_edges
     jump = max(int(v).bit_length(), 1)
+    # two commit sites with different state dtypes (f32 weights, i32 edge
+    # ids) -> two independent adaptive ladders
+    step_w, lvl_w0 = AT.make_commit_step(spec, "min", jnp.full((v,), INF),
+                                         n=e)
+    step_e, lvl_e0 = AT.make_commit_step(spec, "min",
+                                         jnp.full((v,), e, jnp.int32), n=e)
 
     def cond(state):
-        _, _, changed, it = state
+        _, _, changed, it, *_ = state
         return changed & (it < jump + 1)
 
     def body(state):
-        comp, in_mst, _, it = state
+        comp, in_mst, _, it, lvl_w, lvl_e = state
         cs, cd = comp[g.src], comp[g.dst]
         cross = cs != cd
         w = jnp.where(cross, g.weights, INF)
         # two-pass lexicographic argmin (weight, edge id): each pass is an
         # MF min-commit of per-edge messages into per-component state
-        best_w = C.commit(jnp.full((v,), INF),
-                          make_messages(cs, g.weights, cross),
-                          "min", spec).state
+        res_w, lvl_w = step_w(jnp.full((v,), INF),
+                              make_messages(cs, g.weights, cross), lvl_w)
+        best_w = res_w.state
         eid = jnp.arange(e, dtype=jnp.int32)
         cand = cross & (w == best_w[cs]) & (best_w[cs] < INF)
-        best_e = C.commit(jnp.full((v,), e, jnp.int32),
-                          make_messages(cs, eid, cand),
-                          "min", spec).state
+        res_e, lvl_e = step_e(jnp.full((v,), e, jnp.int32),
+                              make_messages(cs, eid, cand), lvl_e)
+        best_e = res_e.state
         has = best_e < e
         sel = jnp.clip(best_e, 0, e - 1)
         # hook: root of cs -> comp of chosen dst
@@ -91,12 +98,13 @@ def boruvka(g: Graph, *, spec: C.CommitSpec | None = None):
         new_comp = parent[comp]
         in_mst = in_mst.at[sel].max(has, mode="drop")
         changed = jnp.any(new_comp != comp)
-        return new_comp, in_mst, changed, it + 1
+        return new_comp, in_mst, changed, it + 1, lvl_w, lvl_e
 
     comp0 = jnp.arange(v)
     in0 = jnp.zeros((e,), bool)
-    comp, in_mst, _, rounds = jax.lax.while_loop(
-        cond, body, (comp0, in0, jnp.ones((), bool), jnp.zeros((), jnp.int32)))
+    comp, in_mst, _, rounds, _, _ = jax.lax.while_loop(
+        cond, body, (comp0, in0, jnp.ones((), bool), jnp.zeros((), jnp.int32),
+                     lvl_w0, lvl_e0))
     weight, n_edges = _dedupe_mst_pairs(g, in_mst)
     return comp, weight, n_edges, rounds
 

@@ -13,6 +13,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import autotune as AT
 from repro.core import commit as C
 from repro.core.messages import make_messages
 from repro.graphs.csr import Graph
@@ -64,12 +65,15 @@ def coloring(g: Graph, *, palette: int | None = None, seed: int = 0,
         return _propose(jnp.arange(v, dtype=jnp.uint32), active, color, pal,
                         seed, rnd)
 
+    zeros = jnp.zeros((v,), jnp.int32)
+    step, lvl0 = AT.make_commit_step(spec, "or", zeros, n=g.num_edges)
+
     def cond(state):
-        _, active, it = state
+        _, active, it, _ = state
         return jnp.any(active) & (it < max_rounds)
 
     def body(state):
-        color, active, it = state
+        color, active, it, lvl = state
         color = propose(active, color, it)
         cs, cd = color[g.src], color[g.dst]
         conflict = cs == cd                       # per-edge conflict
@@ -78,14 +82,13 @@ def coloring(g: Graph, *, palette: int | None = None, seed: int = 0,
         # next-round active mask (losers may be named by many edges)
         msgs = make_messages(loser, jnp.ones((g.num_edges,), jnp.int32),
                              conflict)
-        new_active = C.commit(jnp.zeros((v,), jnp.int32), msgs, "or",
-                              spec).state != 0
-        return color, new_active, it + 1
+        res, lvl = step(zeros, msgs, lvl)
+        return color, res.state != 0, it + 1, lvl
 
     color0 = jnp.zeros((v,), jnp.int32)
     active0 = jnp.ones((v,), bool)
-    color, active, rounds = jax.lax.while_loop(
-        cond, body, (color0, active0, jnp.zeros((), jnp.int32)))
+    color, active, rounds, _ = jax.lax.while_loop(
+        cond, body, (color0, active0, jnp.zeros((), jnp.int32), lvl0))
     return color, rounds, jnp.any(active)   # any=True -> didn't converge
 
 

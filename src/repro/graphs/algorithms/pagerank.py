@@ -13,6 +13,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import autotune as AT
 from repro.core import commit as C
 from repro.core.messages import make_messages
 from repro.graphs.csr import Graph
@@ -27,20 +28,21 @@ def pagerank(g: Graph, *, d: float = 0.85, iters: int = 20,
     v = g.num_vertices
     deg = jnp.maximum(g.degrees, 1).astype(jnp.float32)
     dangling = g.degrees == 0
-    cfn = lambda st, msgs: C.commit(st, msgs, "add", spec)
+    acc0 = jnp.zeros((v,), jnp.float32)
+    step, lvl0 = AT.make_commit_step(spec, "add", acc0, n=g.src.shape[0])
 
     def body(carry, _):
-        rank, conflicts = carry
+        rank, conflicts, lvl = carry
         contrib = d * rank[g.src] / deg[g.src]
         msgs = make_messages(g.dst, contrib, jnp.ones_like(g.src, bool))
-        res = cfn(jnp.zeros((v,), jnp.float32), msgs)
+        res, lvl = step(acc0, msgs, lvl)
         dangle = d * jnp.sum(jnp.where(dangling, rank, 0.0)) / v
         rank = (1.0 - d) / v + res.state + dangle
-        return (rank, conflicts + res.conflicts), None
+        return (rank, conflicts + res.conflicts, lvl), None
 
     rank0 = jnp.full((v,), 1.0 / v, jnp.float32)
-    (rank, conflicts), _ = jax.lax.scan(
-        body, (rank0, jnp.zeros((), jnp.int32)), None, length=iters)
+    (rank, conflicts, _), _ = jax.lax.scan(
+        body, (rank0, jnp.zeros((), jnp.int32), lvl0), None, length=iters)
     return rank, conflicts
 
 

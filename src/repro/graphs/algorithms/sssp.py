@@ -7,6 +7,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import autotune as AT
 from repro.core import commit as C
 from repro.core.messages import make_messages
 from repro.graphs.csr import Graph
@@ -22,21 +23,22 @@ def sssp(g: Graph, source, *, commit: str = "coarse", m: int | None = None,
     v = g.num_vertices
     dist0 = jnp.full((v,), INF, jnp.float32).at[source].set(0.0)
     frontier0 = jnp.zeros((v,), bool).at[source].set(True)
-    cfn = lambda st, msgs: C.commit(st, msgs, "min", spec)
+    step, lvl0 = AT.make_commit_step(spec, "min", dist0,
+                                     n=g.src.shape[0])
 
     def cond(state):
-        _, frontier, it = state
+        _, frontier, it, _ = state
         return jnp.any(frontier) & (it < v)
 
     def body(state):
-        dist, frontier, it = state
+        dist, frontier, it, lvl = state
         active = frontier[g.src]
         msgs = make_messages(g.dst, dist[g.src] + g.weights, active)
-        res = cfn(dist, msgs)
-        return res.state, res.state != dist, it + 1
+        res, lvl = step(dist, msgs, lvl)
+        return res.state, res.state != dist, it + 1, lvl
 
-    dist, _, rounds = jax.lax.while_loop(
-        cond, body, (dist0, frontier0, jnp.zeros((), jnp.int32)))
+    dist, _, rounds, _ = jax.lax.while_loop(
+        cond, body, (dist0, frontier0, jnp.zeros((), jnp.int32), lvl0))
     return dist, rounds
 
 

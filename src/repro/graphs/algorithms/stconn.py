@@ -11,6 +11,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import autotune as AT
 from repro.core import commit as C
 from repro.core.messages import make_messages
 from repro.graphs.csr import Graph
@@ -25,26 +26,28 @@ def st_connectivity(g: Graph, s, t, *, spec: C.CommitSpec | None = None):
     v = g.num_vertices
     color0 = jnp.full((v,), WHITE, jnp.int32).at[s].set(GREY).at[t].set(GREEN)
     frontier0 = jnp.zeros((v,), bool).at[s].set(True).at[t].set(True)
+    step, lvl0 = AT.make_commit_step(spec, "first", color0,
+                                     n=g.src.shape[0])
 
     def cond(state):
-        color, frontier, found, it = state
+        color, frontier, found, it, _ = state
         return jnp.any(frontier) & ~found & (it < v)
 
     def body(state):
-        color, frontier, found, it = state
+        color, frontier, found, it, lvl = state
         active = frontier[g.src]
         # meeting check on live edges (the FR "returns true" path)
         meet = active & (color[g.src] != WHITE) & (color[g.dst] != WHITE) \
             & (color[g.src] != color[g.dst])
         found = found | jnp.any(meet)
         msgs = make_messages(g.dst, color[g.src], active)
-        res = C.commit(color, msgs, "first", spec)
+        res, lvl = step(color, msgs, lvl)
         changed = res.state != color
-        return res.state, changed, found, it + 1
+        return res.state, changed, found, it + 1, lvl
 
-    color, _, found, rounds = jax.lax.while_loop(
+    color, _, found, rounds, _ = jax.lax.while_loop(
         cond, body, (color0, frontier0, jnp.zeros((), bool),
-                     jnp.zeros((), jnp.int32)))
+                     jnp.zeros((), jnp.int32), lvl0))
     # exhaustive fallback: same color reached both? (disconnected otherwise)
     return found, rounds
 

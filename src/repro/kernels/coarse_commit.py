@@ -49,7 +49,7 @@ def _identity(op: str, dtype):
 _RANK_INF = 2 ** 30     # plain int: jnp constants can't be kernel captures
 
 
-def _commit_kernel(idx_ref, val_ref, state_ref, out_ref, conf_ref, *,
+def _commit_kernel(idx_ref, val_ref, state_ref, out_ref, conf_ref=None, *,
                    op: str, tile_m: int, block_v: int):
     b = pl.program_id(0)
     m = pl.program_id(1)
@@ -67,10 +67,12 @@ def _commit_kernel(idx_ref, val_ref, state_ref, out_ref, conf_ref, *,
     lane = jax.lax.broadcasted_iota(jnp.int32, (tile_m, block_v), 1)
     onehot = (lane == relc[:, None]) & mask[:, None]     # [M, B]
 
-    # conflict telemetry: in-transaction messages sharing a target in this
-    # block (the abort-statistics analogue; summed over the grid outside)
-    cnt = jnp.sum(onehot.astype(jnp.int32), axis=0)      # [B]
-    conf_ref[0, 0] = jnp.sum(jnp.where(cnt > 1, cnt, 0))
+    if conf_ref is not None:
+        # conflict telemetry: in-transaction messages sharing a target in
+        # this block (the abort-statistics analogue; summed over the grid
+        # outside).  stats=False omits the ref and skips the reduction.
+        cnt = jnp.sum(onehot.astype(jnp.int32), axis=0)  # [B]
+        conf_ref[0, 0] = jnp.sum(jnp.where(cnt > 1, cnt, 0))
 
     if op == "add":
         if jnp.issubdtype(val.dtype, jnp.floating):
@@ -140,7 +142,12 @@ def coarse_commit_pallas(state, idx, val, *, op: str = "min",
     nb = (v + vpad) // block_v
     nm = (n + npad) // tile_m
 
-    out, conf = pl.pallas_call(
+    out_specs = [pl.BlockSpec((block_v,), lambda b, m: (b,))]
+    out_shape = [jax.ShapeDtypeStruct(state_p.shape, state.dtype)]
+    if stats:
+        out_specs.append(pl.BlockSpec((1, 1), lambda b, m: (b, m)))
+        out_shape.append(jax.ShapeDtypeStruct((nb, nm), jnp.int32))
+    res = pl.pallas_call(
         functools.partial(_commit_kernel, op=op, tile_m=tile_m,
                           block_v=block_v),
         grid=(nb, nm),
@@ -149,16 +156,11 @@ def coarse_commit_pallas(state, idx, val, *, op: str = "min",
             pl.BlockSpec((tile_m,), lambda b, m: (m,)),
             pl.BlockSpec((block_v,), lambda b, m: (b,)),
         ],
-        out_specs=[
-            pl.BlockSpec((block_v,), lambda b, m: (b,)),
-            pl.BlockSpec((1, 1), lambda b, m: (b, m)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct(state_p.shape, state.dtype),
-            jax.ShapeDtypeStruct((nb, nm), jnp.int32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(idx_p, val_p, state_p)
     if stats:
+        out, conf = res
         return out[:v], jnp.sum(conf)
-    return out[:v]
+    return res[0][:v]

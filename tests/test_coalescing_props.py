@@ -6,9 +6,10 @@ import jax.numpy as jnp
 
 from _hypothesis_compat import given, settings, strategies as st
 
-from repro.core.coalescing import (bucket_message_ids, gather_from_buckets,
-                                   plan_buckets, plan_buckets_sorted,
-                                   scatter_to_buckets)
+from repro.core.coalescing import (DENSE_PLANNER_MAX_BUCKETS,
+                                   bucket_message_ids, gather_from_buckets,
+                                   plan_buckets, plan_buckets_dense,
+                                   plan_buckets_sorted, scatter_to_buckets)
 
 
 @st.composite
@@ -47,6 +48,30 @@ def test_kept_plus_dropped_partitions_valid_exactly(case):
     assert np.array_equal(kept, np.asarray(plan2.kept))
     assert np.array_equal(pos[valid], np.asarray(plan2.position)[valid])
     assert int(plan.dropped) == int(plan2.dropped)
+
+
+@settings(max_examples=20)
+@given(st.integers(1, 128), st.integers(1, 200), st.integers(1, 8),
+       st.integers(0, 2 ** 31 - 1))
+def test_plan_buckets_dispatches_above_dense_threshold(nb_extra, n, cap,
+                                                       seed):
+    """Above DENSE_PLANNER_MAX_BUCKETS plan_buckets must route to the
+    sort-based planner and still produce the SAME stable-rank plan the
+    dense one-hot would (positions, counts, kept, dropped — the semantics
+    this file pins)."""
+    nb = DENSE_PLANNER_MAX_BUCKETS + nb_extra
+    rng = np.random.default_rng(seed)
+    owner = jnp.asarray(rng.integers(0, nb, n), jnp.int32)
+    valid = jnp.asarray(rng.random(n) < 0.8)
+    plan = plan_buckets(owner, valid, nb, cap)          # -> sorted planner
+    dense = plan_buckets_dense(owner, valid, nb, cap)   # O(n*nb) reference
+    np.testing.assert_array_equal(np.asarray(plan.position),
+                                  np.asarray(dense.position))
+    np.testing.assert_array_equal(np.asarray(plan.counts),
+                                  np.asarray(dense.counts))
+    np.testing.assert_array_equal(np.asarray(plan.kept),
+                                  np.asarray(dense.kept))
+    assert int(plan.dropped) == int(dense.dropped)
 
 
 @settings(max_examples=30)

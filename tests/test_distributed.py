@@ -74,10 +74,12 @@ for gname, g in graphs:
     gw = random_weights(g, seed=4)
     src = int(np.argmax(np.asarray(g.degrees)))
     t = int(np.argmin(np.asarray(g.degrees)))
-    for backend in ("coarse", "pallas"):
+    for backend in ("coarse", "pallas", "auto"):
         # capacity 64 < the hub in-degrees: forces coalescing requeue;
-        # m=48 forces multi-transaction commits on both backends
-        kw = dict(capacity=64, spec=CommitSpec(backend=backend, m=48),
+        # m=48 forces multi-transaction commits on the static backends,
+        # "auto" calibrates + adapts M from the conflict feedback
+        m = None if backend == "auto" else 48
+        kw = dict(capacity=64, spec=CommitSpec(backend=backend, m=m),
                   telemetry=True)
         if ALG == "bfs":
             ref = B.bfs_reference(g, src)
@@ -131,7 +133,7 @@ print("RESULT", json.dumps(out))
 @pytest.mark.parametrize("alg", ALGORITHMS)
 def test_distributed_parity_matrix(alg):
     r = run_devices(PARITY_CHILD.format(alg=alg), timeout=1500)
-    assert len(r) == 4, r          # 2 graphs x 2 backends
+    assert len(r) == 6, r          # 2 graphs x 3 backends (incl. auto)
     for case, row in r.items():
         assert row["ok"], (alg, case, row)
         # the anti-wedge flag: capacity C < max in-degree must terminate

@@ -123,6 +123,22 @@ def test_perf_model_no_crossing():
     assert select_m(fine, coarse) == 1
 
 
+def test_select_m_never_exceeds_cap():
+    """Regression: the power-of-two round-up used to overshoot a non-pow2
+    cap (cap=3000 with n*safety >= 2049 returned 4096); it must round DOWN
+    to the largest power of two <= cap instead."""
+    ns = np.array([1, 2, 4, 8, 16, 32, 64])
+    fine = fit(ns, 1.0 + 0.9 * ns)               # N* ~ 7, M* ~ 14 -> 16
+    coarse = fit(ns, 12.0 + 0.2 * ns)
+    for cap in (3000, 4096, 2048, 17, 7, 3, 1):
+        m = select_m(fine, coarse, cap=cap, safety=2000.0)  # force the cap
+        assert m <= cap, (cap, m)
+        assert (m & (m - 1)) == 0                # still a power of two
+    assert select_m(fine, coarse, cap=3000, safety=2000.0) == 2048
+    # an in-cap crossing point is untouched by the clamp
+    assert select_m(fine, coarse, cap=4096) == 16
+
+
 # ------------------------------------------------------------------ data
 def test_data_determinism_and_host_sharding():
     cfg = ARCHS["qwen2-1.5b"]
