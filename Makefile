@@ -14,7 +14,7 @@ export PYTHONPATH := src
 TIER2_XLA := --xla_cpu_multi_thread_eigen=false
 TIER2_ENV := REPRO_XLA_EXTRA="$(TIER2_XLA)" PYTHONHASHSEED=0
 
-.PHONY: tier1 tier2 test bench bench-json
+.PHONY: tier1 tier2 test bench bench-json bench-serve
 
 tier1:
 	$(PY) -m pytest -x -q -m "not slow"
@@ -27,7 +27,14 @@ test: tier1 tier2
 bench:
 	$(PY) -m benchmarks.run
 
-# the persistent perf trajectory: tiny fig4/fig6 sweeps x every backend x
-# the calibrated auto spec (schema checked by tests/test_autotune.py)
+# the persistent perf trajectory: tiny fig3/fig4/fig6/fig7/serve sweeps x
+# every backend x the calibrated auto spec (schema checked by
+# tests/test_autotune.py), auto-diffed against the most recent previous
+# BENCH_*.json
 bench-json:
-	$(PY) -m benchmarks.run --json BENCH_pr3.json --sizes tiny
+	$(PY) -m benchmarks.run --json BENCH_pr4.json --sizes tiny
+
+# serving throughput/latency: lane-batched GraphService QPS + p50/p99 vs
+# the sequential query-at-a-time loop
+bench-serve:
+	$(PY) -m benchmarks.serve_qps

@@ -22,7 +22,7 @@ import traceback
 
 from benchmarks import (bench_moe, fig2_perf_model, fig3_single_vertex,
                         fig4_coarsening, fig5_coalescing, fig6_bfs_scale,
-                        fig7_scaling, table1_realworld)
+                        fig7_scaling, serve_qps, table1_realworld)
 from repro.core.commit import BACKENDS
 
 SUITES = {
@@ -34,6 +34,7 @@ SUITES = {
     "table1": table1_realworld.main,
     "fig7": fig7_scaling.main,
     "moe": bench_moe.main,
+    "serve": serve_qps.main,
 }
 
 # suites whose commit mechanism is a first-class CommitSpec axis:
@@ -45,20 +46,30 @@ BACKEND_AWARE = {
     "fig6": lambda b: {"backend": b},
     "fig7": lambda b: {"backend": b},
     "table1": lambda b: {"backend": b},
+    "serve": lambda b: {"backend": b},
 }
 
 
 # --json measurement matrix.  "tiny" backs the committed BENCH_*.json
 # trajectory; "smoke" is the tier-1 CI schema check (seconds, not minutes).
+# fig7 spawns forced-device-count children, so only "tiny" carries it.
 SCHEMA = "aam-bench/v1"
 JSON_SIZES = {
     "tiny": dict(fig4=dict(scale=10, edge_factor=8, ms=(64, 1024, None)),
                  fig6=dict(scales=(9, 10), densities=(16,), edge_factor=8,
                            density_scale=9),
+                 fig3=dict(v=1 << 12, n=2048),
+                 fig7=dict(scale=9, ps=(1, 2, 4), reps=3,
+                           backends=("coarse",)),
+                 serve=dict(kinds=("bfs", "ppr"), lanes=(1, 8), scale=7,
+                            queries=16, repeats=7),
                  backends=("atomic", "coarse", "pallas", "auto"), repeats=7),
     "smoke": dict(fig4=dict(scale=8, edge_factor=4, ms=(64, None)),
                   fig6=dict(scales=(8,), densities=(4,), edge_factor=4,
                             density_scale=8),
+                  fig3=dict(v=1 << 10, n=512),
+                  serve=dict(kinds=("bfs",), lanes=(1, 4), scale=7,
+                             queries=8, repeats=2),
                   backends=("atomic", "coarse", "auto"), repeats=2),
 }
 
@@ -107,6 +118,50 @@ def _summarize(rows: list) -> dict:
                       "within_10pct": bool(ratio <= 1.10),
                       "points": len({point(r) for r in srows})}
     return out
+
+
+def _diff_vs_previous(doc: dict, out_path: str) -> dict | None:
+    """Auto-diff the fresh matrix against the most recent previous
+    BENCH_*.json next to ``out_path`` (the persistent trajectory).
+
+    Joins rows by name (so suites added later simply don't match) and
+    reports the per-suite median current/previous time ratio — median,
+    not mean, because one noisy row on a shared host must not flip the
+    verdict.  Returns None when there is no usable baseline."""
+    import statistics
+    from pathlib import Path
+    out = Path(out_path).resolve()
+    try:
+        cands = [p for p in out.parent.glob("BENCH_*.json")
+                 if p.resolve() != out]
+    except OSError:
+        return None
+    base = None
+    for p in sorted(cands, key=lambda p: p.stat().st_mtime, reverse=True):
+        try:
+            bdoc = json.loads(p.read_text())
+        except (OSError, ValueError):
+            continue
+        if bdoc.get("schema") == SCHEMA:
+            base = (p, bdoc)
+            break
+    if base is None:
+        return None
+    prev = {r["name"]: r["us_per_call"]
+            for r in base[1].get("rows", []) if r.get("us_per_call")}
+    suites: dict = {}
+    for r in doc["rows"]:
+        p_us = prev.get(r["name"])
+        if p_us:
+            suites.setdefault(r["suite"], []).append(
+                r["us_per_call"] / p_us)
+    return {
+        "baseline": base[0].name,
+        "rows_compared": sum(len(v) for v in suites.values()),
+        "suites": {s: {"median_ratio": round(statistics.median(v), 3),
+                       "rows": len(v)}
+                   for s, v in sorted(suites.items())},
+    }
 
 
 def _measure_interleaved(fns: dict, repeats: int, inner: int = 3) -> dict:
@@ -187,6 +242,28 @@ def bench_json(sizes: str) -> dict:
         add("fig4", "pallas", "fig4/pallas/stats_off", t_off,
             f"nostats_cheaper={t_off < t_on}")
 
+    # fig3: single-vertex commit under low/high contention, per backend
+    f3 = cfg.get("fig3")
+    if f3:
+        from repro.core.commit import commit
+        from repro.core.messages import make_messages
+        rng = np.random.default_rng(0)
+        v3, n3 = f3["v"], f3["n"]
+        for contention, conc in (("low", 10), ("high", 100)):
+            tgt = jnp.asarray(rng.integers(0, max(n3 // conc, 1), n3),
+                              jnp.int32)
+            val = jnp.asarray(rng.integers(0, 100, n3), jnp.int32)
+            msgs = make_messages(tgt, val, jnp.ones((n3,), bool))
+            for op, st0 in (("min", jnp.full((v3,), 2 ** 30, jnp.int32)),
+                            ("add", jnp.zeros((v3,), jnp.int32))):
+                fns = {}
+                for b in cfg["backends"]:
+                    f = jax.jit(lambda s, m, op=op, sp=spec_for(b):
+                                commit(s, m, op, sp).state)
+                    fns[b] = (lambda f=f, s=st0, m=msgs: f(s, m))
+                for b, t in _measure_interleaved(fns, reps).items():
+                    add("fig3", b, f"fig3/{op}/{contention}/{b}", t)
+
     # fig6: BFS across |V| and density, per backend
     f6 = cfg["fig6"]
     points = [(f"V=2^{s}", kronecker(s, f6["edge_factor"], seed=3))
@@ -205,9 +282,115 @@ def bench_json(sizes: str) -> dict:
             add("fig6", backend, f"fig6/{pname}/{backend}", t,
                 f"resolved={polp.backend}" if backend == "auto" else "")
 
+    # fig7: distributed strong scaling (forced-device-count children);
+    # children resolve capacity="auto" (overflow-telemetry sizing) and the
+    # derived column records the C they settled on
+    f7 = cfg.get("fig7")
+    if f7:
+        for p_, child in _fig7_json(f7):
+            for name, val in child.items():
+                alg, backend, cap = name.split("/")
+                add("fig7", backend, f"fig7/{alg}/{backend}/P={p_}", val,
+                    f"capacity={cap}")
+
+    # serve: lane-batched QPS vs the sequential loop (GraphService)
+    sv = cfg.get("serve")
+    if sv:
+        stats = serve_qps.sweep(sv["kinds"], sv["lanes"], scale=sv["scale"],
+                                queries=sv["queries"],
+                                repeats=sv.get("repeats", 5))
+        for st in stats:
+            add("serve", "auto", f"serve/{st['kind']}/L={st['lanes']}",
+                st["us_per_query"] / 1e6,
+                f"qps={st['qps']:.0f} p50={st['p50_ms']:.1f}ms "
+                f"p99={st['p99_ms']:.1f}ms "
+                f"speedup_vs_seq={st['speedup_vs_seq']:.2f} "
+                f"correct={st['correct']}")
+        serve_summary = {}
+        for kind in sv["kinds"]:
+            ks = [s for s in stats if s["kind"] == kind]
+            top = max(ks, key=lambda s: s["lanes"])
+            serve_summary[kind] = {
+                "lanes": top["lanes"],
+                "qps_vs_seq": round(top["speedup_vs_seq"], 3),
+                "lane_batched_wins": bool(top["speedup_vs_seq"] > 1.0),
+                "correct": all(s["correct"] for s in ks)}
+    else:
+        serve_summary = None
+
+    summary = _summarize(rows)
+    if serve_summary is not None:
+        summary["serve"] = serve_summary
     return {"schema": SCHEMA, "sizes": sizes,
             "platform": jax.default_backend(),
-            "rows": rows, "summary": _summarize(rows)}
+            "rows": rows, "summary": summary}
+
+
+_F7_CHILD = """
+import json, time, numpy as np, jax
+from repro.launch.mesh import make_host_mesh
+from repro.graphs.generators import kronecker
+from repro.core.commit import CommitSpec
+from repro.graphs.algorithms.bfs import distributed_bfs
+from repro.graphs.algorithms.pagerank import distributed_pagerank
+P = {P}
+mesh = make_host_mesh(P, 1)
+g = kronecker({scale}, 8, seed=5)
+src = int(np.argmax(np.asarray(g.degrees)))
+out = {{}}
+for backend in {backends}:
+    spec = CommitSpec(backend=backend, stats=False)
+    # settle capacity="auto" first (growth recompiles), then time at the
+    # resolved static C
+    cap = None
+    for _ in range(4):
+        _, r = distributed_bfs(mesh, g, src, spec=spec, capacity="auto",
+                               telemetry=True)
+        if cap == int(r.capacity):
+            break
+        cap = int(r.capacity)
+    runs = {{
+        "bfs": lambda: distributed_bfs(mesh, g, src, spec=spec,
+                                       capacity=cap)[0].block_until_ready(),
+        "pagerank": lambda: distributed_pagerank(
+            mesh, g, iters=5, spec=spec, capacity=cap).block_until_ready(),
+    }}
+    for name, fn in runs.items():
+        fn()
+        ts = []
+        for _ in range({reps}):
+            t0 = time.perf_counter()
+            fn()
+            ts.append(time.perf_counter() - t0)
+        out[name + "/" + backend + "/" + str(cap)] = min(ts)
+print("RESULT", json.dumps(out))
+"""
+
+
+def _fig7_json(f7: dict):
+    """Yield (P, {alg/backend/capacity: seconds}) per forced-device child."""
+    import os
+    import subprocess
+    import textwrap
+    from pathlib import Path
+    env_base = dict(os.environ)
+    env_base["PYTHONPATH"] = str(Path(__file__).resolve().parent.parent /
+                                 "src")
+    for p_ in f7["ps"]:
+        env = dict(env_base)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p_}"
+        r = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(_F7_CHILD.format(
+                P=p_, scale=f7["scale"], reps=f7["reps"],
+                backends=tuple(f7["backends"])))],
+            capture_output=True, text=True, env=env, timeout=1200)
+        if r.returncode != 0:
+            print(f"fig7 P={p_} child failed: {r.stderr[-400:]}",
+                  file=sys.stderr)
+            continue
+        line = [l for l in r.stdout.splitlines()
+                if l.startswith("RESULT ")][-1]
+        yield p_, json.loads(line[len("RESULT "):])
 
 
 def main() -> None:
@@ -225,11 +408,20 @@ def main() -> None:
     args = ap.parse_args()
     if args.json:
         doc = bench_json(args.sizes)
+        diff = _diff_vs_previous(doc, args.json)
+        if diff is not None:
+            doc["diff"] = diff
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=1)
             f.write("\n")
         print(f"wrote {args.json}: {len(doc['rows'])} rows, "
               f"summary={doc['summary']}", file=sys.stderr)
+        if diff is not None:
+            print(f"diff vs {diff['baseline']} "
+                  f"({diff['rows_compared']} rows): "
+                  + " ".join(f"{s}={d['median_ratio']}"
+                             for s, d in diff["suites"].items()),
+                  file=sys.stderr)
         return
     names = args.only.split(",") if args.only else list(SUITES)
     print("name,us_per_call,derived")

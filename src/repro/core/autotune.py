@@ -43,6 +43,7 @@ the spec for bit-reproducible mechanism choice across hosts — final
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 
 import jax
@@ -114,6 +115,40 @@ def _autotune_enabled() -> bool:
         "off", "0", "false")
 
 
+# ---------------------------------------------------------------------------
+# Persistent calibration cache (survives processes)
+# ---------------------------------------------------------------------------
+#
+# Calibration is timed micro-benchmarking: ~100ms of wall clock per knob
+# set.  Long-lived servers pay it once, but short-lived CLI runs (every
+# `benchmarks.run` child, every `make bench-json`) re-pay it per process.
+# The JSON cache next to BENCH_*.json persists the fitted tiers across
+# processes, keyed by knob set + device kind (fits are only portable
+# within one accelerator class).  REPRO_AUTOTUNE_CACHE names the file
+# (default .repro_autotune_cache.json in the cwd) or "off" disables it —
+# a corrupt/alien file is ignored, never fatal.
+
+CACHE_SCHEMA = "aam-autotune/v1"
+_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+_CACHE_DEFAULT = ".repro_autotune_cache.json"
+
+
+def _cache_path() -> str | None:
+    v = os.environ.get(_CACHE_ENV, "")
+    if v.lower() in ("off", "0", "false"):
+        return None
+    return v or _CACHE_DEFAULT
+
+
+def _fit_to_json(f: perf_model.LinearFit) -> dict:
+    return {"intercept": f.intercept, "slope": f.slope, "r2": f.r2}
+
+
+def _fit_from_json(d) -> perf_model.LinearFit:
+    return perf_model.LinearFit(intercept=float(d["intercept"]),
+                                slope=float(d["slope"]), r2=float(d["r2"]))
+
+
 def _sanitize(f: perf_model.LinearFit) -> perf_model.LinearFit:
     """Clamp a measured fit to the physical region (B, A >= 0).
 
@@ -141,6 +176,44 @@ class AutoTuner:
         self.warmup = warmup
         self.repeats = repeats
         self._cache: dict = {}
+        self._disk: dict | None = None      # lazy-loaded JSON entries
+
+    # -- persistent cache -------------------------------------------------
+
+    def _disk_entries(self) -> dict:
+        if self._disk is None:
+            self._disk = {}
+            p = _cache_path()
+            if p and os.path.exists(p):
+                try:
+                    with open(p) as f:
+                        doc = json.load(f)
+                    if doc.get("schema") == CACHE_SCHEMA:
+                        self._disk = dict(doc.get("entries", {}))
+                except (OSError, ValueError):
+                    pass                     # corrupt cache = no cache
+        return self._disk
+
+    def _disk_put(self, key: str, value) -> None:
+        p = _cache_path()
+        if p is None:
+            return
+        entries = self._disk_entries()
+        entries[key] = value
+        try:
+            tmp = f"{p}.tmp.{os.getpid()}"
+            with open(tmp, "w") as f:
+                json.dump({"schema": CACHE_SCHEMA, "entries": entries}, f,
+                          indent=1)
+                f.write("\n")
+            os.replace(tmp, p)               # atomic vs concurrent readers
+        except OSError:
+            pass                             # read-only cwd = no cache
+
+    def _knob_key(self, *, sort, stats, tile_m, block_v, interpret) -> str:
+        return (f"{jax.default_backend()}|sort={sort}|stats={stats}"
+                f"|tile_m={tile_m}|block_v={block_v}|interpret={interpret}"
+                f"|ns={list(self.ns)}|v={self.v_cal}")
 
     # -- measurement ------------------------------------------------------
 
@@ -158,10 +231,15 @@ class AutoTuner:
         # would mis-seed the whole policy
         return min(ts)
 
-    def _workload(self, n: int):
+    def _workload(self, n: int, v: int | None = None):
+        """Synthetic min-commit batch: n messages into a [v] state
+        (default ``v_cal``).  ``v`` lets the race reproduce the caller's
+        contention — n/v is the duplicate-target factor, and it decides
+        whether the sorted tier's dedup-before-scatter pays for itself."""
+        v = min(v or self.v_cal, 1 << 20)
         rng = np.random.default_rng(0)
-        state = jnp.full((self.v_cal,), 2 ** 30, jnp.int32)
-        tgt = jnp.asarray(rng.integers(0, self.v_cal, n), jnp.int32)
+        state = jnp.full((v,), 2 ** 30, jnp.int32)
+        tgt = jnp.asarray(rng.integers(0, v, n), jnp.int32)
         val = jnp.asarray(rng.integers(0, 100, n), jnp.int32)
         return state, make_messages(tgt, val)
 
@@ -173,6 +251,21 @@ class AutoTuner:
         hit = self._cache.get(key)
         if hit is not None:
             return hit
+        dkey = "cal|" + self._knob_key(sort=sort, stats=stats,
+                                       tile_m=tile_m, block_v=block_v,
+                                       interpret=interpret) \
+            + f"|pallas={with_pallas}"
+        disk = self._disk_entries().get(dkey)
+        if disk is not None:
+            try:
+                cal = Calibration(
+                    fine=_fit_from_json(disk["fine"]),
+                    tiers=tuple((b, _fit_from_json(f))
+                                for b, f in disk["tiers"]))
+                self._cache[key] = cal
+                return cal                   # no timed micro-commits
+            except (KeyError, TypeError, ValueError):
+                pass
         # fine tier: ONE message per activity => T_fine(N) = N * t_unit
         state, msgs1 = self._workload(1)
         spec_f = CommitSpec(backend="atomic", stats=stats)
@@ -192,11 +285,14 @@ class AutoTuner:
             tiers.append((b, _sanitize(perf_model.fit(self.ns, times))))
         cal = Calibration(fine=fine, tiers=tuple(tiers))
         self._cache[key] = cal
+        self._disk_put(dkey, {
+            "fine": _fit_to_json(fine),
+            "tiers": [[b, _fit_to_json(f)] for b, f in cal.tiers]})
         return cal
 
     def race(self, finalists: dict, n: int, *, sort: bool, stats: bool,
              tile_m: int, block_v: int,
-             interpret: bool | None) -> str:
+             interpret: bool | None, v: int | None = None) -> str:
         """Head-to-head at (near-)workload batch size.
 
         ``finalists`` maps backend -> the transaction size it would
@@ -207,13 +303,26 @@ class AutoTuner:
         workload's N are inside extrapolation error — measure them
         directly (cached per power-of-two N bucket) and let the clock
         decide."""
-        n = min(1 << (max(n, 2) - 1).bit_length(), 8192)
+        n = min(1 << (max(n, 2) - 1).bit_length(), 32768)
+        v = min(v or self.v_cal, 1 << 20)   # same clamp as _workload, so
+        #                                     the cache key matches what
+        #                                     actually gets timed
         key = ("race", tuple(sorted(finalists.items(),
-                                    key=lambda kv: kv[0])), n,
+                                    key=lambda kv: kv[0])), n, v,
                sort, stats, tile_m, block_v, interpret)
         hit = self._cache.get(key)
         if hit is not None:
             return hit
+        dkey = "race|" + "|".join(
+            f"{b}:{m}" for b, m in sorted(finalists.items())) \
+            + f"|n={n}|v={v}|" + self._knob_key(sort=sort, stats=stats,
+                                                tile_m=tile_m,
+                                                block_v=block_v,
+                                                interpret=interpret)
+        disk = self._disk_entries().get(dkey)
+        if disk in finalists:                # winner must still be a runner
+            self._cache[key] = disk
+            return disk
         times = {}
         for b, m in finalists.items():
             spec = CommitSpec(backend=b, m=m, sort=sort, stats=stats,
@@ -221,16 +330,19 @@ class AutoTuner:
                               interpret=interpret)
             fn = jax.jit(lambda s, msgs, spec=spec:
                          commit(s, msgs, "min", spec).state)
-            times[b] = self._time(fn, *self._workload(n))
+            times[b] = self._time(fn, *self._workload(n, v))
         winner = min(times, key=times.get)
         self._cache[key] = winner
+        self._disk_put(dkey, winner)
         return winner
 
     # -- policy -----------------------------------------------------------
 
     def policy(self, spec: CommitSpec, *, n: int,
-               pallas_ok: bool) -> TunerPolicy:
-        """Backend + M* + ladder seed for an n-message workload."""
+               pallas_ok: bool, v: int | None = None) -> TunerPolicy:
+        """Backend + M* + ladder seed for an n-message workload against a
+        [v] state (``v`` shapes the race's duplicate-target factor; None
+        = the calibration default)."""
         n = max(int(n), 1)
         base = dict(sort=spec.sort, stats=spec.stats, tile_m=spec.tile_m,
                     block_v=spec.block_v, interpret=spec.interpret)
@@ -256,13 +368,20 @@ class AutoTuner:
             preds = {b: float(f.predict(n)) for b, f in cal.tiers}
             ranked = sorted(preds, key=preds.get)
             backend = ranked[0]
+            # far beyond the calibration points the affine fits are pure
+            # extrapolation (a noise-clamped slope of ~0 predicts
+            # constant time at ANY n — it handed lane-fused serving
+            # batches to the sorted tier, whose argsort grows with the
+            # fused size): race whenever n leaves the measured regime,
+            # not only when the predictions are close
+            extrapolated = n > 4 * max(self.ns)
             if (len(ranked) > 1
-                    and preds[ranked[0]] > 0.8 * preds[ranked[1]]):
-                # too close to call from extrapolated fits -> race the
-                # two finalists at the workload's size, each at the M it
-                # would actually run with
+                    and (extrapolated
+                         or preds[ranked[0]] > 0.8 * preds[ranked[1]])):
+                # race the two finalists at the workload's size, each at
+                # the M it would actually run with
                 backend = self.race({b: m_for(b) for b in ranked[:2]}, n,
-                                    **base)
+                                    v=v, **base)
             m_star = m_for(backend) or n
         if spec.m is not None:
             # user pinned the transaction size: tune the backend only
@@ -316,7 +435,9 @@ def policy_for(spec: CommitSpec, state, msgs: Messages | None = None, *,
                      and state.dtype in (jnp.int32, jnp.float32))
         n = 1 if n is None else n
     pallas_ok = pallas_ok and _pallas_compiled(spec)
-    return tuner.policy(spec, n=n, pallas_ok=pallas_ok)
+    v = getattr(state, "shape", None)
+    v = v[0] if v else None         # [V] or [L*V] composite key space
+    return tuner.policy(spec, n=n, pallas_ok=pallas_ok, v=v)
 
 
 def resolve_spec(spec: CommitSpec, state, msgs: Messages,

@@ -39,6 +39,41 @@ class BucketPlan:
 DENSE_PLANNER_MAX_BUCKETS = 32
 
 
+# ---------------------------------------------------------------------------
+# Lane-composite keys (multi-tenant serving: L independent queries fused
+# into ONE wave).  A lane is one query's private copy of the vertex state;
+# fusing the lane index into the commit key lets a single conflict
+# resolution pass (sort + segment reduce, any backend) serve all lanes at
+# once — the same aggregate-small-events-into-big-atomic-steps move the
+# coalescing buffer makes for network messages.
+# ---------------------------------------------------------------------------
+
+
+def fuse_lane_keys(major: jax.Array, minor: jax.Array,
+                   stride: int) -> jax.Array:
+    """Composite commit key ``major * stride + minor`` — THE place the
+    lane-key convention lives; both layouts go through it:
+
+    * lane-major (single-shard [L, V] state):
+      ``fuse_lane_keys(lane, vertex, V)`` — see
+      :func:`repro.core.messages.lane_messages`;
+    * vertex-major (distributed [block * L] owner slices, all lanes of a
+      vertex co-located on its owner shard):
+      ``fuse_lane_keys(local_vertex, lane, L)`` — see
+      :func:`repro.core.engine.route_wave`.
+
+    Lanes never collide: conflict resolution over composite keys is
+    exactly per-lane conflict resolution, so one ``commit()`` call
+    resolves all lanes' conflicts bit-identically to L separate calls
+    (for order-independent ops)."""
+    return major.astype(jnp.int32) * stride + minor.astype(jnp.int32)
+
+
+def split_lane_keys(key: jax.Array, stride: int):
+    """Inverse of :func:`fuse_lane_keys`: ``(major, minor)``."""
+    return key // stride, key % stride
+
+
 def plan_buckets(owner: jax.Array, valid: jax.Array, num_buckets: int,
                  capacity: int) -> BucketPlan:
     """Stable bucketing: position = rank of the message within its bucket

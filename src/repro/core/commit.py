@@ -140,6 +140,23 @@ def commit(state: jax.Array, msgs: Messages, op: str,
     return _pallas_commit(state, msgs, op, spec)
 
 
+def commit_lanes(state: jax.Array, msgs: Messages, op: str,
+                 spec: CommitSpec | None = None) -> CommitResult:
+    """Commit a lane-fused batch against [L, V] lane-major state.
+
+    ``msgs.target`` carries composite keys ``lane * V + v`` (build them
+    with :func:`repro.core.messages.lane_messages`); the state is
+    flattened to [L * V] so ONE ``commit()`` call — any backend,
+    including ``"auto"`` — resolves conflicts for all L lanes at once.
+    Lanes occupy disjoint key ranges, so the result equals L independent
+    per-lane commits (bit-for-bit for the order-independent ops; float
+    ``add`` to rounding, exactly like any transaction-size change).
+    """
+    lanes, v = state.shape
+    res = commit(state.reshape(lanes * v), msgs, op, spec)
+    return dataclasses.replace(res, state=res.state.reshape(lanes, v))
+
+
 _PALLAS_DTYPES = (jnp.int32, jnp.float32)
 
 

@@ -44,8 +44,9 @@ from repro import compat
 
 from repro.core import autotune as AT
 from repro.core import commit as C
-from repro.core.coalescing import (BucketPlan, gather_from_buckets,
-                                   plan_buckets_sorted, scatter_to_buckets)
+from repro.core.coalescing import (BucketPlan, fuse_lane_keys,
+                                   gather_from_buckets, plan_buckets_sorted,
+                                   scatter_to_buckets)
 from repro.core.messages import make_messages
 
 
@@ -80,13 +81,18 @@ def _tree_all_to_all(x, axis: str):
 
 
 def route_wave(ecfg: EngineConfig, state_l, target, payload, pending,
-               level=None):
+               level=None, lane=None, num_lanes: int = 1):
     """One coalescing sub-round under shard_map (DEPRECATED for direct use —
     see module docstring; overflow beyond C is NOT requeued here).
 
     state_l: pytree of [block] local owner slices; payload: matching pytree
     of [n] fields; target: [n] GLOBAL vertex ids; pending: [n] bool;
     level: traced ladder index for an ``ecfg.tuner`` adaptive commit.
+    lane/num_lanes: the serving lane axis — ``lane`` [n] int32 ids ride the
+    exchange as one more payload field, state leaves are vertex-major
+    [block * num_lanes] slices, and owners commit on composite local keys
+    ``local_v * num_lanes + lane`` so ONE commit resolves every lane's
+    conflicts (see ``repro.core.coalescing.fuse_lane_keys``).
     Returns (state_l, delivered_mask, success pytree, conflicts)."""
     P, Cp = ecfg.num_shards, ecfg.capacity
     owner = target // ecfg.block
@@ -102,6 +108,12 @@ def route_wave(ecfg: EngineConfig, state_l, target, payload, pending,
     shard = jax.lax.axis_index(ecfg.axis)
     local_idx = jnp.clip(rt.reshape(-1) - shard * ecfg.block, 0,
                          ecfg.block - 1)
+    if lane is not None:
+        buf_l = scatter_to_buckets(plan, lane, P, Cp, fill=0)
+        rl = jax.lax.all_to_all(buf_l, ecfg.axis, 0, 0, tiled=True)
+        local_idx = fuse_lane_keys(
+            local_idx, jnp.clip(rl.reshape(-1), 0, num_lanes - 1),
+            num_lanes)
     valid = (rt.reshape(-1) >= 0)
     st_leaves, tdef = jax.tree_util.tree_flatten(state_l)
     pl_leaves = tdef.flatten_up_to(rp)
@@ -128,7 +140,8 @@ def route_wave(ecfg: EngineConfig, state_l, target, payload, pending,
 
 
 def wave_until_delivered(ecfg: EngineConfig, state_l, target, payload,
-                         valid, max_subrounds: int = 64, level=None):
+                         valid, max_subrounds: int = 64, level=None,
+                         lane=None, num_lanes: int = 1):
     """Deliver ALL messages (sub-rounds until nothing pending).
 
     Returns (state_l, success pytree, conflicts, subrounds, delivered_all).
@@ -137,7 +150,8 @@ def wave_until_delivered(ecfg: EngineConfig, state_l, target, payload,
     dropping the tail (the capacity-C requeue loop normally terminates for
     any C >= 1: each sub-round delivers up to C messages per owner).
     ``level`` is the (constant-per-wave) adaptive-ladder index when
-    ``ecfg.tuner`` is set."""
+    ``ecfg.tuner`` is set; ``lane``/``num_lanes`` thread the serving lane
+    axis through every sub-round (see :func:`route_wave`)."""
     n = target.shape[0]
     st_leaves, tdef = jax.tree_util.tree_flatten(state_l)
     succ0 = tdef.unflatten([jnp.zeros((n,), bool) for _ in st_leaves])
@@ -150,7 +164,7 @@ def wave_until_delivered(ecfg: EngineConfig, state_l, target, payload,
     def body(c):
         state_l, pending, success, conflicts, it = c
         state_l, kept, succ, cf = route_wave(ecfg, state_l, target, payload,
-                                             pending, level)
+                                             pending, level, lane, num_lanes)
         success = jax.tree.map(lambda sn, so: jnp.where(kept, sn, so),
                                succ, success)
         return (state_l, pending & ~kept, success, conflicts + cf, it + 1)
@@ -241,6 +255,46 @@ def gather_until_answered(ecfg: EngineConfig, arr_l, idx, valid, fill=0,
 
 
 # ---------------------------------------------------------------------------
+# Coalescing-capacity auto-sizing (paper §5.6)
+# ---------------------------------------------------------------------------
+
+# ``capacity="auto"``: C starts from the average per-shard inbound load and
+# then a process-level feedback cache grows it for the NEXT run whenever a
+# run's waves persistently overflowed (sub-rounds per round above
+# OVERFLOW_RATIO means messages kept getting requeued past C) — the same
+# measure-then-adapt loop the autotuner closes for backend/M.
+CAPACITY_MIN = 64
+CAPACITY_MAX = 1 << 15
+OVERFLOW_RATIO = 2.0
+_CAPACITY_CACHE: dict = {}
+
+
+def auto_capacity(g, num_shards: int) -> int:
+    """Current C for (graph shape, shard count): the cached feedback value
+    when a previous run reported overflow, the static heuristic otherwise
+    (power of two ~2x the average per-shard inbound load, clamped)."""
+    key = (g.num_vertices, g.num_edges, num_shards)
+    hit = _CAPACITY_CACHE.get(key)
+    if hit is not None:
+        return hit
+    per_shard = max(1, (2 * g.num_edges) // max(num_shards, 1))
+    return max(CAPACITY_MIN, min(1 << (per_shard - 1).bit_length(),
+                                 CAPACITY_MAX))
+
+
+def _capacity_feedback(g, num_shards: int, capacity: int,
+                       subrounds: int, rounds: int) -> None:
+    """Grow the cached C when waves persistently overflowed this run.
+
+    Algorithms issuing several waves per round (Boruvka) inflate the
+    sub-round count without real overflow; the growth is monotone and
+    capped, so a spurious doubling costs padding, never correctness."""
+    if subrounds > OVERFLOW_RATIO * max(rounds, 1) and capacity < CAPACITY_MAX:
+        _CAPACITY_CACHE[(g.num_vertices, g.num_edges, num_shards)] = \
+            min(capacity * 2, CAPACITY_MAX)
+
+
+# ---------------------------------------------------------------------------
 # The distributed-algorithm harness
 # ---------------------------------------------------------------------------
 
@@ -309,14 +363,18 @@ class WaveRuntime:
         """Global any() over a per-shard bool array."""
         return self.psum(jnp.sum(mask.astype(jnp.int32))) > 0
 
-    def wave(self, state_l, target, payload, valid, *, op: str):
+    def wave(self, state_l, target, payload, valid, *, op: str,
+             lane=None, num_lanes: int = 1):
         """Deliver + commit messages ``(target, payload)`` with ``op``;
         returns (state_l, success pytree).  state_l/payload are matching
-        pytrees of [block]/[n] fields sharing one bucket plan."""
+        pytrees of [block]/[n] fields sharing one bucket plan.  With
+        ``lane``/``num_lanes`` the state leaves are vertex-major
+        [block * num_lanes] lane slices and the lane ids ride the same
+        bucket plan (multi-tenant lane-batched waves)."""
         ecfg = dataclasses.replace(self.ecfg, op=op)
         state_l, success, cf, sr, dall = wave_until_delivered(
             ecfg, state_l, target, payload, valid, self.max_subrounds,
-            self.level)
+            self.level, lane, num_lanes)
         self.conflicts = self.conflicts + cf
         self.subrounds = self.subrounds + sr
         self.messages = self.messages + self.psum(
@@ -378,9 +436,12 @@ class DistributedResult:
     delivered_all: jax.Array  # bool
     m_final: jax.Array      # int32 — final adaptive transaction size M
     #                         (0 = whole batch, -1 = static spec, no tuner)
+    capacity: jax.Array     # int32 — the coalescing factor C the run used
+    #                         (resolved value when capacity="auto")
 
 
-def run_distributed(alg: AlgorithmSpec, mesh, g, *, capacity: int = 4096,
+def run_distributed(alg: AlgorithmSpec, mesh, g, *,
+                    capacity: int | str = 4096,
                     m: int | None = None, axis: str = "data",
                     spec: C.CommitSpec | None = None,
                     max_subrounds: int = 64,
@@ -391,7 +452,10 @@ def run_distributed(alg: AlgorithmSpec, mesh, g, *, capacity: int = 4096,
     Owns: 1-D edge partitioning, the shard_map wrapper, the round loop
     (``while active and rounds < max_rounds``), and telemetry aggregation.
     ``capacity``/``m`` are the paper's C (coalescing factor) and M
-    (transaction size); ``spec`` picks the commit backend per
+    (transaction size); ``capacity="auto"`` sizes C from the per-shard
+    load heuristic plus the sub-round overflow telemetry of previous runs
+    on the same (graph shape, shard count) — see :func:`auto_capacity`.
+    ``spec`` picks the commit backend per
     :class:`repro.core.commit.CommitSpec` — ``backend="auto"`` calibrates
     the perf model once per run (backend + ladder seed M*) and then
     adapts the transaction size per round from the psum'd conflict
@@ -404,6 +468,9 @@ def run_distributed(alg: AlgorithmSpec, mesh, g, *, capacity: int = 4096,
     from repro.graphs.csr import partition_edges
 
     P = mesh.shape[axis]
+    auto_cap = capacity == "auto"
+    if auto_cap:
+        capacity = auto_capacity(g, P)
     if edges is None:
         edges = partition_edges(g, P)
     (src, dst, w, val, eid), part = edges
@@ -471,9 +538,12 @@ def run_distributed(alg: AlgorithmSpec, mesh, g, *, capacity: int = 4096,
         check_vma=False)
     state, scalars, conflicts, subrounds, dall, rounds, m_final = jax.jit(
         fn)(state0, scalars0, src, dst, w, val, eid)
+    if auto_cap:
+        _capacity_feedback(g, P, capacity, int(subrounds), int(rounds))
     return DistributedResult(state=state, scalars=scalars, rounds=rounds,
                              conflicts=conflicts, subrounds=subrounds,
-                             delivered_all=dall, m_final=m_final)
+                             delivered_all=dall, m_final=m_final,
+                             capacity=jnp.asarray(capacity, jnp.int32))
 
 
 # Legacy entry points live with their algorithms now; keep the old import

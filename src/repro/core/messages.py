@@ -75,6 +75,28 @@ def make_messages(target, payload, valid=None) -> Messages:
     return Messages(target=target, payload=payload, valid=valid)
 
 
+def lane_messages(target, payload, valid, num_vertices: int) -> Messages:
+    """Fuse an [L, n] lane batch of messages into ONE flat batch on
+    composite keys ``lane * num_vertices + target`` (the serving lane
+    axis — see :mod:`repro.core.coalescing`).
+
+    target/valid: int32/bool [L, n]; payload: [L, n] (or pytree of such).
+    Committing the result against [L * num_vertices] flattened state
+    resolves every lane's conflicts in one pass."""
+    from repro.core.coalescing import fuse_lane_keys
+    target = jnp.asarray(target, jnp.int32)
+    lanes, n = target.shape
+    lane = jnp.broadcast_to(
+        jnp.arange(lanes, dtype=jnp.int32)[:, None], (lanes, n))
+    key = fuse_lane_keys(lane, target, num_vertices)
+    return Messages(
+        target=key.reshape(-1),
+        payload=jax.tree.map(
+            lambda x: x.reshape((lanes * n,) + x.shape[2:]), payload),
+        valid=jnp.asarray(valid, bool).reshape(-1),
+    )
+
+
 def concat_messages(a: Messages, b: Messages) -> Messages:
     return Messages(
         target=jnp.concatenate([a.target, b.target]),

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.core import autotune as AT
 from repro.core import commit as C
-from repro.core.messages import Messages, make_messages
+from repro.core.messages import Messages, lane_messages, make_messages
 from repro.graphs.csr import Graph
 
 INF = jnp.int32(2 ** 30)
@@ -67,7 +67,53 @@ def bfs(g: Graph, source, *, commit: str = "coarse", m: int | None = None,
     return BfsResult(dist, rounds, nmsg, ncf, nap)
 
 
-def distributed_bfs(mesh, g: Graph, source: int, *, capacity: int = 4096,
+@partial(jax.jit, static_argnames=("commit", "m", "sort", "spec"))
+def multi_source_bfs(g: Graph, sources, *, commit: str = "coarse",
+                     m: int | None = None, sort: bool = True,
+                     spec: C.CommitSpec | None = None) -> BfsResult:
+    """L independent BFS queries as lanes of ONE fused wave.
+
+    ``sources`` is int32 [L]; the result's ``dist`` is [L, V] — row l
+    bit-identical to ``bfs(g, sources[l])`` (``min`` is order-independent,
+    and lanes occupy disjoint composite key ranges ``lane * V + v``, so
+    one commit per round resolves every query's conflicts at once).
+    Converged lanes stop emitting messages (per-query early exit) while
+    the wave keeps serving the stragglers."""
+    if spec is None:
+        spec = C.CommitSpec(backend=commit, m=m, sort=sort, stats=False)
+    v = g.num_vertices
+    sources = jnp.asarray(sources, jnp.int32)
+    lanes = sources.shape[0]
+    lidx = jnp.arange(lanes, dtype=jnp.int32)
+    dist0 = jnp.full((lanes, v), INF, jnp.int32).at[lidx, sources].set(0)
+    frontier0 = jnp.zeros((lanes, v), bool).at[lidx, sources].set(True)
+    e = g.src.shape[0]
+    dst_l = jnp.broadcast_to(g.dst, (lanes, e))
+    step, lvl0 = AT.make_commit_step(spec, "min", dist0.reshape(-1),
+                                     n=lanes * e)
+
+    def cond(state):
+        _, frontier, it, *_ = state
+        return jnp.any(frontier) & (it < v)
+
+    def body(state):
+        dist, frontier, it, lvl, nmsg, ncf, nap = state
+        active = frontier[:, g.src]            # per-lane early-exit mask
+        msgs = lane_messages(dst_l, dist[:, g.src] + 1, active, v)
+        res, lvl = step(dist.reshape(-1), msgs, lvl)
+        dist2 = res.state.reshape(lanes, v)
+        return (dist2, dist2 != dist, it + 1, lvl,
+                nmsg + jnp.sum(active.astype(jnp.int32)),
+                ncf + res.conflicts, nap + res.applied)
+
+    z = jnp.zeros((), jnp.int32)
+    dist, _, rounds, _, nmsg, ncf, nap = jax.lax.while_loop(
+        cond, body, (dist0, frontier0, z, lvl0, z, z, z))
+    return BfsResult(dist, rounds, nmsg, ncf, nap)
+
+
+def distributed_bfs(mesh, g: Graph, source: int, *,
+                    capacity: int | str = 4096,
                     m: int | None = None, axis: str = "data",
                     spec: C.CommitSpec | None = None, max_subrounds: int = 64,
                     telemetry: bool = False):
@@ -94,6 +140,56 @@ def distributed_bfs(mesh, g: Graph, source: int, *, capacity: int = 4096,
     res = run_distributed(alg, mesh, g, capacity=capacity, m=m, axis=axis,
                           spec=spec, max_subrounds=max_subrounds)
     dist = res.state["dist"][:g.num_vertices]
+    return (dist, res) if telemetry else (dist, res.rounds)
+
+
+def distributed_multi_source_bfs(mesh, g: Graph, sources, *,
+                                 capacity: int | str = 4096,
+                                 m: int | None = None, axis: str = "data",
+                                 spec: C.CommitSpec | None = None,
+                                 max_subrounds: int = 64,
+                                 telemetry: bool = False):
+    """Lane-batched BFS over a mesh axis: L queries share every wave.
+
+    Vertex state is vertex-major [vpad * L] (all lanes of a vertex live on
+    its owner shard), lane ids ride the coalescing buckets as one more
+    payload field, and owners commit on composite local keys — the
+    distributed mirror of :func:`multi_source_bfs`.  Returns
+    (dist [L, V], rounds); ``telemetry=True`` returns the
+    DistributedResult instead of rounds."""
+    from repro.core.engine import AlgorithmSpec, run_distributed
+
+    sources = jnp.asarray(sources, jnp.int32)
+    lanes = sources.shape[0]
+    lidx = jnp.arange(lanes, dtype=jnp.int32)
+
+    def init(g, layout):
+        flat = sources * lanes + lidx           # vertex-major composite
+        dist0 = jnp.full((layout.vpad * lanes,), INF, jnp.int32) \
+            .at[flat].set(0)
+        frontier0 = jnp.zeros((layout.vpad * lanes,), bool) \
+            .at[flat].set(True)
+        return {"dist": dist0, "frontier": frontier0}, {}
+
+    def round_fn(rt, e, st, sc, it):
+        dist = st["dist"]                       # [block * L]
+        emax = e.dst.shape[0]
+        fl = e.my_src[:, None] * lanes + lidx[None, :]      # [emax, L]
+        active = st["frontier"][fl] & e.valid[:, None]
+        tgt = jnp.broadcast_to(e.dst[:, None], (emax, lanes))
+        lane = jnp.broadcast_to(lidx[None, :], (emax, lanes))
+        dist2, _ = rt.wave(dist, tgt.reshape(-1),
+                           (dist[fl] + 1).reshape(-1),
+                           active.reshape(-1), op="min",
+                           lane=lane.reshape(-1), num_lanes=lanes)
+        changed = dist2 != dist
+        return {"dist": dist2, "frontier": changed}, sc, rt.any(changed)
+
+    alg = AlgorithmSpec("multi_bfs", "FF&MF", init, round_fn,
+                        lambda g, layout: layout.vpad)
+    res = run_distributed(alg, mesh, g, capacity=capacity, m=m, axis=axis,
+                          spec=spec, max_subrounds=max_subrounds)
+    dist = res.state["dist"].reshape(-1, lanes).T[:, :g.num_vertices]
     return (dist, res) if telemetry else (dist, res.rounds)
 
 

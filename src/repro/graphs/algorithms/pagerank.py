@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.core import autotune as AT
 from repro.core import commit as C
-from repro.core.messages import make_messages
+from repro.core.messages import lane_messages, make_messages
 from repro.graphs.csr import Graph
 
 
@@ -46,8 +46,83 @@ def pagerank(g: Graph, *, d: float = 0.85, iters: int = 20,
     return rank, conflicts
 
 
+@partial(jax.jit, static_argnames=("iters", "commit", "m", "sort", "spec"))
+def personalized_pagerank(g: Graph, source, *, d: float = 0.85,
+                          iters: int = 20, commit: str = "coarse",
+                          m: int | None = None, sort: bool = True,
+                          spec: C.CommitSpec | None = None):
+    """Personalized PageRank: the restart distribution is concentrated at
+    ``source`` (random surfer teleports home) — the single-query form the
+    serving layer lane-batches.  Dangling mass also returns to the source,
+    so per-lane mass is conserved at 1."""
+    if spec is None:
+        spec = C.CommitSpec(backend=commit, m=m, sort=sort, stats=False)
+    v = g.num_vertices
+    deg = jnp.maximum(g.degrees, 1).astype(jnp.float32)
+    dangling = g.degrees == 0
+    restart = jnp.zeros((v,), jnp.float32).at[source].set(1.0)
+    acc0 = jnp.zeros((v,), jnp.float32)
+    step, lvl0 = AT.make_commit_step(spec, "add", acc0, n=g.src.shape[0])
+
+    def body(carry, _):
+        rank, conflicts, lvl = carry
+        contrib = d * rank[g.src] / deg[g.src]
+        msgs = make_messages(g.dst, contrib, jnp.ones_like(g.src, bool))
+        res, lvl = step(acc0, msgs, lvl)
+        dangle = d * jnp.sum(jnp.where(dangling, rank, 0.0))
+        rank = restart * ((1.0 - d) + dangle) + res.state
+        return (rank, conflicts + res.conflicts, lvl), None
+
+    (rank, conflicts, _), _ = jax.lax.scan(
+        body, (restart, jnp.zeros((), jnp.int32), lvl0), None, length=iters)
+    return rank, conflicts
+
+
+@partial(jax.jit, static_argnames=("iters", "commit", "m", "sort", "spec"))
+def multi_source_pagerank(g: Graph, sources, *, d: float = 0.85,
+                          iters: int = 20, commit: str = "coarse",
+                          m: int | None = None, sort: bool = True,
+                          spec: C.CommitSpec | None = None):
+    """L personalized-PageRank queries as lanes of one fused wave.
+
+    Returns (rank [L, V], conflicts).  Row l matches
+    ``personalized_pagerank(g, sources[l])`` to float-add rounding (the
+    composite-key commit reorders each lane's accumulate exactly like any
+    transaction-size change does)."""
+    if spec is None:
+        spec = C.CommitSpec(backend=commit, m=m, sort=sort, stats=False)
+    v = g.num_vertices
+    sources = jnp.asarray(sources, jnp.int32)
+    lanes = sources.shape[0]
+    lidx = jnp.arange(lanes, dtype=jnp.int32)
+    deg = jnp.maximum(g.degrees, 1).astype(jnp.float32)
+    dangling = g.degrees == 0
+    restart = jnp.zeros((lanes, v), jnp.float32) \
+        .at[lidx, sources].set(1.0)
+    e = g.src.shape[0]
+    dst_l = jnp.broadcast_to(g.dst, (lanes, e))
+    valid_l = jnp.ones((lanes, e), bool)
+    acc0 = jnp.zeros((lanes * v,), jnp.float32)
+    step, lvl0 = AT.make_commit_step(spec, "add", acc0, n=lanes * e)
+
+    def body(carry, _):
+        rank, conflicts, lvl = carry
+        contrib = d * rank[:, g.src] / deg[g.src][None, :]
+        msgs = lane_messages(dst_l, contrib, valid_l, v)
+        res, lvl = step(acc0, msgs, lvl)
+        dangle = d * jnp.sum(jnp.where(dangling[None, :], rank, 0.0),
+                             axis=1)                      # [L]
+        rank = restart * ((1.0 - d) + dangle[:, None]) \
+            + res.state.reshape(lanes, v)
+        return (rank, conflicts + res.conflicts, lvl), None
+
+    (rank, conflicts, _), _ = jax.lax.scan(
+        body, (restart, jnp.zeros((), jnp.int32), lvl0), None, length=iters)
+    return rank, conflicts
+
+
 def distributed_pagerank(mesh, g: Graph, *, iters: int = 20,
-                         capacity: int = 4096, m: int | None = None,
+                         capacity: int | str = 4096, m: int | None = None,
                          axis: str = "data", d: float = 0.85,
                          spec: C.CommitSpec | None = None,
                          max_subrounds: int = 64, telemetry: bool = False):
@@ -84,6 +159,66 @@ def distributed_pagerank(mesh, g: Graph, *, iters: int = 20,
     res = run_distributed(alg, mesh, g, capacity=capacity, m=m, axis=axis,
                           spec=spec, max_subrounds=max_subrounds)
     rank = res.state["rank"][:v]
+    return (rank, res) if telemetry else rank
+
+
+def distributed_multi_source_pagerank(mesh, g: Graph, sources, *,
+                                      iters: int = 20,
+                                      capacity: int | str = 4096,
+                                      m: int | None = None,
+                                      axis: str = "data", d: float = 0.85,
+                                      spec: C.CommitSpec | None = None,
+                                      max_subrounds: int = 64,
+                                      telemetry: bool = False):
+    """Lane-batched personalized PageRank over a mesh axis — FF&AS
+    accumulate waves on vertex-major [vpad * L] state, per-lane dangling
+    mass psum'd as an [L] vector.  Returns rank [L, V];
+    ``telemetry=True`` returns (rank, DistributedResult)."""
+    from repro.core.engine import AlgorithmSpec, run_distributed
+    v = g.num_vertices
+
+    sources = jnp.asarray(sources, jnp.int32)
+    lanes = sources.shape[0]
+    lidx = jnp.arange(lanes, dtype=jnp.int32)
+
+    def init(g, layout):
+        vpad = layout.vpad
+        restart = jnp.zeros((vpad * lanes,), jnp.float32) \
+            .at[sources * lanes + lidx].set(1.0)
+        state = {
+            "rank": restart,
+            "restart": restart,
+            "deg": jnp.zeros((vpad,), jnp.int32).at[:v].set(
+                jnp.maximum(g.degrees, 1)),
+            "dangling": jnp.zeros((vpad,), bool).at[:v].set(g.degrees == 0),
+        }
+        return state, {}
+
+    def round_fn(rt, e, st, sc, it):
+        rank = st["rank"]                      # [block * L]
+        emax = e.dst.shape[0]
+        fl = e.my_src[:, None] * lanes + lidx[None, :]
+        contrib = d * rank[fl] / st["deg"][e.my_src] \
+            .astype(jnp.float32)[:, None]
+        tgt = jnp.broadcast_to(e.dst[:, None], (emax, lanes))
+        lane = jnp.broadcast_to(lidx[None, :], (emax, lanes))
+        valid = jnp.broadcast_to(e.valid[:, None], (emax, lanes))
+        acc0 = jnp.zeros(rank.shape, jnp.float32)
+        acc, _ = rt.wave(acc0, tgt.reshape(-1), contrib.reshape(-1),
+                         valid.reshape(-1), op="add",
+                         lane=lane.reshape(-1), num_lanes=lanes)
+        rk = rank.reshape(-1, lanes)
+        dm = rt.psum(jnp.sum(
+            jnp.where(st["dangling"][:, None], rk, 0.0), axis=0))   # [L]
+        rank2 = st["restart"].reshape(-1, lanes) \
+            * ((1.0 - d) + d * dm[None, :]) + acc.reshape(-1, lanes)
+        return dict(st, rank=rank2.reshape(-1)), sc, jnp.ones((), bool)
+
+    alg = AlgorithmSpec("multi_ppr", "FF&AS", init, round_fn,
+                        lambda g, layout: iters)
+    res = run_distributed(alg, mesh, g, capacity=capacity, m=m, axis=axis,
+                          spec=spec, max_subrounds=max_subrounds)
+    rank = res.state["rank"].reshape(-1, lanes).T[:, :v]
     return (rank, res) if telemetry else rank
 
 

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 
 from repro.core import autotune as AT
 from repro.core import commit as C
-from repro.core.messages import make_messages
+from repro.core.messages import lane_messages, make_messages
 from repro.graphs.csr import Graph
 
 INF = jnp.float32(3.0e38)
@@ -42,7 +42,50 @@ def sssp(g: Graph, source, *, commit: str = "coarse", m: int | None = None,
     return dist, rounds
 
 
-def distributed_sssp(mesh, g: Graph, source: int, *, capacity: int = 4096,
+@partial(jax.jit, static_argnames=("commit", "m", "sort", "spec"))
+def multi_source_sssp(g: Graph, sources, *, commit: str = "coarse",
+                      m: int | None = None, sort: bool = True,
+                      spec: C.CommitSpec | None = None):
+    """L independent SSSP roots as lanes of one fused wave.
+
+    Returns (dist [L, V], rounds); row l is bit-identical to
+    ``sssp(g, sources[l])`` — f32 ``min`` over the same relaxation
+    multiset is order-independent, so the composite-key commit
+    (``lane * V + v``) changes nothing per lane."""
+    if spec is None:
+        spec = C.CommitSpec(backend=commit, m=m, sort=sort, stats=False)
+    v = g.num_vertices
+    sources = jnp.asarray(sources, jnp.int32)
+    lanes = sources.shape[0]
+    lidx = jnp.arange(lanes, dtype=jnp.int32)
+    dist0 = jnp.full((lanes, v), INF, jnp.float32) \
+        .at[lidx, sources].set(0.0)
+    frontier0 = jnp.zeros((lanes, v), bool).at[lidx, sources].set(True)
+    e = g.src.shape[0]
+    dst_l = jnp.broadcast_to(g.dst, (lanes, e))
+    step, lvl0 = AT.make_commit_step(spec, "min", dist0.reshape(-1),
+                                     n=lanes * e)
+
+    def cond(state):
+        _, frontier, it, _ = state
+        return jnp.any(frontier) & (it < v)
+
+    def body(state):
+        dist, frontier, it, lvl = state
+        active = frontier[:, g.src]
+        msgs = lane_messages(dst_l, dist[:, g.src] + g.weights[None, :],
+                             active, v)
+        res, lvl = step(dist.reshape(-1), msgs, lvl)
+        dist2 = res.state.reshape(lanes, v)
+        return dist2, dist2 != dist, it + 1, lvl
+
+    dist, _, rounds, _ = jax.lax.while_loop(
+        cond, body, (dist0, frontier0, jnp.zeros((), jnp.int32), lvl0))
+    return dist, rounds
+
+
+def distributed_sssp(mesh, g: Graph, source: int, *,
+                     capacity: int | str = 4096,
                      m: int | None = None, axis: str = "data",
                      spec: C.CommitSpec | None = None,
                      max_subrounds: int = 64, telemetry: bool = False):
@@ -70,6 +113,53 @@ def distributed_sssp(mesh, g: Graph, source: int, *, capacity: int = 4096,
     res = run_distributed(alg, mesh, g, capacity=capacity, m=m, axis=axis,
                           spec=spec, max_subrounds=max_subrounds)
     dist = res.state["dist"][:g.num_vertices]
+    return (dist, res) if telemetry else (dist, res.rounds)
+
+
+def distributed_multi_source_sssp(mesh, g: Graph, sources, *,
+                                  capacity: int | str = 4096,
+                                  m: int | None = None, axis: str = "data",
+                                  spec: C.CommitSpec | None = None,
+                                  max_subrounds: int = 64,
+                                  telemetry: bool = False):
+    """Lane-batched Bellman-Ford over a mesh axis (vertex-major
+    [vpad * L] state, lane ids riding the coalescing buckets) — the
+    distributed mirror of :func:`multi_source_sssp`.  Returns
+    (dist [L, V], rounds); ``telemetry=True`` returns the
+    DistributedResult instead of rounds."""
+    from repro.core.engine import AlgorithmSpec, run_distributed
+
+    sources = jnp.asarray(sources, jnp.int32)
+    lanes = sources.shape[0]
+    lidx = jnp.arange(lanes, dtype=jnp.int32)
+
+    def init(g, layout):
+        flat = sources * lanes + lidx
+        dist0 = jnp.full((layout.vpad * lanes,), INF, jnp.float32) \
+            .at[flat].set(0.0)
+        frontier0 = jnp.zeros((layout.vpad * lanes,), bool) \
+            .at[flat].set(True)
+        return {"dist": dist0, "frontier": frontier0}, {}
+
+    def round_fn(rt, e, st, sc, it):
+        dist = st["dist"]
+        emax = e.dst.shape[0]
+        fl = e.my_src[:, None] * lanes + lidx[None, :]
+        active = st["frontier"][fl] & e.valid[:, None]
+        tgt = jnp.broadcast_to(e.dst[:, None], (emax, lanes))
+        lane = jnp.broadcast_to(lidx[None, :], (emax, lanes))
+        dist2, _ = rt.wave(dist, tgt.reshape(-1),
+                           (dist[fl] + e.weight[:, None]).reshape(-1),
+                           active.reshape(-1), op="min",
+                           lane=lane.reshape(-1), num_lanes=lanes)
+        changed = dist2 != dist
+        return {"dist": dist2, "frontier": changed}, sc, rt.any(changed)
+
+    alg = AlgorithmSpec("multi_sssp", "FF&MF", init, round_fn,
+                        lambda g, layout: layout.vpad)
+    res = run_distributed(alg, mesh, g, capacity=capacity, m=m, axis=axis,
+                          spec=spec, max_subrounds=max_subrounds)
+    dist = res.state["dist"].reshape(-1, lanes).T[:, :g.num_vertices]
     return (dist, res) if telemetry else (dist, res.rounds)
 
 

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.core import autotune as AT
 from repro.core import commit as C
-from repro.core.messages import make_messages
+from repro.core.messages import lane_messages, make_messages
 from repro.graphs.csr import Graph
 
 WHITE, GREY, GREEN = -1, 1, 2
@@ -45,15 +45,72 @@ def st_connectivity(g: Graph, s, t, *, spec: C.CommitSpec | None = None):
         changed = res.state != color
         return res.state, changed, found, it + 1, lvl
 
+    # s == t is connected by the empty path (distributed_stconn and the
+    # lane-batched multi_source_stconn already answer True; the wave
+    # below cannot — s's GREY is overwritten by t's GREEN at init)
+    found0 = jnp.asarray(s) == jnp.asarray(t)
     color, _, found, rounds, _ = jax.lax.while_loop(
-        cond, body, (color0, frontier0, jnp.zeros((), bool),
+        cond, body, (color0, frontier0, found0,
                      jnp.zeros((), jnp.int32), lvl0))
     # exhaustive fallback: same color reached both? (disconnected otherwise)
     return found, rounds
 
 
+@partial(jax.jit, static_argnames=("spec",))
+def multi_source_stconn(g: Graph, ss, ts, *,
+                        spec: C.CommitSpec | None = None):
+    """L s-t connectivity queries as one fused wave.
+
+    Query l runs its two BFS waves as lanes 2l (grey, from ``ss[l]``) and
+    2l+1 (green, from ``ts[l]``) of a [2L, V] ``or``-mark state —
+    connectivity is proven where both marks meet.  Returns
+    (found [L] bool, rounds).  ``found[l]`` equals
+    ``st_connectivity(g, ss[l], ts[l])`` for ss[l] != ts[l] (both compute
+    ground-truth reachability); answered queries stop emitting messages
+    while the wave keeps serving the rest."""
+    if spec is None:
+        spec = C.CommitSpec(backend="coarse")
+    v = g.num_vertices
+    ss = jnp.asarray(ss, jnp.int32)
+    ts = jnp.asarray(ts, jnp.int32)
+    lanes = ss.shape[0]
+    l2 = 2 * lanes
+    lidx = jnp.arange(lanes, dtype=jnp.int32)
+    marks0 = jnp.zeros((l2, v), jnp.int32) \
+        .at[2 * lidx, ss].set(1).at[2 * lidx + 1, ts].set(1)
+    frontier0 = jnp.zeros((l2, v), bool) \
+        .at[2 * lidx, ss].set(True).at[2 * lidx + 1, ts].set(True)
+    found0 = ss == ts
+    e = g.src.shape[0]
+    dst_l = jnp.broadcast_to(g.dst, (l2, e))
+    step, lvl0 = AT.make_commit_step(spec, "or", marks0.reshape(-1),
+                                     n=l2 * e)
+
+    def cond(state):
+        _, frontier, found, it, _ = state
+        live = frontier & jnp.repeat(~found, 2)[:, None]
+        return jnp.any(live) & (it < v)
+
+    def body(state):
+        marks, frontier, found, it, lvl = state
+        active = frontier[:, g.src] \
+            & jnp.repeat(~found, 2)[:, None]    # answered lanes go quiet
+        msgs = lane_messages(dst_l, active.astype(jnp.int32), active, v)
+        res, lvl = step(marks.reshape(-1), msgs, lvl)
+        marks2 = res.state.reshape(l2, v)
+        frontier2 = (marks2 != 0) & (marks == 0)
+        meet = (marks2[0::2] != 0) & (marks2[1::2] != 0)   # [L, V]
+        return marks2, frontier2, found | jnp.any(meet, axis=1), \
+            it + 1, lvl
+
+    _, _, found, rounds, _ = jax.lax.while_loop(
+        cond, body, (marks0, frontier0, found0,
+                     jnp.zeros((), jnp.int32), lvl0))
+    return found, rounds
+
+
 def distributed_stconn(mesh, g: Graph, s: int, t: int, *,
-                       capacity: int = 4096, m: int | None = None,
+                       capacity: int | str = 4096, m: int | None = None,
                        axis: str = "data",
                        spec: C.CommitSpec | None = None,
                        max_subrounds: int = 64, telemetry: bool = False):
@@ -93,6 +150,65 @@ def distributed_stconn(mesh, g: Graph, s: int, t: int, *,
         return state, {"found": found}, active
 
     alg = AlgorithmSpec("stconn", "FR&AS", init, round_fn,
+                        lambda g, layout: layout.vpad)
+    res = run_distributed(alg, mesh, g, capacity=capacity, m=m, axis=axis,
+                          spec=spec, max_subrounds=max_subrounds)
+    out = (res.scalars["found"], res.rounds)
+    return out + (res,) if telemetry else out
+
+
+def distributed_multi_source_stconn(mesh, g: Graph, ss, ts, *,
+                                    capacity: int | str = 4096,
+                                    m: int | None = None,
+                                    axis: str = "data",
+                                    spec: C.CommitSpec | None = None,
+                                    max_subrounds: int = 64,
+                                    telemetry: bool = False):
+    """Lane-batched s-t connectivity over a mesh axis: 2L mark lanes on
+    vertex-major [vpad * 2L] state, per-lane found bits psum'd each round
+    (the FR "return true" as an [L] vector).  Returns (found [L], rounds);
+    ``telemetry=True`` appends the DistributedResult."""
+    from repro.core.engine import AlgorithmSpec, run_distributed
+
+    ss = jnp.asarray(ss, jnp.int32)
+    ts = jnp.asarray(ts, jnp.int32)
+    lanes = ss.shape[0]
+    l2 = 2 * lanes
+    lidx = jnp.arange(lanes, dtype=jnp.int32)
+    l2idx = jnp.arange(l2, dtype=jnp.int32)
+
+    def init(g, layout):
+        vpad = layout.vpad
+        marks0 = jnp.zeros((vpad * l2,), jnp.int32) \
+            .at[ss * l2 + 2 * lidx].set(1) \
+            .at[ts * l2 + 2 * lidx + 1].set(1)
+        frontier0 = jnp.zeros((vpad * l2,), bool) \
+            .at[ss * l2 + 2 * lidx].set(True) \
+            .at[ts * l2 + 2 * lidx + 1].set(True)
+        return {"marks": marks0, "frontier": frontier0}, \
+            {"found": ss == ts}
+
+    def round_fn(rt, e, st, sc, it):
+        emax = e.dst.shape[0]
+        live = jnp.repeat(~sc["found"], 2)              # [2L]
+        fl = e.my_src[:, None] * l2 + l2idx[None, :]    # [emax, 2L]
+        active = st["frontier"][fl] & e.valid[:, None] & live[None, :]
+        tgt = jnp.broadcast_to(e.dst[:, None], (emax, l2))
+        lane = jnp.broadcast_to(l2idx[None, :], (emax, l2))
+        marks2, _ = rt.wave(st["marks"], tgt.reshape(-1),
+                            active.astype(jnp.int32).reshape(-1),
+                            active.reshape(-1), op="or",
+                            lane=lane.reshape(-1), num_lanes=l2)
+        frontier2 = (marks2 != 0) & (st["marks"] == 0)
+        mk = marks2.reshape(-1, l2)
+        meet = (mk[:, 0::2] != 0) & (mk[:, 1::2] != 0)  # [block, L]
+        found = sc["found"] | (rt.psum(
+            jnp.sum(meet.astype(jnp.int32), axis=0)) > 0)
+        live2 = frontier2.reshape(-1, l2) & jnp.repeat(~found, 2)[None, :]
+        return {"marks": marks2, "frontier": frontier2}, \
+            {"found": found}, rt.any(live2)
+
+    alg = AlgorithmSpec("multi_stconn", "FR&AS", init, round_fn,
                         lambda g, layout: layout.vpad)
     res = run_distributed(alg, mesh, g, capacity=capacity, m=m, axis=axis,
                           spec=spec, max_subrounds=max_subrounds)

@@ -1,0 +1,263 @@
+"""Graph query service — lane-batched multi-tenant serving of AAM queries.
+
+The paper's waves amortize per-message overhead by coalescing many active
+messages into one transaction; at serving scale the same move applies one
+level up: many *independent user queries* fuse into lanes of a single
+wave (composite commit keys ``lane * V + v``, one conflict resolution for
+all lanes — see ``repro.core.coalescing``).  UpDown's event fabric and
+PIUMA's multi-tenant pipelines make the identical
+aggregate-small-events-into-big-atomic-steps bet in hardware.
+
+The service owns the non-wave half of serving:
+
+* **admission / microbatching** — submitted queries queue per
+  (graph, fuse key); ``drain()`` packs each queue into waves of at most
+  ``max_lanes`` lanes, padding the lane count up to the next rung of a
+  power-of-two lane ladder so only ``log2(max_lanes)+1`` jit cache
+  entries per query kind ever exist (pad lanes repeat a real query and
+  are discarded);
+* **in-flight dedup** — identical queries submitted before a drain share
+  one lane;
+* **result cache** — keyed by ``(graph_id, query)``; hits answer at
+  submit time without touching the accelerator;
+* **telemetry** — :class:`ServiceStats` counts what the lane ladder and
+  cache actually saved.
+
+Execution is the lane-extended algorithm entry points
+(``multi_source_*``); pass ``mesh=`` to serve from the distributed
+harness (``distributed_multi_source_*`` + ``capacity="auto"``) instead of
+the single-shard loops.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.core import commit as C
+from repro.serve.queries import (BfsQuery, PprQuery, SsspQuery, StConnQuery,
+                                 QUERY_KINDS)
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """What the batching layer did (not wave-level telemetry — that lives
+    in CommitResult/DistributedResult)."""
+    submitted: int = 0
+    cache_hits: int = 0
+    deduped: int = 0         # submissions that joined an in-flight lane
+    waves: int = 0           # fused waves executed
+    lanes_executed: int = 0  # total lanes across waves (incl. padding)
+    lanes_padded: int = 0    # ladder-padding lanes (discarded results)
+
+
+def _lane_ladder(max_lanes: int) -> tuple:
+    """(1, 2, 4, ..., max_lanes)."""
+    ladder = []
+    lane = 1
+    while lane < max_lanes:
+        ladder.append(lane)
+        lane *= 2
+    return tuple(ladder) + (max_lanes,)
+
+
+class GraphService:
+    """Serve streams of independent graph queries as fused lane waves.
+
+    spec:       CommitSpec for every fused commit.  None (default) serves
+                with ``CommitSpec(backend="auto", sort=False,
+                stats=False)`` — the calibrated mechanism tier minus the
+                jnp sort emulation: the sorted coarse path pays an
+                L-times-larger argsort on every fused wave (mostly over
+                masked-out lanes once queries start converging), which a
+                single all-valid micro-race can mistakenly favor but
+                dispatch amortization never recoups; the scatter and
+                Pallas tiers stay in the race.  Pass a concrete spec to
+                pin the mechanism.
+    max_lanes:  lane budget L of one fused wave (power of two).
+    mesh:       optional — execute on the distributed harness over
+                ``mesh[axis]`` shards instead of the single-shard loops.
+    capacity:   coalescing factor for distributed execution ("auto" =
+                telemetry-sized, see ``repro.core.engine.auto_capacity``).
+    cache:      keep a ``(graph_id, query) -> result`` cache.
+    max_results / max_cache: retention bounds (FIFO eviction) — a serving
+                daemon must not hold every [V] result row it ever
+                produced; ``result()`` raises KeyError for tickets older
+                than the last ``max_results``.
+    """
+
+    def __init__(self, *, spec: C.CommitSpec | None = None,
+                 max_lanes: int = 8, mesh=None,
+                 capacity: int | str = "auto", axis: str = "data",
+                 cache: bool = True, max_results: int = 4096,
+                 max_cache: int = 1024):
+        if max_lanes < 1 or (max_lanes & (max_lanes - 1)):
+            raise ValueError(f"max_lanes must be a power of two, got "
+                             f"{max_lanes}")
+        self.spec = spec if spec is not None \
+            else C.CommitSpec(backend="auto", sort=False, stats=False)
+        self.max_lanes = max_lanes
+        self.lane_ladder = _lane_ladder(max_lanes)
+        self.mesh = mesh
+        self.capacity = capacity
+        self.axis = axis
+        self.max_results = max_results
+        self.max_cache = max_cache
+        self.stats = ServiceStats()
+        self._graphs: dict[Any, Any] = {}
+        # (graph_id, fuse_key) -> {query: [tickets]} in arrival order
+        self._queue: dict[tuple, dict] = {}
+        self._results: dict[int, Any] = {}
+        self._cache: dict | None = {} if cache else None
+        self._next_ticket = 0
+
+    @staticmethod
+    def _bounded_put(d: dict, key, value, bound: int) -> None:
+        """Insert with FIFO eviction (python dicts iterate insertion
+        order) so long-running services hold O(bound) result rows."""
+        d[key] = value
+        while len(d) > bound:
+            d.pop(next(iter(d)))
+
+    # -- admission --------------------------------------------------------
+
+    def register_graph(self, graph_id, g) -> None:
+        """Register a graph under ``graph_id`` (the tenant key)."""
+        self._graphs[graph_id] = g
+
+    def submit(self, graph_id, query) -> int:
+        """Enqueue one query; returns a ticket for :meth:`result`.
+
+        Cache hits resolve immediately; identical in-flight queries share
+        a lane (the ticket still gets its own result entry).  Vertex ids
+        are validated here — under jit an out-of-range source would be
+        silently DROPPED by the scatter (an all-INF answer, then
+        cached), so admission is the error boundary."""
+        if graph_id not in self._graphs:
+            raise KeyError(f"unknown graph_id {graph_id!r}; "
+                           f"register_graph first")
+        if query.kind not in QUERY_KINDS:
+            raise ValueError(f"unknown query kind {query.kind!r}")
+        v = self._graphs[graph_id].num_vertices
+        ids = (query.s, query.t) if query.kind == "stconn" \
+            else (query.source,)
+        for i in ids:
+            if not 0 <= int(i) < v:
+                raise ValueError(f"{query} names vertex {i} outside "
+                                 f"[0, {v}) of graph {graph_id!r}")
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self.stats.submitted += 1
+        ck = (graph_id, query)
+        if self._cache is not None and ck in self._cache:
+            self.stats.cache_hits += 1
+            self._bounded_put(self._results, ticket, self._cache[ck],
+                              self.max_results)
+            return ticket
+        lanes = self._queue.setdefault((graph_id, query.fuse_key()), {})
+        if query in lanes:
+            self.stats.deduped += 1
+        lanes.setdefault(query, []).append(ticket)
+        return ticket
+
+    def pending(self) -> int:
+        """Distinct queries waiting for the next :meth:`drain`."""
+        return sum(len(q) for q in self._queue.values())
+
+    def result(self, ticket: int):
+        """The answer for ``ticket`` (KeyError until drained)."""
+        return self._results[ticket]
+
+    # -- execution --------------------------------------------------------
+
+    def drain(self) -> dict:
+        """Execute every queued query in fused lane waves.
+
+        Returns {ticket: result} for everything completed by this call."""
+        done: dict[int, Any] = {}
+        queues, self._queue = self._queue, {}
+        for (graph_id, _), lanes in queues.items():
+            g = self._graphs[graph_id]
+            queries = list(lanes)
+            for lo in range(0, len(queries), self.max_lanes):
+                chunk = queries[lo:lo + self.max_lanes]
+                rows = self._execute_wave(g, chunk)
+                for q, row in zip(chunk, rows):
+                    if self._cache is not None:
+                        self._bounded_put(self._cache, (graph_id, q), row,
+                                          self.max_cache)
+                    for t in lanes[q]:
+                        self._bounded_put(self._results, t, row,
+                                          self.max_results)
+                        done[t] = row
+        return done
+
+    def run(self, graph_id, queries) -> list:
+        """Convenience: submit all, drain, return results in order."""
+        tickets = [self.submit(graph_id, q) for q in queries]
+        self.drain()
+        return [self._results[t] for t in tickets]
+
+    def _execute_wave(self, g, chunk: list) -> list:
+        """One fused wave: pad ``chunk`` up the lane ladder, execute,
+        return one result row per real query."""
+        k = len(chunk)
+        lanes = next(l for l in self.lane_ladder if l >= k)
+        padded = chunk + [chunk[-1]] * (lanes - k)
+        self.stats.waves += 1
+        self.stats.lanes_executed += lanes
+        self.stats.lanes_padded += lanes - k
+        kind = chunk[0].kind
+        if kind == "bfs":
+            srcs = jnp.asarray([q.source for q in padded], jnp.int32)
+            if self.mesh is not None:
+                from repro.graphs.algorithms.bfs import \
+                    distributed_multi_source_bfs
+                dist, _ = distributed_multi_source_bfs(
+                    self.mesh, g, srcs, spec=self.spec,
+                    capacity=self.capacity, axis=self.axis)
+            else:
+                from repro.graphs.algorithms.bfs import multi_source_bfs
+                dist = multi_source_bfs(g, srcs, spec=self.spec).dist
+            return [dist[i] for i in range(k)]
+        if kind == "sssp":
+            srcs = jnp.asarray([q.source for q in padded], jnp.int32)
+            if self.mesh is not None:
+                from repro.graphs.algorithms.sssp import \
+                    distributed_multi_source_sssp
+                dist, _ = distributed_multi_source_sssp(
+                    self.mesh, g, srcs, spec=self.spec,
+                    capacity=self.capacity, axis=self.axis)
+            else:
+                from repro.graphs.algorithms.sssp import multi_source_sssp
+                dist, _ = multi_source_sssp(g, srcs, spec=self.spec)
+            return [dist[i] for i in range(k)]
+        if kind == "ppr":
+            srcs = jnp.asarray([q.source for q in padded], jnp.int32)
+            iters, d = chunk[0].iters, chunk[0].d
+            if self.mesh is not None:
+                from repro.graphs.algorithms.pagerank import \
+                    distributed_multi_source_pagerank
+                rank = distributed_multi_source_pagerank(
+                    self.mesh, g, srcs, iters=iters, d=d, spec=self.spec,
+                    capacity=self.capacity, axis=self.axis)
+            else:
+                from repro.graphs.algorithms.pagerank import \
+                    multi_source_pagerank
+                rank, _ = multi_source_pagerank(g, srcs, iters=iters, d=d,
+                                                spec=self.spec)
+            return [rank[i] for i in range(k)]
+        # stconn
+        ss = jnp.asarray([q.s for q in padded], jnp.int32)
+        ts = jnp.asarray([q.t for q in padded], jnp.int32)
+        if self.mesh is not None:
+            from repro.graphs.algorithms.stconn import \
+                distributed_multi_source_stconn
+            found, _ = distributed_multi_source_stconn(
+                self.mesh, g, ss, ts, spec=self.spec,
+                capacity=self.capacity, axis=self.axis)
+        else:
+            from repro.graphs.algorithms.stconn import multi_source_stconn
+            found, _ = multi_source_stconn(g, ss, ts, spec=self.spec)
+        return [bool(found[i]) for i in range(k)]

@@ -1,0 +1,62 @@
+"""Graph query taxonomy for the serving layer.
+
+A query is one user's question about a registered graph — the unit the
+:class:`repro.serve.graph_service.GraphService` admits, microbatches into
+lanes of a fused AAM wave, and caches.  Queries are frozen dataclasses:
+hashable (result-cache keys, in-flight dedup) and cheap to compare.
+
+``fuse_key()`` names the static knobs two queries must share to ride the
+same fused wave (same jit cache entry): BFS/SSSP/st-conn queries fuse
+unconditionally per kind; personalized-PageRank queries fuse per
+(iters, damping) pair because those are trace-time constants of the loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar
+
+
+@dataclasses.dataclass(frozen=True)
+class BfsQuery:
+    """Unweighted distances from ``source`` — result row: int32 [V]."""
+    source: int
+    kind: ClassVar[str] = "bfs"
+
+    def fuse_key(self) -> tuple:
+        return (self.kind,)
+
+
+@dataclasses.dataclass(frozen=True)
+class SsspQuery:
+    """Weighted distances from ``source`` — result row: float32 [V]."""
+    source: int
+    kind: ClassVar[str] = "sssp"
+
+    def fuse_key(self) -> tuple:
+        return (self.kind,)
+
+
+@dataclasses.dataclass(frozen=True)
+class PprQuery:
+    """Personalized PageRank with restart at ``source`` — float32 [V]."""
+    source: int
+    iters: int = 20
+    d: float = 0.85
+    kind: ClassVar[str] = "ppr"
+
+    def fuse_key(self) -> tuple:
+        return (self.kind, self.iters, self.d)
+
+
+@dataclasses.dataclass(frozen=True)
+class StConnQuery:
+    """Is ``t`` reachable from ``s``? — result: bool scalar."""
+    s: int
+    t: int
+    kind: ClassVar[str] = "stconn"
+
+    def fuse_key(self) -> tuple:
+        return (self.kind,)
+
+
+QUERY_KINDS = ("bfs", "sssp", "ppr", "stconn")
