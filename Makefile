@@ -30,11 +30,12 @@ bench:
 # the persistent perf trajectory: tiny fig3/fig4/fig6/fig7/serve sweeps x
 # every backend x the calibrated auto spec (schema checked by
 # tests/test_autotune.py), auto-diffed against the most recent previous
-# BENCH_*.json
+# BENCH_*.json; serve rows cover BOTH batch axes (L= lanes, G= graphs)
 bench-json:
-	$(PY) -m benchmarks.run --json BENCH_pr4.json --sizes tiny
+	$(PY) -m benchmarks.run --json BENCH_pr5.json --sizes tiny
 
-# serving throughput/latency: lane-batched GraphService QPS + p50/p99 vs
-# the sequential query-at-a-time loop
+# serving throughput/latency: batch-axis GraphService QPS + p50/p99 vs
+# the sequential query-at-a-time loop (lane axis by default; add
+# `--axis graphs` for the tenant-graph axis)
 bench-serve:
 	$(PY) -m benchmarks.serve_qps

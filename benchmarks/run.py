@@ -62,14 +62,17 @@ JSON_SIZES = {
                  fig7=dict(scale=9, ps=(1, 2, 4), reps=3,
                            backends=("coarse",)),
                  serve=dict(kinds=("bfs", "ppr"), lanes=(1, 8), scale=7,
-                            queries=16, repeats=7),
+                            queries=16, repeats=7,
+                            gkinds=("bfs", "coloring"), gcounts=(1, 8),
+                            gscale=7),
                  backends=("atomic", "coarse", "pallas", "auto"), repeats=7),
     "smoke": dict(fig4=dict(scale=8, edge_factor=4, ms=(64, None)),
                   fig6=dict(scales=(8,), densities=(4,), edge_factor=4,
                             density_scale=8),
                   fig3=dict(v=1 << 10, n=512),
                   serve=dict(kinds=("bfs",), lanes=(1, 4), scale=7,
-                             queries=8, repeats=2),
+                             queries=8, repeats=2,
+                             gkinds=("bfs",), gcounts=(1, 4), gscale=6),
                   backends=("atomic", "coarse", "auto"), repeats=2),
 }
 
@@ -314,6 +317,27 @@ def bench_json(sizes: str) -> dict:
                 "lanes": top["lanes"],
                 "qps_vs_seq": round(top["speedup_vs_seq"], 3),
                 "lane_batched_wins": bool(top["speedup_vs_seq"] > 1.0),
+                "correct": all(s["correct"] for s in ks)}
+        # the graph batch axis: same query kind over G tenant graphs
+        # (interleaved with its G=1 sequential baseline inside
+        # sweep_graphs, per the bench-host-noise rule)
+        gstats = serve_qps.sweep_graphs(
+            sv["gkinds"], sv["gcounts"], scale=sv["gscale"],
+            repeats=sv.get("repeats", 5))
+        for st in gstats:
+            add("serve", "auto", f"serve/{st['kind']}/G={st['graphs']}",
+                st["us_per_query"] / 1e6,
+                f"qps={st['qps']:.0f} p50={st['p50_ms']:.1f}ms "
+                f"p99={st['p99_ms']:.1f}ms "
+                f"speedup_vs_seq={st['speedup_vs_seq']:.2f} "
+                f"correct={st['correct']}")
+        for kind in sv["gkinds"]:
+            ks = [s for s in gstats if s["kind"] == kind]
+            top = max(ks, key=lambda s: s["graphs"])
+            serve_summary[f"{kind}@graphs"] = {
+                "graphs": top["graphs"],
+                "qps_vs_seq": round(top["speedup_vs_seq"], 3),
+                "graph_batched_wins": bool(top["speedup_vs_seq"] > 1.0),
                 "correct": all(s["correct"] for s in ks)}
     else:
         serve_summary = None

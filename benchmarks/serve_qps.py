@@ -1,20 +1,33 @@
-"""Serving throughput/latency — lane-batched waves vs the sequential loop.
+"""Serving throughput/latency — batch-axis waves vs the sequential loop.
 
-The serving claim (ISSUE 4 / ROADMAP north star): fusing L independent
-queries into one wave amortizes the per-call overhead a
-query-at-a-time loop pays L times.  This benchmark drives a
-:class:`repro.serve.graph_service.GraphService` at every rung of its lane
-ladder and reports QPS and per-query latency percentiles (a query's
-latency is the wall time of the wave it rode — microbatching trades p50
-for throughput exactly like LLM serving batchers do), checking along the
-way that every lane count returns the sequential loop's answers.
+The serving claim (ISSUE 4/5 / ROADMAP north star): fusing independent
+work items into one wave amortizes the per-call overhead a
+query-at-a-time loop pays per item.  Two batch axes:
+
+* ``--axis lanes`` (default): L queries over ONE graph fuse as lanes —
+  the benchmark drives a :class:`repro.serve.graph_service.GraphService`
+  at every rung of its lane ladder;
+* ``--axis graphs``: the same query kind over G tenant graphs fuses as
+  a graph batch (the only axis coloring/Boruvka have) — the service is
+  driven at every rung of its GRAPH ladder, G=1 being the sequential
+  per-graph loop.
+
+Both report QPS and per-query latency percentiles (a query's latency is
+the wall time of the wave it rode — microbatching trades p50 for
+throughput exactly like LLM serving batchers do), and both check that
+every batch width returns the sequential loop's answers.  All widths are
+measured INTERLEAVED round-robin (host noise arrives in multi-minute
+waves; sequential per-width measurement would hand arbitrary widths a
+2x win).
 
   PYTHONPATH=src python -m benchmarks.serve_qps [--backend auto]
-      [--kinds bfs,ppr] [--lanes 1,2,4,8] [--scale 9] [--queries 32]
+      [--axis lanes|graphs] [--kinds bfs,ppr] [--lanes 1,2,4,8]
+      [--graphs 1,2,4,8] [--scale 9] [--queries 32]
 
-CSV rows: ``serve/<kind>/L=<l>/qps`` with us-per-query;
-``benchmarks.run --json`` folds the same ``sweep(...)`` measurements
-into the persistent ``aam-bench/v1`` trajectory as its serve suite.
+CSV rows: ``serve/<kind>/L=<l>/qps`` / ``serve/<kind>/G=<g>/qps`` with
+us-per-query; ``benchmarks.run --json`` folds the same ``sweep(...)`` /
+``sweep_graphs(...)`` measurements into the persistent ``aam-bench/v1``
+trajectory as its serve suite.
 """
 from __future__ import annotations
 
@@ -28,9 +41,14 @@ import numpy as np
 from benchmarks.common import emit
 from repro.core.commit import BACKENDS, CommitSpec
 from repro.serve.graph_service import GraphService
-from repro.serve.queries import BfsQuery, PprQuery, SsspQuery, StConnQuery
+from repro.serve.queries import (BfsQuery, PprQuery, SsspQuery,
+                                 StConnQuery, ColoringQuery, MstQuery)
 
 PPR_ITERS = 5
+
+
+LANE_KINDS = ("bfs", "sssp", "ppr", "stconn")
+GRAPH_KINDS = LANE_KINDS + ("coloring", "mst")
 
 
 def _queries(kind: str, sources, extra):
@@ -40,7 +58,10 @@ def _queries(kind: str, sources, extra):
         return [SsspQuery(int(s)) for s in sources]
     if kind == "ppr":
         return [PprQuery(int(s), iters=PPR_ITERS) for s in sources]
-    return [StConnQuery(int(s), int(t)) for s, t in zip(sources, extra)]
+    if kind == "stconn":
+        return [StConnQuery(int(s), int(t)) for s, t in zip(sources, extra)]
+    raise ValueError(f"kind {kind!r} has no lane form; --axis lanes "
+                     f"accepts {LANE_KINDS}")
 
 
 def _spec(backend: str | None) -> CommitSpec | None:
@@ -80,15 +101,32 @@ def _stats(best, n_queries: int) -> dict:
     }
 
 
+def _interleaved_best(widths, pass_fn, n_queries: int,
+                      repeats: int = 5) -> dict:
+    """THE batch-width measurement protocol, shared by both axes:
+    every width measured INTERLEAVED round-robin (rotating start),
+    min-of-passes per width — host noise arrives in multi-second waves,
+    so sequential per-width measurement would hand arbitrary widths a
+    2x win; interleaving keeps the width-vs-width ratios honest even
+    while the absolute times drift (same reasoning as the fig-row
+    ``_measure_interleaved``).  ``pass_fn(width)`` runs one full
+    workload pass and returns (wave_times, lat, results).  Returns
+    {width: (stats dict, results)}."""
+    best: dict = {}
+    order = list(widths)
+    for r in range(max(repeats, 1)):
+        rot = order[r % len(order):] + order[:r % len(order)]
+        for width in rot:
+            wave_times, lat, results = pass_fn(width)
+            if width not in best or sum(wave_times) < best[width][0]:
+                best[width] = (sum(wave_times), wave_times, lat, results)
+    return {w: (_stats(b, n_queries), b[3]) for w, b in best.items()}
+
+
 def measure_kind(kind: str, g, sources, extra, lane_counts,
                  backend: str | None, repeats: int = 5) -> dict:
-    """Measure every lane count of one kind INTERLEAVED round-robin, min-
-    of-passes per lane count — host noise arrives in multi-second waves,
-    so sequential per-L measurement would hand arbitrary lane counts a
-    2x win; interleaving keeps the L-vs-L ratios honest even while the
-    absolute times drift (same reasoning as the fig-row
-    ``_measure_interleaved``).  The cache is off so every query
-    executes.  Returns {lanes: (stats dict, results)}."""
+    """Lane-axis instance of :func:`_interleaved_best` (cache off so
+    every query executes).  Returns {lanes: (stats dict, results)}."""
     qs = _queries(kind, sources, extra)
     svcs = {}
     for lanes in lane_counts:
@@ -97,20 +135,18 @@ def measure_kind(kind: str, g, sources, extra, lane_counts,
         svc.register_graph("g", g)
         svc.run("g", qs[:lanes])    # compile (+ calibrate) per lane count
         svcs[lanes] = svc
-    best: dict = {}
-    order = list(lane_counts)
-    for r in range(max(repeats, 1)):
-        rot = order[r % len(order):] + order[:r % len(order)]
-        for lanes in rot:
-            wave_times, lat, results = _pass(svcs[lanes], qs, lanes)
-            if lanes not in best or sum(wave_times) < best[lanes][0]:
-                best[lanes] = (sum(wave_times), wave_times, lat, results)
-    return {lanes: (_stats(b, len(qs)), b[3]) for lanes, b in best.items()}
+    return _interleaved_best(lane_counts,
+                             lambda lanes: _pass(svcs[lanes], qs, lanes),
+                             len(qs), repeats)
 
 
 def _same(kind: str, a, b) -> bool:
     if kind == "stconn":
         return all(x == y for x, y in zip(a, b))
+    if kind == "mst":          # (comp, weight, n_edges) per graph
+        return all(np.array_equal(np.asarray(x[0]), np.asarray(y[0]))
+                   and float(x[1]) == float(y[1]) and int(x[2]) == int(y[2])
+                   for x, y in zip(a, b))
     if kind == "ppr":          # float add: rounding-level, like any M change
         return all(np.allclose(np.asarray(x), np.asarray(y), atol=1e-6)
                    for x, y in zip(a, b))
@@ -145,8 +181,124 @@ def sweep(kinds, lanes, *, scale: int, queries: int,
     return out
 
 
+# ---------------------------------------------------------------------------
+# The graph batch axis: one query each over G tenant graphs
+# ---------------------------------------------------------------------------
+
+
+def _tenant_graphs(n: int, *, scale: int, edge_factor: int, seed: int,
+                   weighted: bool):
+    """n HETEROGENEOUS tenant graphs (alternating scales, distinct
+    seeds — different vertex counts and topologies)."""
+    from repro.graphs.generators import kronecker, random_weights
+    out = []
+    for i in range(n):
+        g = kronecker(scale - (i % 2), edge_factor, seed=seed + 17 * i)
+        out.append(random_weights(g, seed=seed + i) if weighted else g)
+    return out
+
+
+def _graph_query(kind: str, g, rng):
+    deg = np.asarray(g.degrees)
+    hub = int(np.argmax(deg))
+    if kind == "bfs":
+        return BfsQuery(hub)
+    if kind == "sssp":
+        return SsspQuery(hub)
+    if kind == "ppr":
+        return PprQuery(hub, iters=PPR_ITERS)
+    if kind == "stconn":
+        return StConnQuery(hub, int(rng.integers(0, g.num_vertices)))
+    if kind == "coloring":
+        return ColoringQuery()
+    if kind == "mst":
+        return MstQuery()
+    raise ValueError(f"unknown kind {kind!r}; --axis graphs accepts "
+                     f"{GRAPH_KINDS}")
+
+
+def _pass_graphs(svc, queries_by_gid: dict, width: int):
+    """One full pass of one-query-per-graph through ``svc`` in
+    graph-batches of ``width`` (== the service's max_graphs, so each
+    drain is exactly one graph wave).  Returns (wave_times, lat,
+    results)."""
+    gids = list(queries_by_gid)
+    wave_times, lat, results = [], [], []
+    for lo in range(0, len(gids), width):
+        chunk = gids[lo:lo + width]
+        tickets = [svc.submit(gid, queries_by_gid[gid]) for gid in chunk]
+        t0 = time.perf_counter()
+        svc.drain()
+        rows = [svc.result(t) for t in tickets]
+        jax.block_until_ready([x for r in rows
+                               for x in (r if isinstance(r, tuple) else (r,))
+                               if not isinstance(x, bool)])
+        dt = time.perf_counter() - t0
+        wave_times.append(dt)
+        lat += [dt] * len(chunk)
+        results += rows
+    return wave_times, lat, results
+
+
+def measure_kind_graphs(kind: str, graphs, counts, backend: str | None,
+                        repeats: int = 5) -> dict:
+    """Graph-axis instance of :func:`_interleaved_best`.  Returns
+    {width: (stats dict, results)}."""
+    rng = np.random.default_rng(0)
+    queries = {i: _graph_query(kind, g, rng) for i, g in enumerate(graphs)}
+    svcs = {}
+    for width in counts:
+        svc = GraphService(max_graphs=width, cache=False,
+                           spec=_spec(backend))
+        for i, g in enumerate(graphs):
+            svc.register_graph(i, g)
+        svcs[width] = svc
+        _pass_graphs(svc, queries, width)   # compile (+ calibrate)
+    return _interleaved_best(
+        counts, lambda w: _pass_graphs(svcs[w], queries, w), len(graphs),
+        repeats)
+
+
+def sweep_graphs(kinds, counts, *, scale: int, backend: str | None = None,
+                 edge_factor: int = 8, seed: int = 0, repeats: int = 5):
+    """Returns [{kind, graphs, qps, p50_ms, p99_ms, us_per_query,
+    speedup_vs_seq, correct}, ...] — graphs=1 is the sequential
+    per-graph loop.  The tenant set has max(counts) heterogeneous
+    graphs; every width serves the SAME one-query-per-graph workload."""
+    n = max(counts)
+    out = []
+    for kind in kinds:
+        graphs = _tenant_graphs(n, scale=scale, edge_factor=edge_factor,
+                                seed=seed, weighted=(kind in ("sssp",
+                                                              "mst")))
+        by_width = measure_kind_graphs(kind, graphs, counts, backend,
+                                       repeats=repeats)
+        base = by_width[counts[0]]
+        for width in counts:
+            st, res = by_width[width]
+            st["kind"], st["graphs"] = kind, width
+            st["speedup_vs_seq"] = base[0]["us_per_query"] \
+                / st["us_per_query"]
+            st["correct"] = _same(kind, base[1], res)
+            out.append(st)
+    return out
+
+
 def main(kinds=("bfs", "ppr"), lanes=(1, 2, 4, 8), scale: int = 8,
-         queries: int = 32, backend: str | None = None):
+         queries: int = 32, backend: str | None = None,
+         axis: str = "lanes", graphs=(1, 2, 4, 8)):
+    if axis == "graphs":
+        for st in sweep_graphs(kinds, graphs, scale=scale,
+                               backend=backend):
+            assert st["correct"], (st["kind"], st["graphs"],
+                                   "graph-batched results diverged from "
+                                   "the sequential loop")
+            emit(f"serve/{st['kind']}/G={st['graphs']}/qps",
+                 st["us_per_query"] / 1e6,
+                 f"qps={st['qps']:.0f} p50={st['p50_ms']:.1f}ms "
+                 f"p99={st['p99_ms']:.1f}ms "
+                 f"speedup_vs_seq={st['speedup_vs_seq']:.2f}")
+        return
     for st in sweep(kinds, lanes, scale=scale, queries=queries,
                     backend=backend):
         assert st["correct"], (st["kind"], st["lanes"],
@@ -165,11 +317,20 @@ if __name__ == "__main__":
                     choices=BACKENDS + ("auto",),
                     help="commit backend (default: the service's "
                          "calibrated auto spec)")
-    ap.add_argument("--kinds", default="bfs,ppr")
+    ap.add_argument("--axis", default="lanes", choices=("lanes", "graphs"),
+                    help="batch axis to sweep: query lanes over one "
+                         "graph, or a graph batch over tenant graphs")
+    ap.add_argument("--kinds", default=None,
+                    help="default: bfs,ppr (lanes) / bfs,coloring (graphs)")
     ap.add_argument("--lanes", default="1,2,4,8")
+    ap.add_argument("--graphs", default="1,2,4,8")
     ap.add_argument("--scale", type=int, default=8)
     ap.add_argument("--queries", type=int, default=32)
     args = ap.parse_args()
-    main(kinds=tuple(args.kinds.split(",")),
+    kinds = args.kinds or ("bfs,coloring" if args.axis == "graphs"
+                           else "bfs,ppr")
+    main(kinds=tuple(kinds.split(",")),
          lanes=tuple(int(x) for x in args.lanes.split(",")),
-         scale=args.scale, queries=args.queries, backend=args.backend)
+         graphs=tuple(int(x) for x in args.graphs.split(",")),
+         scale=args.scale, queries=args.queries, backend=args.backend,
+         axis=args.axis)

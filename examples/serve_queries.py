@@ -1,10 +1,13 @@
-"""Serving graph queries — GraphService quickstart (ISSUE 4).
+"""Serving graph queries — GraphService quickstart (ISSUE 4 + 5).
 
-Many independent user queries (BFS sources, SSSP roots, personalized
-PageRank seeds, s-t connectivity pairs) fuse into lanes of ONE AAM wave:
-composite commit keys ``lane * V + v`` let a single conflict-resolution
-pass serve every query at once, and the service pads lane counts up a
-power-of-two ladder so the jit caches stay warm.
+Many independent user queries fuse into ONE AAM wave along whichever
+batch axis fits: same-graph queries (BFS sources, SSSP roots,
+personalized PageRank seeds, s-t pairs) as lanes on composite commit
+keys ``lane * V + v``; same-kind queries across tenant graphs —
+including the whole-graph kinds, coloring and Boruvka MST, which have
+no lane form — as a graph batch on the tenants' disjoint-union key
+space.  The service picks the axis at drain time and pads each axis up
+its own power-of-two ladder so the jit caches stay warm.
 
   PYTHONPATH=src python examples/serve_queries.py
 """
@@ -14,8 +17,8 @@ import numpy as np
 
 from repro.graphs.generators import kronecker, random_weights
 from repro.serve.graph_service import GraphService
-from repro.serve.queries import (BfsQuery, PprQuery, SsspQuery,
-                                 StConnQuery)
+from repro.serve.queries import (BfsQuery, ColoringQuery, MstQuery,
+                                 PprQuery, SsspQuery, StConnQuery)
 
 # --- construction: one service, two tenant graphs --------------------------
 g = kronecker(scale=9, edge_factor=8, seed=1)
@@ -62,3 +65,27 @@ assert np.array_equal(np.asarray(svc.result(t)), np.asarray(dist))
 print(f"\nrepeat query served from cache "
       f"(cache_hits={svc.stats.cache_hits}, no new wave: "
       f"waves={svc.stats.waves})")
+
+# --- mixed tenants: the GRAPH batch axis -----------------------------------
+# Six more tenant graphs, one query each: single-query tenants fuse
+# ACROSS graphs (one wave over the disjoint union) instead of one wave
+# per tenant — and whole-graph queries (coloring, MST) become servable,
+# since independent graphs trivially share a wave.
+for i in range(6):
+    svc.register_graph(f"tenant{i}", kronecker(scale=8 - (i % 2),
+                                               edge_factor=6, seed=10 + i))
+gw0 = svc.stats.graph_waves
+tickets = [svc.submit(f"tenant{i}", BfsQuery(0)) for i in range(6)]
+tickets += [svc.submit(f"tenant{i}", ColoringQuery()) for i in range(6)]
+tickets.append(svc.submit("tenant0", MstQuery()))
+t0 = time.perf_counter()
+svc.drain()
+dt = time.perf_counter() - t0
+print(f"\nmixed tenants: drained {len(tickets)} single-query tenants in "
+      f"{dt * 1e3:.1f} ms over {svc.stats.graph_waves - gw0} graph-batch "
+      f"waves ({svc.stats.graphs_batched} graphs incl. "
+      f"{svc.stats.graphs_padded} ladder padding)")
+colors = svc.result(tickets[6])
+print(f"tenant0 coloring: {int(np.asarray(colors).max()) + 1} colors")
+comp, weight, n_edges = svc.result(tickets[-1])
+print(f"tenant0 MST: {int(n_edges)} edges, weight {float(weight):.1f}")

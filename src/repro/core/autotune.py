@@ -210,10 +210,17 @@ class AutoTuner:
         except OSError:
             pass                             # read-only cwd = no cache
 
-    def _knob_key(self, *, sort, stats, tile_m, block_v, interpret) -> str:
+    def _knob_key(self, *, sort, stats, tile_m, block_v, interpret,
+                  op="min", dtype=jnp.int32, width=1) -> str:
+        # per-op calibration (ISSUE 5): the commit op and payload
+        # dtype/width key the fit — `add` runs a different reduction
+        # (MXU-path accumulate) and vector payloads a different memory
+        # shape than the `min` scalar workload, so they get their own
+        # affine fits instead of inheriting min's backend pick
         return (f"{jax.default_backend()}|sort={sort}|stats={stats}"
                 f"|tile_m={tile_m}|block_v={block_v}|interpret={interpret}"
-                f"|ns={list(self.ns)}|v={self.v_cal}")
+                f"|ns={list(self.ns)}|v={self.v_cal}"
+                f"|op={op}|dtype={np.dtype(dtype).name}|w={width}")
 
     # -- measurement ------------------------------------------------------
 
@@ -231,29 +238,64 @@ class AutoTuner:
         # would mis-seed the whole policy
         return min(ts)
 
-    def _workload(self, n: int, v: int | None = None):
-        """Synthetic min-commit batch: n messages into a [v] state
-        (default ``v_cal``).  ``v`` lets the race reproduce the caller's
-        contention — n/v is the duplicate-target factor, and it decides
-        whether the sorted tier's dedup-before-scatter pays for itself."""
+    def _workload(self, n: int, v: int | None = None, *, op: str = "min",
+                  dtype=jnp.int32, width: int = 1, axis_width: int = 1):
+        """Synthetic commit batch: n ``op``-messages into a [v] (or
+        [v, width]) state (default ``v_cal``).  ``v`` lets the race
+        reproduce the caller's contention — n/v is the duplicate-target
+        factor, and it decides whether the sorted tier's
+        dedup-before-scatter pays for itself.  ``axis_width`` > 1
+        reproduces a fused batch's composite-key structure: each
+        message targets its own item's contiguous key range, the exact
+        input distribution the sorted tier's argsort sees on a
+        lane/graph-fused wave."""
         v = min(v or self.v_cal, 1 << 20)
+        dtype = jnp.dtype(dtype)
         rng = np.random.default_rng(0)
-        state = jnp.full((v,), 2 ** 30, jnp.int32)
-        tgt = jnp.asarray(rng.integers(0, v, n), jnp.int32)
-        val = jnp.asarray(rng.integers(0, 100, n), jnp.int32)
+        shape = (v,) if width == 1 else (v, width)
+        if op == "min":
+            fill = jnp.iinfo(dtype).max if jnp.issubdtype(dtype, jnp.integer) \
+                else jnp.inf
+        elif op == "max":
+            fill = jnp.iinfo(dtype).min if jnp.issubdtype(dtype, jnp.integer) \
+                else -jnp.inf
+        elif op == "first":
+            fill = -1
+        else:                                # add / or accumulate from 0
+            fill = 0
+        state = jnp.full(shape, fill, dtype)
+        if axis_width > 1:
+            stride = max(v // axis_width, 1)
+            item = rng.integers(0, axis_width, n)
+            tgt = jnp.asarray(item * stride
+                              + rng.integers(0, stride, n), jnp.int32)
+        else:
+            tgt = jnp.asarray(rng.integers(0, v, n), jnp.int32)
+        vshape = (n,) if width == 1 else (n, width)
+        if op == "or":
+            val = jnp.asarray(rng.integers(0, 2, vshape), dtype)
+        elif jnp.issubdtype(dtype, jnp.integer):
+            val = jnp.asarray(rng.integers(0, 100, vshape), dtype)
+        else:
+            val = jnp.asarray(rng.random(vshape), dtype)
         return state, make_messages(tgt, val)
 
     def calibrate(self, *, sort: bool, stats: bool, tile_m: int,
                   block_v: int, interpret: bool | None,
-                  with_pallas: bool) -> Calibration:
-        """Timed micro-commits -> per-tier affine fits (cached)."""
-        key = ("cal", sort, stats, tile_m, block_v, interpret, with_pallas)
+                  with_pallas: bool, op: str = "min", dtype=jnp.int32,
+                  width: int = 1) -> Calibration:
+        """Timed micro-commits -> per-tier affine fits (cached per
+        knob set AND per (op, payload dtype, payload width))."""
+        dtype = jnp.dtype(dtype)
+        key = ("cal", sort, stats, tile_m, block_v, interpret, with_pallas,
+               op, dtype.name, width)
         hit = self._cache.get(key)
         if hit is not None:
             return hit
         dkey = "cal|" + self._knob_key(sort=sort, stats=stats,
                                        tile_m=tile_m, block_v=block_v,
-                                       interpret=interpret) \
+                                       interpret=interpret, op=op,
+                                       dtype=dtype, width=width) \
             + f"|pallas={with_pallas}"
         disk = self._disk_entries().get(dkey)
         if disk is not None:
@@ -266,11 +308,12 @@ class AutoTuner:
                 return cal                   # no timed micro-commits
             except (KeyError, TypeError, ValueError):
                 pass
+        wl = dict(op=op, dtype=dtype, width=width)
         # fine tier: ONE message per activity => T_fine(N) = N * t_unit
-        state, msgs1 = self._workload(1)
+        state, msgs1 = self._workload(1, **wl)
         spec_f = CommitSpec(backend="atomic", stats=stats)
         t_unit = self._time(
-            jax.jit(lambda s, m: commit(s, m, "min", spec_f).state),
+            jax.jit(lambda s, m: commit(s, m, op, spec_f).state),
             state, msgs1)
         fine = perf_model.LinearFit(intercept=0.0, slope=t_unit, r2=1.0)
         tiers = []
@@ -280,8 +323,9 @@ class AutoTuner:
                               tile_m=tile_m, block_v=block_v,
                               interpret=interpret)
             fn = jax.jit(lambda s, m, spec=spec:
-                         commit(s, m, "min", spec).state)
-            times = [self._time(fn, *self._workload(n)) for n in self.ns]
+                         commit(s, m, op, spec).state)
+            times = [self._time(fn, *self._workload(n, **wl))
+                     for n in self.ns]
             tiers.append((b, _sanitize(perf_model.fit(self.ns, times))))
         cal = Calibration(fine=fine, tiers=tuple(tiers))
         self._cache[key] = cal
@@ -292,7 +336,9 @@ class AutoTuner:
 
     def race(self, finalists: dict, n: int, *, sort: bool, stats: bool,
              tile_m: int, block_v: int,
-             interpret: bool | None, v: int | None = None) -> str:
+             interpret: bool | None, v: int | None = None,
+             op: str = "min", dtype=jnp.int32, width: int = 1,
+             axis_width: int = 1) -> str:
         """Head-to-head at (near-)workload batch size.
 
         ``finalists`` maps backend -> the transaction size it would
@@ -302,23 +348,30 @@ class AutoTuner:
         that differ in shape, but tiers within ~20% of each other at the
         workload's N are inside extrapolation error — measure them
         directly (cached per power-of-two N bucket) and let the clock
-        decide."""
+        decide.  ``axis_width`` (lanes or graphs of a fused batch) keys
+        the race and shapes its workload: the sorted tier's argsort cost
+        on a W-item fused batch is what gets measured, so the
+        sort-vs-scatter verdict is decided per axis width, not
+        globally."""
+        dtype = jnp.dtype(dtype)
         n = min(1 << (max(n, 2) - 1).bit_length(), 32768)
         v = min(v or self.v_cal, 1 << 20)   # same clamp as _workload, so
         #                                     the cache key matches what
         #                                     actually gets timed
+        axis_width = min(axis_width, n)
         key = ("race", tuple(sorted(finalists.items(),
                                     key=lambda kv: kv[0])), n, v,
-               sort, stats, tile_m, block_v, interpret)
+               sort, stats, tile_m, block_v, interpret,
+               op, dtype.name, width, axis_width)
         hit = self._cache.get(key)
         if hit is not None:
             return hit
         dkey = "race|" + "|".join(
             f"{b}:{m}" for b, m in sorted(finalists.items())) \
-            + f"|n={n}|v={v}|" + self._knob_key(sort=sort, stats=stats,
-                                                tile_m=tile_m,
-                                                block_v=block_v,
-                                                interpret=interpret)
+            + f"|n={n}|v={v}|aw={axis_width}|" \
+            + self._knob_key(sort=sort, stats=stats, tile_m=tile_m,
+                             block_v=block_v, interpret=interpret,
+                             op=op, dtype=dtype, width=width)
         disk = self._disk_entries().get(dkey)
         if disk in finalists:                # winner must still be a runner
             self._cache[key] = disk
@@ -329,8 +382,10 @@ class AutoTuner:
                               tile_m=tile_m, block_v=block_v,
                               interpret=interpret)
             fn = jax.jit(lambda s, msgs, spec=spec:
-                         commit(s, msgs, "min", spec).state)
-            times[b] = self._time(fn, *self._workload(n, v))
+                         commit(s, msgs, op, spec).state)
+            times[b] = self._time(fn, *self._workload(
+                n, v, op=op, dtype=dtype, width=width,
+                axis_width=axis_width))
         winner = min(times, key=times.get)
         self._cache[key] = winner
         self._disk_put(dkey, winner)
@@ -339,20 +394,25 @@ class AutoTuner:
     # -- policy -----------------------------------------------------------
 
     def policy(self, spec: CommitSpec, *, n: int,
-               pallas_ok: bool, v: int | None = None) -> TunerPolicy:
+               pallas_ok: bool, v: int | None = None, op: str = "min",
+               dtype=jnp.int32, width: int = 1,
+               axis_width: int = 1) -> TunerPolicy:
         """Backend + M* + ladder seed for an n-message workload against a
         [v] state (``v`` shapes the race's duplicate-target factor; None
-        = the calibration default)."""
+        = the calibration default).  ``op``/``dtype``/``width`` key the
+        per-op calibration; ``axis_width`` is the fused batch-axis width
+        (lanes or graphs) the race reproduces."""
         n = max(int(n), 1)
         base = dict(sort=spec.sort, stats=spec.stats, tile_m=spec.tile_m,
                     block_v=spec.block_v, interpret=spec.interpret)
+        wl = dict(op=op, dtype=dtype, width=width)
         if not _autotune_enabled():
             # deterministic fallback: the paper's default tier (coarse
             # transactions), M* at the Fig-4 sweet spot bounded by n
             m_star = min(1024, 1 << max(n - 1, 1).bit_length())
             backend = "coarse"
         else:
-            cal = self.calibrate(with_pallas=pallas_ok, **base)
+            cal = self.calibrate(with_pallas=pallas_ok, **base, **wl)
             cap = max(min(4096, 1 << (n - 1).bit_length()), 2)
 
             def m_for(b):
@@ -381,7 +441,8 @@ class AutoTuner:
                 # race the two finalists at the workload's size, each at
                 # the M it would actually run with
                 backend = self.race({b: m_for(b) for b in ranked[:2]}, n,
-                                    v=v, **base)
+                                    v=v, axis_width=axis_width,
+                                    **base, **wl)
             m_star = m_for(backend) or n
         if spec.m is not None:
             # user pinned the transaction size: tune the backend only
@@ -420,24 +481,37 @@ def _pallas_compiled(spec: CommitSpec) -> bool:
 
 def policy_for(spec: CommitSpec, state, msgs: Messages | None = None, *,
                n: int | None = None, op: str = "min",
-               tuner: AutoTuner | None = None) -> TunerPolicy:
+               tuner: AutoTuner | None = None,
+               axis_width: int = 1) -> TunerPolicy:
     """Resolve an ``"auto"`` spec against a concrete workload shape.
 
     ``state``/``msgs`` may be tracers — only shapes/dtypes are read; the
     timed calibration runs on synthetic concrete arrays at trace time.
-    """
+    ``op`` and the payload dtype/width key the per-op calibration;
+    ``axis_width`` is the batch-axis width (query lanes / graphs) of a
+    fused caller, recorded in the race key so the sort-vs-scatter
+    verdict is per axis width."""
     tuner = tuner or DEFAULT_TUNER
+    width = 1
+    dtype = getattr(state, "dtype", jnp.int32)
     if msgs is not None:
         pallas_ok = _pallas_supported(state, msgs, op)
         n = msgs.capacity if n is None else n
+        payload = msgs.payload
+        if isinstance(payload, (jax.Array, jax.ShapeDtypeStruct)) \
+                or hasattr(payload, "dtype"):
+            dtype = payload.dtype
+            if getattr(payload, "ndim", 1) > 1:
+                width = int(payload.shape[1])
     else:
         pallas_ok = (getattr(state, "ndim", 1) == 1
                      and state.dtype in (jnp.int32, jnp.float32))
         n = 1 if n is None else n
     pallas_ok = pallas_ok and _pallas_compiled(spec)
     v = getattr(state, "shape", None)
-    v = v[0] if v else None         # [V] or [L*V] composite key space
-    return tuner.policy(spec, n=n, pallas_ok=pallas_ok, v=v)
+    v = v[0] if v else None         # [V] or [W*V] composite key space
+    return tuner.policy(spec, n=n, pallas_ok=pallas_ok, v=v, op=op,
+                        dtype=dtype, width=width, axis_width=axis_width)
 
 
 def resolve_spec(spec: CommitSpec, state, msgs: Messages,
@@ -492,7 +566,7 @@ def next_level(policy: TunerPolicy, level, conflicts, messages):
 
 
 def make_commit_step(spec: CommitSpec | None, op: str, state, msgs_like=None,
-                     *, n: int | None = None):
+                     *, n: int | None = None, axis_width: int = 1):
     """Uniform per-round commit handle for the single-shard wave loops.
 
     Returns ``(step, level0)`` where ``step(state, msgs, level) ->
@@ -500,13 +574,16 @@ def make_commit_step(spec: CommitSpec | None, op: str, state, msgs_like=None,
     passthrough; for ``backend="auto"`` stage-1 calibration seeds the
     ladder and ``step`` applies stage-2 conflict feedback.  Call at trace
     time (outside the loop), carry ``level`` through the loop.
+    ``axis_width`` is the fused batch-axis width (query lanes / graphs)
+    of the caller's wave — see :meth:`AutoTuner.race`.
     """
     level0 = jnp.zeros((), jnp.int32)
     if spec is None or spec.backend != AUTO:
         def step(state, msgs, level, _spec=spec):
             return commit(state, msgs, op, _spec), level
         return step, level0
-    policy = policy_for(spec, state, msgs_like, n=n, op=op)
+    policy = policy_for(spec, state, msgs_like, n=n, op=op,
+                        axis_width=axis_width)
 
     def step(state, msgs, level):
         res = ladder_commit(state, msgs, op, policy, level)

@@ -40,38 +40,154 @@ DENSE_PLANNER_MAX_BUCKETS = 32
 
 
 # ---------------------------------------------------------------------------
-# Lane-composite keys (multi-tenant serving: L independent queries fused
-# into ONE wave).  A lane is one query's private copy of the vertex state;
-# fusing the lane index into the commit key lets a single conflict
-# resolution pass (sort + segment reduce, any backend) serve all lanes at
-# once — the same aggregate-small-events-into-big-atomic-steps move the
-# coalescing buffer makes for network messages.
+# Batch axes — the first-class fusion dimension (ISSUE 5)
+#
+# The paper's lever is amortization: coarsening and coalescing pack many
+# irregular updates into one atomic region so per-batch overhead is paid
+# once (§4).  One level up, a server packs many independent WORK ITEMS
+# into one wave.  A BatchAxis names what the items are and how they share
+# one flat commit-key space:
+#
+# * QueryLanes(L, V)  — L queries over ONE graph: item l's private copy
+#   of vertex v lives at flat key ``l * V + v``;
+# * GraphBatch(sizes) — ONE query each over G graphs: graph g's vertex v
+#   lives at flat key ``offset[g] + v`` (the disjoint-union key space of
+#   ``repro.graphs.csr.GraphSet``).
+#
+# Items never collide (disjoint flat ranges), so conflict resolution over
+# flat keys is exactly per-item conflict resolution: one commit() — any
+# backend — equals the looped per-item commits (bit-for-bit for
+# order-independent ops).  The axis-generic entry points are
+# fuse_keys/split_keys here, batch_messages (repro.core.messages) and
+# commit_batched (repro.core.commit); the lane-named forms are thin
+# wrappers kept for the PR-4 surface.
 # ---------------------------------------------------------------------------
 
 
-def fuse_lane_keys(major: jax.Array, minor: jax.Array,
-                   stride: int) -> jax.Array:
-    """Composite commit key ``major * stride + minor`` — THE place the
-    lane-key convention lives; both layouts go through it:
+def fuse_keys(major: jax.Array, minor: jax.Array, stride: int) -> jax.Array:
+    """Axis-generic composite commit key ``major * stride + minor`` —
+    THE place the composite-key convention lives; both layouts go
+    through it:
 
-    * lane-major (single-shard [L, V] state):
-      ``fuse_lane_keys(lane, vertex, V)`` — see
-      :func:`repro.core.messages.lane_messages`;
-    * vertex-major (distributed [block * L] owner slices, all lanes of a
-      vertex co-located on its owner shard):
-      ``fuse_lane_keys(local_vertex, lane, L)`` — see
+    * major-major (single-shard [L, V] lane state):
+      ``fuse_keys(lane, vertex, V)`` — see
+      :func:`repro.core.messages.batch_messages`;
+    * vertex-major (distributed [block * W] owner slices, all batch
+      items of a vertex co-located on its owner shard):
+      ``fuse_keys(local_vertex, item, W)`` — see
       :func:`repro.core.engine.route_wave`.
 
-    Lanes never collide: conflict resolution over composite keys is
-    exactly per-lane conflict resolution, so one ``commit()`` call
-    resolves all lanes' conflicts bit-identically to L separate calls
+    Items never collide: conflict resolution over composite keys is
+    exactly per-item conflict resolution, so one ``commit()`` call
+    resolves every item's conflicts bit-identically to separate calls
     (for order-independent ops)."""
     return major.astype(jnp.int32) * stride + minor.astype(jnp.int32)
 
 
-def split_lane_keys(key: jax.Array, stride: int):
-    """Inverse of :func:`fuse_lane_keys`: ``(major, minor)``."""
+def split_keys(key: jax.Array, stride: int):
+    """Inverse of :func:`fuse_keys`: ``(major, minor)``."""
     return key // stride, key % stride
+
+
+def fuse_lane_keys(major: jax.Array, minor: jax.Array,
+                   stride: int) -> jax.Array:
+    """PR-4 name for :func:`fuse_keys` (the query-lane axis)."""
+    return fuse_keys(major, minor, stride)
+
+
+def split_lane_keys(key: jax.Array, stride: int):
+    """PR-4 name for :func:`split_keys`."""
+    return split_keys(key, stride)
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryLanes:
+    """Batch axis: L independent queries over one V-vertex graph.
+
+    Flat key = ``lane * num_vertices + v`` (lane-major — each lane owns
+    a contiguous [V] block, the layout the single-shard fused loops
+    commit against).  Frozen + hashable: rides in jit static args and
+    :class:`repro.core.engine.EngineConfig`."""
+    lanes: int
+    num_vertices: int
+
+    @property
+    def flat_size(self) -> int:
+        return self.lanes * self.num_vertices
+
+    @property
+    def wave_width(self) -> int:
+        """Items co-located per vertex in the distributed vertex-major
+        layout ([block * lanes] owner slices)."""
+        return self.lanes
+
+    @property
+    def race_width(self) -> int:
+        """Batch width the autotuner's race key records (the argsort of
+        a fused wave spans all L lanes' messages)."""
+        return self.lanes
+
+    def flatten(self, major, minor) -> jax.Array:
+        return fuse_keys(jnp.asarray(major), jnp.asarray(minor),
+                         self.num_vertices)
+
+    def unflatten(self, key):
+        return split_keys(key, self.num_vertices)
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphBatch:
+    """Batch axis: one query each over G independent graphs.
+
+    ``sizes[g]`` is graph g's vertex count; flat key = ``offset[g] + v``
+    with ``offset`` the exclusive prefix sum — the disjoint-union key
+    space of :class:`repro.graphs.csr.GraphSet` (heterogeneous sizes,
+    no padding).  Because the target ids of a stacked edge array are
+    ALREADY flat, a graph-batched wave needs no extra item field:
+    ``wave_width == 1`` and the engine routes/commits it exactly like a
+    single graph (owner slices and coalescing buckets keyed by flat
+    id)."""
+    sizes: tuple
+
+    def __post_init__(self):
+        if not self.sizes or any(int(s) < 1 for s in self.sizes):
+            raise ValueError(f"GraphBatch needs positive per-graph sizes, "
+                             f"got {self.sizes}")
+
+    @property
+    def offsets(self) -> tuple:
+        out, acc = [], 0
+        for s in self.sizes:
+            out.append(acc)
+            acc += int(s)
+        return tuple(out)
+
+    @property
+    def flat_size(self) -> int:
+        return sum(int(s) for s in self.sizes)
+
+    @property
+    def wave_width(self) -> int:
+        return 1        # keys are already globally flat
+
+    @property
+    def race_width(self) -> int:
+        """A graph-batched wave still fuses G graphs' messages into one
+        commit — the race must not inherit the width-1 verdict even
+        though no extra item field rides the exchange."""
+        return len(self.sizes)
+
+    def flatten(self, major, minor) -> jax.Array:
+        offs = jnp.asarray(self.offsets, jnp.int32)
+        return offs[jnp.asarray(major)] + jnp.asarray(minor, jnp.int32)
+
+    def unflatten(self, key):
+        bounds = jnp.asarray(self.offsets[1:] + (self.flat_size,),
+                             jnp.int32)
+        key = jnp.asarray(key, jnp.int32)
+        major = jnp.searchsorted(bounds, key, side="right").astype(jnp.int32)
+        offs = jnp.asarray(self.offsets, jnp.int32)
+        return major, key - offs[jnp.clip(major, 0, len(self.sizes) - 1)]
 
 
 def plan_buckets(owner: jax.Array, valid: jax.Array, num_buckets: int,

@@ -140,20 +140,36 @@ def commit(state: jax.Array, msgs: Messages, op: str,
     return _pallas_commit(state, msgs, op, spec)
 
 
+def commit_batched(state: jax.Array, msgs: Messages, op: str,
+                   spec: CommitSpec | None = None, *,
+                   axis) -> CommitResult:
+    """Commit an axis-fused batch against the axis's flat key space.
+
+    ``axis`` is a batch axis (:class:`repro.core.coalescing.QueryLanes`
+    or :class:`~repro.core.coalescing.GraphBatch`); ``state`` is the
+    flat [axis.flat_size] array and ``msgs.target`` carries flat keys
+    (build them with :func:`repro.core.messages.batch_messages`), so
+    ONE ``commit()`` call — any backend, including ``"auto"`` —
+    resolves conflicts for every batch item at once.  Items occupy
+    disjoint key ranges, so the result equals the looped per-item
+    commits (bit-for-bit for the order-independent ops; float ``add``
+    to rounding, exactly like any transaction-size change)."""
+    if state.shape[0] != axis.flat_size:
+        raise ValueError(f"state leading dim {state.shape[0]} != "
+                         f"axis flat size {axis.flat_size}")
+    return commit(state, msgs, op, spec)
+
+
 def commit_lanes(state: jax.Array, msgs: Messages, op: str,
                  spec: CommitSpec | None = None) -> CommitResult:
-    """Commit a lane-fused batch against [L, V] lane-major state.
-
-    ``msgs.target`` carries composite keys ``lane * V + v`` (build them
-    with :func:`repro.core.messages.lane_messages`); the state is
-    flattened to [L * V] so ONE ``commit()`` call — any backend,
-    including ``"auto"`` — resolves conflicts for all L lanes at once.
-    Lanes occupy disjoint key ranges, so the result equals L independent
-    per-lane commits (bit-for-bit for the order-independent ops; float
-    ``add`` to rounding, exactly like any transaction-size change).
+    """Thin wrapper over :func:`commit_batched` for the query-lane axis:
+    commit a lane-fused batch against [L, V] lane-major state (composite
+    keys ``lane * V + v`` from :func:`repro.core.messages.lane_messages`).
     """
+    from repro.core.coalescing import QueryLanes
     lanes, v = state.shape
-    res = commit(state.reshape(lanes * v), msgs, op, spec)
+    res = commit_batched(state.reshape(lanes * v), msgs, op, spec,
+                         axis=QueryLanes(lanes, v))
     return dataclasses.replace(res, state=res.state.reshape(lanes, v))
 
 
@@ -337,6 +353,8 @@ def _resolved_commit(state, msgs: Messages, op: str, sort: bool,
         n_runs = jnp.sum((first & s_valid).astype(jnp.int32))
         conflicts = n_valid - n_runs
         changed = new[jnp.clip(s_idx, 0, v - 1)] != old[jnp.clip(s_idx, 0, v - 1)]
+        if changed.ndim > 1:    # vector payload: any component changed
+            changed = jnp.any(changed, axis=tuple(range(1, changed.ndim)))
         applied = jnp.sum((last & s_valid & changed).astype(jnp.int32))
         success = msgs.valid
     return CommitResult(new, success, conflicts, applied)

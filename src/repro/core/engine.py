@@ -44,7 +44,7 @@ from repro import compat
 
 from repro.core import autotune as AT
 from repro.core import commit as C
-from repro.core.coalescing import (BucketPlan, fuse_lane_keys,
+from repro.core.coalescing import (BucketPlan, fuse_keys,
                                    gather_from_buckets, plan_buckets_sorted,
                                    scatter_to_buckets)
 from repro.core.messages import make_messages
@@ -60,6 +60,8 @@ class EngineConfig:
     op: str = "min"
     spec: C.CommitSpec | None = None   # commit backend; None = coarse(m)
     tuner: AT.TunerPolicy | None = None  # set by run_distributed for "auto"
+    batch: Any = None       # default BatchAxis for waves (QueryLanes /
+    #                         GraphBatch; None = unbatched targets)
 
     @property
     def commit_spec(self) -> C.CommitSpec:
@@ -81,20 +83,28 @@ def _tree_all_to_all(x, axis: str):
 
 
 def route_wave(ecfg: EngineConfig, state_l, target, payload, pending,
-               level=None, lane=None, num_lanes: int = 1):
+               level=None, major=None, batch=None):
     """One coalescing sub-round under shard_map (DEPRECATED for direct use —
     see module docstring; overflow beyond C is NOT requeued here).
 
     state_l: pytree of [block] local owner slices; payload: matching pytree
     of [n] fields; target: [n] GLOBAL vertex ids; pending: [n] bool;
     level: traced ladder index for an ``ecfg.tuner`` adaptive commit.
-    lane/num_lanes: the serving lane axis — ``lane`` [n] int32 ids ride the
-    exchange as one more payload field, state leaves are vertex-major
-    [block * num_lanes] slices, and owners commit on composite local keys
-    ``local_v * num_lanes + lane`` so ONE commit resolves every lane's
-    conflicts (see ``repro.core.coalescing.fuse_lane_keys``).
+    major/batch: the batch axis — ``batch`` is a
+    :class:`repro.core.coalescing.QueryLanes`/``GraphBatch`` and
+    ``major`` [n] int32 per-message item ids.  When
+    ``batch.wave_width > 1`` (query lanes) the ids ride the exchange as
+    one more payload field, state leaves are vertex-major
+    [block * width] slices, and owners commit on composite local keys
+    ``local_v * width + major`` so ONE commit resolves every item's
+    conflicts (see ``repro.core.coalescing.fuse_keys``).  A
+    ``GraphBatch`` has ``wave_width == 1`` — its targets are already
+    flat union-graph ids, so owner slices and coalescing buckets are
+    keyed by flat id with no extra field.
     Returns (state_l, delivered_mask, success pytree, conflicts)."""
     P, Cp = ecfg.num_shards, ecfg.capacity
+    batch = batch if batch is not None else ecfg.batch
+    width = batch.wave_width if batch is not None else 1
     owner = target // ecfg.block
     plan, _ = plan_buckets_sorted(owner, pending, P, Cp)
     kept = plan.kept
@@ -108,12 +118,14 @@ def route_wave(ecfg: EngineConfig, state_l, target, payload, pending,
     shard = jax.lax.axis_index(ecfg.axis)
     local_idx = jnp.clip(rt.reshape(-1) - shard * ecfg.block, 0,
                          ecfg.block - 1)
-    if lane is not None:
-        buf_l = scatter_to_buckets(plan, lane, P, Cp, fill=0)
+    if width > 1:
+        if major is None:
+            raise ValueError("batch axis with wave_width > 1 needs "
+                             "per-message `major` item ids")
+        buf_l = scatter_to_buckets(plan, major, P, Cp, fill=0)
         rl = jax.lax.all_to_all(buf_l, ecfg.axis, 0, 0, tiled=True)
-        local_idx = fuse_lane_keys(
-            local_idx, jnp.clip(rl.reshape(-1), 0, num_lanes - 1),
-            num_lanes)
+        local_idx = fuse_keys(
+            local_idx, jnp.clip(rl.reshape(-1), 0, width - 1), width)
     valid = (rt.reshape(-1) >= 0)
     st_leaves, tdef = jax.tree_util.tree_flatten(state_l)
     pl_leaves = tdef.flatten_up_to(rp)
@@ -141,7 +153,7 @@ def route_wave(ecfg: EngineConfig, state_l, target, payload, pending,
 
 def wave_until_delivered(ecfg: EngineConfig, state_l, target, payload,
                          valid, max_subrounds: int = 64, level=None,
-                         lane=None, num_lanes: int = 1):
+                         major=None, batch=None):
     """Deliver ALL messages (sub-rounds until nothing pending).
 
     Returns (state_l, success pytree, conflicts, subrounds, delivered_all).
@@ -150,8 +162,8 @@ def wave_until_delivered(ecfg: EngineConfig, state_l, target, payload,
     dropping the tail (the capacity-C requeue loop normally terminates for
     any C >= 1: each sub-round delivers up to C messages per owner).
     ``level`` is the (constant-per-wave) adaptive-ladder index when
-    ``ecfg.tuner`` is set; ``lane``/``num_lanes`` thread the serving lane
-    axis through every sub-round (see :func:`route_wave`)."""
+    ``ecfg.tuner`` is set; ``major``/``batch`` thread the batch axis
+    through every sub-round (see :func:`route_wave`)."""
     n = target.shape[0]
     st_leaves, tdef = jax.tree_util.tree_flatten(state_l)
     succ0 = tdef.unflatten([jnp.zeros((n,), bool) for _ in st_leaves])
@@ -164,7 +176,7 @@ def wave_until_delivered(ecfg: EngineConfig, state_l, target, payload,
     def body(c):
         state_l, pending, success, conflicts, it = c
         state_l, kept, succ, cf = route_wave(ecfg, state_l, target, payload,
-                                             pending, level, lane, num_lanes)
+                                             pending, level, major, batch)
         success = jax.tree.map(lambda sn, so: jnp.where(kept, sn, so),
                                succ, success)
         return (state_l, pending & ~kept, success, conflicts + cf, it + 1)
@@ -364,17 +376,20 @@ class WaveRuntime:
         return self.psum(jnp.sum(mask.astype(jnp.int32))) > 0
 
     def wave(self, state_l, target, payload, valid, *, op: str,
-             lane=None, num_lanes: int = 1):
+             major=None, batch=None):
         """Deliver + commit messages ``(target, payload)`` with ``op``;
         returns (state_l, success pytree).  state_l/payload are matching
-        pytrees of [block]/[n] fields sharing one bucket plan.  With
-        ``lane``/``num_lanes`` the state leaves are vertex-major
-        [block * num_lanes] lane slices and the lane ids ride the same
-        bucket plan (multi-tenant lane-batched waves)."""
+        pytrees of [block]/[n] fields sharing one bucket plan.  With a
+        ``batch`` axis of ``wave_width`` W > 1 (query lanes) the state
+        leaves are vertex-major [block * W] item slices and the
+        ``major`` item ids ride the same bucket plan; a ``GraphBatch``
+        (W == 1, flat union-graph targets) routes like a single graph.
+        ``batch=None`` falls back to the axis the run was configured
+        with (``run_distributed(batch=...)``)."""
         ecfg = dataclasses.replace(self.ecfg, op=op)
         state_l, success, cf, sr, dall = wave_until_delivered(
             ecfg, state_l, target, payload, valid, self.max_subrounds,
-            self.level, lane, num_lanes)
+            self.level, major, batch)
         self.conflicts = self.conflicts + cf
         self.subrounds = self.subrounds + sr
         self.messages = self.messages + self.psum(
@@ -445,7 +460,7 @@ def run_distributed(alg: AlgorithmSpec, mesh, g, *,
                     m: int | None = None, axis: str = "data",
                     spec: C.CommitSpec | None = None,
                     max_subrounds: int = 64,
-                    edges=None) -> DistributedResult:
+                    edges=None, batch=None) -> DistributedResult:
     """Execute ``alg`` over ``mesh[axis]`` shards — the one distributed
     driver behind all six ``distributed_*`` algorithms.
 
@@ -463,10 +478,21 @@ def run_distributed(alg: AlgorithmSpec, mesh, g, *,
     ``partition_edges(g, mesh.shape[axis])`` result so wrappers that also
     need the lane layout (Boruvka's edge-state finalize) partition only
     once.
+
+    ``g`` may be a :class:`repro.graphs.csr.GraphSet`: the run executes
+    over its disjoint-union graph (per-graph CSR slices gathered from the
+    stacked edge arrays), which IS the graph-batch axis — flat union ids
+    key the owner slices and coalescing buckets.  ``batch`` names the
+    run's default batch axis (``QueryLanes``/``GraphBatch``); waves
+    issued without an explicit ``batch=`` use it, and its ``race_width``
+    (L lanes / G graphs) keys the tuner's axis-aware race.
     """
     from jax.sharding import PartitionSpec as Ps
-    from repro.graphs.csr import partition_edges
+    from repro.graphs.csr import GraphSet, partition_edges
 
+    if isinstance(g, GraphSet):
+        batch = batch if batch is not None else g.axis
+        g = g.union()
     P = mesh.shape[axis]
     auto_cap = capacity == "auto"
     if auto_cap:
@@ -476,7 +502,8 @@ def run_distributed(alg: AlgorithmSpec, mesh, g, *,
     (src, dst, w, val, eid), part = edges
     layout = ShardLayout(P, part.block, src.shape[1], g.num_vertices,
                          g.num_edges)
-    ecfg = EngineConfig(P, part.block, capacity, axis=axis, m=m, spec=spec)
+    ecfg = EngineConfig(P, part.block, capacity, axis=axis, m=m, spec=spec,
+                        batch=batch)
     state0, scalars0 = alg.init(g, layout)
     tuner = None
     if ecfg.commit_spec.backend == C.AUTO:
@@ -486,7 +513,8 @@ def run_distributed(alg: AlgorithmSpec, mesh, g, *,
         tuner = AT.policy_for(
             ecfg.commit_spec, jax.ShapeDtypeStruct((part.block,),
                                                    leaf.dtype),
-            n=min(P * capacity, g.num_edges or 1))
+            n=min(P * capacity, g.num_edges or 1),
+            axis_width=batch.race_width if batch is not None else 1)
         ecfg = dataclasses.replace(ecfg, spec=None, tuner=tuner)
     max_rounds = int(alg.max_rounds(g, layout))
 

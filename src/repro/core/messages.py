@@ -75,26 +75,43 @@ def make_messages(target, payload, valid=None) -> Messages:
     return Messages(target=target, payload=payload, valid=valid)
 
 
+def batch_messages(axis, major, target, payload, valid) -> Messages:
+    """Axis-generic fusion: one flat batch on keys
+    ``axis.flatten(major, target)`` (see the batch-axis taxonomy in
+    :mod:`repro.core.coalescing`).
+
+    ``major`` names each message's batch item (lane index / graph
+    index), ``target`` its per-item vertex id; both [n] (or any common
+    shape — everything is flattened), payload a matching pytree with
+    optional trailing feature dims.  Committing the result against the
+    [axis.flat_size] flat state resolves every item's conflicts in one
+    pass."""
+    major = jnp.asarray(major, jnp.int32)
+    key = axis.flatten(major, jnp.asarray(target, jnp.int32))
+    lead = key.size
+    return Messages(
+        target=key.reshape(-1),
+        payload=jax.tree.map(
+            lambda x: x.reshape((lead,) + x.shape[key.ndim:]), payload),
+        valid=jnp.asarray(valid, bool).reshape(-1),
+    )
+
+
 def lane_messages(target, payload, valid, num_vertices: int) -> Messages:
-    """Fuse an [L, n] lane batch of messages into ONE flat batch on
-    composite keys ``lane * num_vertices + target`` (the serving lane
-    axis — see :mod:`repro.core.coalescing`).
+    """Thin wrapper over :func:`batch_messages` for the query-lane axis:
+    an [L, n] lane batch fuses on composite keys
+    ``lane * num_vertices + target``.
 
     target/valid: int32/bool [L, n]; payload: [L, n] (or pytree of such).
     Committing the result against [L * num_vertices] flattened state
     resolves every lane's conflicts in one pass."""
-    from repro.core.coalescing import fuse_lane_keys
+    from repro.core.coalescing import QueryLanes
     target = jnp.asarray(target, jnp.int32)
     lanes, n = target.shape
     lane = jnp.broadcast_to(
         jnp.arange(lanes, dtype=jnp.int32)[:, None], (lanes, n))
-    key = fuse_lane_keys(lane, target, num_vertices)
-    return Messages(
-        target=key.reshape(-1),
-        payload=jax.tree.map(
-            lambda x: x.reshape((lanes * n,) + x.shape[2:]), payload),
-        valid=jnp.asarray(valid, bool).reshape(-1),
-    )
+    return batch_messages(QueryLanes(lanes, num_vertices), lane, target,
+                          payload, valid)
 
 
 def concat_messages(a: Messages, b: Messages) -> Messages:

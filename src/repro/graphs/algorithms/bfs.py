@@ -90,7 +90,7 @@ def multi_source_bfs(g: Graph, sources, *, commit: str = "coarse",
     e = g.src.shape[0]
     dst_l = jnp.broadcast_to(g.dst, (lanes, e))
     step, lvl0 = AT.make_commit_step(spec, "min", dist0.reshape(-1),
-                                     n=lanes * e)
+                                     n=lanes * e, axis_width=lanes)
 
     def cond(state):
         _, frontier, it, *_ = state
@@ -157,6 +157,7 @@ def distributed_multi_source_bfs(mesh, g: Graph, sources, *,
     distributed mirror of :func:`multi_source_bfs`.  Returns
     (dist [L, V], rounds); ``telemetry=True`` returns the
     DistributedResult instead of rounds."""
+    from repro.core.coalescing import QueryLanes
     from repro.core.engine import AlgorithmSpec, run_distributed
 
     sources = jnp.asarray(sources, jnp.int32)
@@ -181,16 +182,44 @@ def distributed_multi_source_bfs(mesh, g: Graph, sources, *,
         dist2, _ = rt.wave(dist, tgt.reshape(-1),
                            (dist[fl] + 1).reshape(-1),
                            active.reshape(-1), op="min",
-                           lane=lane.reshape(-1), num_lanes=lanes)
+                           major=lane.reshape(-1))
         changed = dist2 != dist
         return {"dist": dist2, "frontier": changed}, sc, rt.any(changed)
 
     alg = AlgorithmSpec("multi_bfs", "FF&MF", init, round_fn,
                         lambda g, layout: layout.vpad)
     res = run_distributed(alg, mesh, g, capacity=capacity, m=m, axis=axis,
-                          spec=spec, max_subrounds=max_subrounds)
+                          spec=spec, max_subrounds=max_subrounds,
+                          batch=QueryLanes(lanes, g.num_vertices))
     dist = res.state["dist"].reshape(-1, lanes).T[:, :g.num_vertices]
     return (dist, res) if telemetry else (dist, res.rounds)
+
+
+def batched_over_graphs_bfs(gs, sources, *, spec: C.CommitSpec | None = None,
+                            mesh=None, capacity: int | str = 4096,
+                            axis: str = "data", max_subrounds: int = 64):
+    """G independent BFS queries, one per tenant graph, as ONE AAM wave
+    over the :class:`repro.graphs.csr.GraphSet` union (the *graph*
+    batch axis — flat keys ``offset[g] + v``, see
+    ``repro.core.coalescing.GraphBatch``).
+
+    ``sources[g]`` is graph g's LOCAL source id.  Returns a list of
+    per-graph distance rows, each bit-identical to
+    ``bfs(gs.graphs[g], sources[g])`` on every backend including
+    ``auto``: graphs exchange no messages in the union and occupy
+    disjoint commit-key ranges, so the fused run IS the looped runs.
+    ``mesh=`` executes through ``run_distributed`` (the union's flat
+    ids key the owner slices and coalescing buckets directly)."""
+    flat = gs.flat_vertices(sources)
+    if mesh is not None:
+        # run_distributed resolves the GraphSet itself: union edges,
+        # batch=gs.axis (the tuner's axis-width key)
+        dist, _ = distributed_bfs(mesh, gs, flat, spec=spec,
+                                  capacity=capacity, axis=axis,
+                                  max_subrounds=max_subrounds)
+    else:
+        dist = bfs(gs.union(), flat, spec=spec).dist
+    return gs.split_vertex(dist)
 
 
 def bfs_reference(g: Graph, source: int):

@@ -51,8 +51,16 @@ def _dedupe_mst_pairs(g: Graph, in_mst):
     return weight, n_edges
 
 
-@partial(jax.jit, static_argnames=("spec",))
-def boruvka(g: Graph, *, spec: C.CommitSpec | None = None):
+@partial(jax.jit, static_argnames=("spec", "axis_width"))
+def boruvka_forest(g: Graph, *, spec: C.CommitSpec | None = None,
+                   axis_width: int = 1):
+    """The Boruvka contraction loop: returns (comp [V], in_mst [E] bool
+    per-direction selection, rounds) — the piece :func:`boruvka` and the
+    graph-batched entry point share.  Every step is a shift-equivariant
+    function of vertex/edge ids, so running it on a disjoint-union graph
+    equals running it per member graph (``batched_over_graphs_boruvka``
+    relies on this).  ``axis_width`` tags the tuner race with the graph
+    count of a batched caller."""
     if spec is None:
         # sort=False: scatter-min (atomic tier) == the old segment_min cost;
         # the sorted path would argsort all E edges per Boruvka round
@@ -62,9 +70,10 @@ def boruvka(g: Graph, *, spec: C.CommitSpec | None = None):
     # two commit sites with different state dtypes (f32 weights, i32 edge
     # ids) -> two independent adaptive ladders
     step_w, lvl_w0 = AT.make_commit_step(spec, "min", jnp.full((v,), INF),
-                                         n=e)
+                                         n=e, axis_width=axis_width)
     step_e, lvl_e0 = AT.make_commit_step(spec, "min",
-                                         jnp.full((v,), e, jnp.int32), n=e)
+                                         jnp.full((v,), e, jnp.int32), n=e,
+                                         axis_width=axis_width)
 
     def cond(state):
         _, _, changed, it, *_ = state
@@ -105,23 +114,57 @@ def boruvka(g: Graph, *, spec: C.CommitSpec | None = None):
     comp, in_mst, _, rounds, _, _ = jax.lax.while_loop(
         cond, body, (comp0, in0, jnp.ones((), bool), jnp.zeros((), jnp.int32),
                      lvl_w0, lvl_e0))
+    return comp, in_mst, rounds
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def boruvka(g: Graph, *, spec: C.CommitSpec | None = None):
+    comp, in_mst, rounds = boruvka_forest(g, spec=spec)
     weight, n_edges = _dedupe_mst_pairs(g, in_mst)
     return comp, weight, n_edges, rounds
 
 
-def distributed_boruvka(mesh, g: Graph, *, capacity: int = 4096,
-                        m: int | None = None, axis: str = "data",
-                        spec: C.CommitSpec | None = None,
-                        max_subrounds: int = 64, telemetry: bool = False):
-    """Boruvka MST on the shared harness — FR&MF rounds: two ``min``
-    commit waves select each component's lexicographically-minimal outgoing
-    edge (weight, then ORIGINAL edge id, so tie-breaks match the
-    single-shard run exactly), a hook wave writes the component pointers,
-    and pointer-jumping contracts the forest through the FR read path
-    (``route_messages``/``return_to_spawners`` remote gathers).
+def batched_over_graphs_boruvka(gs, *, spec: C.CommitSpec | None = None,
+                                mesh=None, capacity: int | str = 4096,
+                                axis: str = "data",
+                                max_subrounds: int = 64):
+    """G independent MSTs, one per tenant graph, as ONE fused Boruvka
+    run over the :class:`repro.graphs.csr.GraphSet` union — the graph
+    batch axis that finally makes Boruvka *servable*: its per-graph
+    rounds share no query-lane structure, but independent graphs
+    trivially share every wave (disjoint component-id key ranges in the
+    two min-commits, disjoint edge-id ranges in the selection).
 
-    Returns (comp [V], weight, n_edges, rounds); ``telemetry=True``
-    appends the DistributedResult."""
+    Returns ``([(comp, weight, n_edges)] per graph, rounds)``; each
+    triple is bit-identical to ``boruvka(gs.graphs[g])`` on every
+    backend — the contraction loop is shift-equivariant and the
+    canonical-pair dedupe runs per member graph."""
+    if mesh is not None:
+        comp_flat, in_mst_flat, rounds, _ = distributed_boruvka_forest(
+            mesh, gs.union(), capacity=capacity, axis=axis, spec=spec,
+            max_subrounds=max_subrounds, batch=gs.axis)
+        in_mst_flat = jnp.asarray(in_mst_flat)
+    else:
+        comp_flat, in_mst_flat, rounds = boruvka_forest(
+            gs.union(), spec=spec, axis_width=gs.num_graphs)
+    comps = gs.split_vertex(comp_flat)
+    sels = gs.split_edge(in_mst_flat)
+    out = []
+    for i, g in enumerate(gs.graphs):
+        weight, n_edges = _dedupe_mst_pairs(g, sels[i])
+        out.append((comps[i] - jnp.int32(gs.voffs[i]), weight, n_edges))
+    return out, rounds
+
+
+def distributed_boruvka_forest(mesh, g: Graph, *, capacity: int = 4096,
+                               m: int | None = None, axis: str = "data",
+                               spec: C.CommitSpec | None = None,
+                               max_subrounds: int = 64, batch=None):
+    """The distributed contraction loop behind :func:`distributed_boruvka`
+    and the graph-batched entry point.  Returns (comp [V], in_mst numpy
+    bool [E] in ORIGINAL edge order, rounds, DistributedResult);
+    ``batch`` forwards a batch axis to ``run_distributed`` (the tuner's
+    axis-width key for graph-batched runs)."""
     import numpy as np
     from repro.core.engine import AlgorithmSpec, run_distributed
     from repro.graphs.csr import partition_edges
@@ -175,7 +218,7 @@ def distributed_boruvka(mesh, g: Graph, *, capacity: int = 4096,
     parts = partition_edges(g, mesh.shape[axis])   # shared with the harness
     res = run_distributed(alg, mesh, g, capacity=capacity, m=m, axis=axis,
                           spec=spec, max_subrounds=max_subrounds,
-                          edges=parts)
+                          edges=parts, batch=batch)
     comp = res.state["comp"][:v]
     # map shard-lane selections back to original edge ids, then reuse the
     # single-shard canonical-pair dedupe
@@ -183,8 +226,27 @@ def distributed_boruvka(mesh, g: Graph, *, capacity: int = 4096,
     lanes = np.asarray(res.state["in_mst"]).reshape(val_np.shape)
     sel = np.zeros(e_tot, bool)
     sel[eid_np[val_np]] = lanes[val_np]
+    return comp, sel, res.rounds, res
+
+
+def distributed_boruvka(mesh, g: Graph, *, capacity: int = 4096,
+                        m: int | None = None, axis: str = "data",
+                        spec: C.CommitSpec | None = None,
+                        max_subrounds: int = 64, telemetry: bool = False):
+    """Boruvka MST on the shared harness — FR&MF rounds: two ``min``
+    commit waves select each component's lexicographically-minimal outgoing
+    edge (weight, then ORIGINAL edge id, so tie-breaks match the
+    single-shard run exactly), a hook wave writes the component pointers,
+    and pointer-jumping contracts the forest through the FR read path
+    (``route_messages``/``return_to_spawners`` remote gathers).
+
+    Returns (comp [V], weight, n_edges, rounds); ``telemetry=True``
+    appends the DistributedResult."""
+    comp, sel, rounds, res = distributed_boruvka_forest(
+        mesh, g, capacity=capacity, m=m, axis=axis, spec=spec,
+        max_subrounds=max_subrounds)
     weight, n_edges = _dedupe_mst_pairs(g, jnp.asarray(sel))
-    out = (comp, weight, n_edges, res.rounds)
+    out = (comp, weight, n_edges, rounds)
     return out + (res,) if telemetry else out
 
 

@@ -92,6 +92,140 @@ def coloring(g: Graph, *, palette: int | None = None, seed: int = 0,
     return color, rounds, jnp.any(active)   # any=True -> didn't converge
 
 
+@partial(jax.jit, static_argnames=("max_rounds", "spec", "num_graphs",
+                                   "axis_width"))
+def _union_coloring(g: Graph, gov, lid, voffs_e, lsrc, ldst, pal, seed, *,
+                    max_rounds: int, spec: C.CommitSpec | None,
+                    num_graphs: int, axis_width: int):
+    """Boman coloring over a disjoint-union graph, bit-identical per
+    member: proposals hash LOCAL vertex ids against the member's own
+    palette and the coin flips hash LOCAL canonical pairs — exactly what
+    each single-graph run computes — while the recolor notifications of
+    ALL graphs share one ``or`` commit on flat keys."""
+    v = g.num_vertices
+    zeros = jnp.zeros((v,), jnp.int32)
+    step, lvl0 = AT.make_commit_step(spec, "or", zeros, n=g.num_edges,
+                                     axis_width=axis_width)
+
+    def cond(state):
+        _, active, it, _ = state
+        return jnp.any(active) & (it < max_rounds)
+
+    def body(state):
+        color, active, it, lvl = state
+        color = _propose(lid, active, color, pal[gov], seed, it)
+        cs, cd = color[g.src], color[g.dst]
+        conflict = cs == cd
+        loser = _pair_loser(lsrc, ldst, seed, it) + voffs_e
+        msgs = make_messages(loser, jnp.ones((g.num_edges,), jnp.int32),
+                             conflict)
+        res, lvl = step(zeros, msgs, lvl)
+        return color, res.state != 0, it + 1, lvl
+
+    color, active, rounds, _ = jax.lax.while_loop(
+        cond, body, (jnp.zeros((v,), jnp.int32), jnp.ones((v,), bool),
+                     jnp.zeros((), jnp.int32), lvl0))
+    not_conv = jax.ops.segment_sum(active.astype(jnp.int32), gov,
+                                   num_segments=num_graphs) > 0
+    return color, rounds, not_conv
+
+
+def _graphset_locals(gs):
+    """Static local-id views of a GraphSet: (gov [V], lid [V] uint32,
+    per-edge graph voffset [E], local src/dst [E], pal [G])."""
+    import numpy as np
+    gov = gs.graph_of_vertex()
+    lid = (jnp.arange(gs.num_vertices, dtype=jnp.int32)
+           - jnp.asarray(gs.voffs[:-1], jnp.int32)[gov]).astype(jnp.uint32)
+    egov = gs.graph_of_edge()
+    voffs_e = jnp.asarray(gs.voffs[:-1], jnp.int32)[egov]
+    u = gs.union()
+    lsrc = u.src - voffs_e
+    ldst = u.dst - voffs_e
+    pal = jnp.asarray([int(np.asarray(jnp.max(g.degrees))) + 1
+                       for g in gs.graphs], jnp.uint32)
+    return gov, lid, voffs_e, lsrc, ldst, pal
+
+
+def batched_over_graphs_coloring(gs, *, seed: int = 0,
+                                 max_rounds: int = 500,
+                                 spec: C.CommitSpec | None = None,
+                                 mesh=None, capacity: int | str = 4096,
+                                 axis: str = "data",
+                                 max_subrounds: int = 64):
+    """G independent colorings, one per tenant graph, as ONE fused wave
+    sequence — the graph batch axis that makes coloring *servable*: its
+    FR&MF rounds share no query-lane structure (a second query on the
+    same graph would collide on every vertex), but independent graphs
+    trivially share each ``or`` wave on disjoint flat key ranges.
+
+    Returns ``(colors, rounds, not_converged)``: per-graph color rows
+    (each bit-identical to ``coloring(gs.graphs[g], seed=seed)`` on
+    every backend), the fused round count (= max over members), and a
+    [G] bool vector.  ``mesh=`` runs on the distributed harness."""
+    if spec is None:
+        spec = C.CommitSpec(backend="coarse", sort=False, stats=False)
+    gov, lid, voffs_e, lsrc, ldst, pal = _graphset_locals(gs)
+    if mesh is not None:
+        color, rounds, not_conv = _distributed_union_coloring(
+            mesh, gs, pal, seed=seed, max_rounds=max_rounds, spec=spec,
+            capacity=capacity, axis=axis, max_subrounds=max_subrounds)
+    else:
+        color, rounds, not_conv = _union_coloring(
+            gs.union(), gov, lid, voffs_e, lsrc, ldst, pal, seed,
+            max_rounds=max_rounds, spec=spec, num_graphs=gs.num_graphs,
+            axis_width=gs.num_graphs)
+    return gs.split_vertex(color), rounds, not_conv
+
+
+def _distributed_union_coloring(mesh, gs, pal, *, seed, max_rounds, spec,
+                                capacity, axis, max_subrounds):
+    """Graph-batched coloring on the shared harness: the same local-id
+    proposals/coins as :func:`_union_coloring`, with remote endpoint
+    colors read through the FR gather path."""
+    from repro.core.engine import AlgorithmSpec, run_distributed
+    g = gs.union()
+    v = g.num_vertices
+    num_graphs = gs.num_graphs
+    gov_np = gs.graph_of_vertex()
+    voffs = jnp.asarray(gs.voffs, jnp.int32)
+
+    def init(g, layout):
+        vpad = layout.vpad
+        gov = jnp.full((vpad,), num_graphs - 1, jnp.int32).at[:v].set(gov_np)
+        return {"color": jnp.zeros((vpad,), jnp.int32),
+                "active": jnp.zeros((vpad,), bool).at[:v].set(True),
+                "gov": gov}, {}
+
+    def round_fn(rt, e, st, sc, it):
+        gov = st["gov"]
+        lid = (rt.gid - voffs[gov]).astype(jnp.uint32)
+        color = _propose(lid, st["active"], st["color"], pal[gov], seed, it)
+        cs = color[e.my_src]
+        cd = rt.gather(color, e.dst, e.valid, fill=-1)
+        conflict = e.valid & (cs == cd)
+        egov = jnp.clip(
+            jnp.searchsorted(voffs[1:], e.src, side="right"), 0,
+            num_graphs - 1).astype(jnp.int32)
+        loser = _pair_loser(e.src - voffs[egov], e.dst - voffs[egov],
+                            seed, it) + voffs[egov]
+        act, _ = rt.wave(jnp.zeros(color.shape, jnp.int32), loser,
+                         jnp.ones_like(e.src), conflict, op="or")
+        new_active = act != 0
+        return (dict(st, color=color, active=new_active), sc,
+                rt.any(new_active))
+
+    alg = AlgorithmSpec("graphs_coloring", "FR&MF", init, round_fn,
+                        lambda g, layout: max_rounds)
+    res = run_distributed(alg, mesh, gs, capacity=capacity, axis=axis,
+                          spec=spec, max_subrounds=max_subrounds)
+    color = res.state["color"][:v]
+    act = res.state["active"][:v]
+    not_conv = jax.ops.segment_sum(act.astype(jnp.int32), gov_np,
+                                   num_segments=num_graphs) > 0
+    return color, res.rounds, not_conv
+
+
 def distributed_coloring(mesh, g: Graph, *, seed: int = 0,
                          max_rounds: int = 500, capacity: int = 4096,
                          m: int | None = None, axis: str = "data",

@@ -103,7 +103,8 @@ def multi_source_pagerank(g: Graph, sources, *, d: float = 0.85,
     dst_l = jnp.broadcast_to(g.dst, (lanes, e))
     valid_l = jnp.ones((lanes, e), bool)
     acc0 = jnp.zeros((lanes * v,), jnp.float32)
-    step, lvl0 = AT.make_commit_step(spec, "add", acc0, n=lanes * e)
+    step, lvl0 = AT.make_commit_step(spec, "add", acc0, n=lanes * e,
+                                     axis_width=lanes)
 
     def body(carry, _):
         rank, conflicts, lvl = carry
@@ -119,6 +120,112 @@ def multi_source_pagerank(g: Graph, sources, *, d: float = 0.85,
     (rank, conflicts, _), _ = jax.lax.scan(
         body, (restart, jnp.zeros((), jnp.int32), lvl0), None, length=iters)
     return rank, conflicts
+
+
+@partial(jax.jit, static_argnames=("iters", "spec", "num_graphs",
+                                   "axis_width"))
+def _union_ppr(g: Graph, sources_flat, gov, d, *, iters: int,
+               spec: C.CommitSpec | None, num_graphs: int,
+               axis_width: int):
+    """Personalized PageRank over a disjoint-union graph with PER-GRAPH
+    dangling mass (segment sums by ``gov``, the graph-of-vertex map)."""
+    v = g.num_vertices
+    deg = jnp.maximum(g.degrees, 1).astype(jnp.float32)
+    dangling = g.degrees == 0
+    restart = jnp.zeros((v,), jnp.float32).at[sources_flat].set(1.0)
+    acc0 = jnp.zeros((v,), jnp.float32)
+    step, lvl0 = AT.make_commit_step(spec, "add", acc0, n=g.src.shape[0],
+                                     axis_width=axis_width)
+
+    def body(carry, _):
+        rank, lvl = carry
+        contrib = d * rank[g.src] / deg[g.src]
+        msgs = make_messages(g.dst, contrib, jnp.ones_like(g.src, bool))
+        res, lvl = step(acc0, msgs, lvl)
+        dm = jax.ops.segment_sum(jnp.where(dangling, rank, 0.0), gov,
+                                 num_segments=num_graphs)       # [G]
+        rank = restart * ((1.0 - d) + d * dm[gov]) + res.state
+        return (rank, lvl), None
+
+    (rank, _), _ = jax.lax.scan(body, (restart, lvl0), None, length=iters)
+    return rank
+
+
+def batched_over_graphs_pagerank(gs, sources, *, d: float = 0.85,
+                                 iters: int = 20,
+                                 spec: C.CommitSpec | None = None,
+                                 mesh=None, capacity: int | str = 4096,
+                                 axis: str = "data",
+                                 max_subrounds: int = 64):
+    """G personalized-PageRank queries, one per tenant graph, fused on
+    the graph batch axis (disjoint-union flat keys).  ``sources[g]`` is
+    graph g's LOCAL restart vertex; all queries share the trace-time
+    (iters, d) knobs — the admission fuse key.  Returns per-graph rank
+    rows matching ``personalized_pagerank(gs.graphs[g], sources[g])`` to
+    float-add rounding (the fused commit reorders each graph's
+    accumulate exactly like any transaction-size change; per-graph
+    dangling mass is a segment sum over the union)."""
+    if spec is None:
+        spec = C.CommitSpec(backend="coarse", stats=False)
+    flat = gs.flat_vertices(sources)
+    gov = gs.graph_of_vertex()
+    if mesh is not None:
+        rank = _distributed_union_ppr(
+            mesh, gs, flat, d=d, iters=iters, spec=spec,
+            capacity=capacity, axis=axis, max_subrounds=max_subrounds)
+    else:
+        rank = _union_ppr(gs.union(), flat, gov, d, iters=iters, spec=spec,
+                          num_graphs=gs.num_graphs,
+                          axis_width=gs.num_graphs)
+    return gs.split_vertex(rank)
+
+
+def _distributed_union_ppr(mesh, gs, sources_flat, *, d, iters, spec,
+                           capacity, axis, max_subrounds):
+    """Graph-batched personalized PageRank on the shared harness: FF&AS
+    accumulate waves over the union's flat owner slices, per-graph
+    dangling mass psum'd as a [G] vector."""
+    from repro.core.engine import AlgorithmSpec, run_distributed
+    g = gs.union()
+    v = g.num_vertices
+    num_graphs = gs.num_graphs
+    gov_np = gs.graph_of_vertex()
+
+    def init(g, layout):
+        vpad = layout.vpad
+        restart = jnp.zeros((vpad,), jnp.float32).at[sources_flat].set(1.0)
+        gov = jnp.full((vpad,), num_graphs - 1, jnp.int32) \
+            .at[:v].set(gov_np)
+        state = {
+            "rank": restart,
+            "restart": restart,
+            "deg": jnp.zeros((vpad,), jnp.int32).at[:v].set(
+                jnp.maximum(g.degrees, 1)),
+            "dangling": jnp.zeros((vpad,), bool).at[:v].set(g.degrees == 0),
+            "real": jnp.zeros((vpad,), bool).at[:v].set(True),
+            "gov": gov,
+        }
+        return state, {}
+
+    def round_fn(rt, e, st, sc, it):
+        rank = st["rank"]
+        contrib = (d * rank[e.my_src]
+                   / st["deg"][e.my_src].astype(jnp.float32))
+        acc0 = jnp.zeros(rank.shape, jnp.float32)
+        acc, _ = rt.wave(acc0, e.dst, contrib, e.valid, op="add")
+        dm = rt.psum(jax.ops.segment_sum(
+            jnp.where(st["dangling"], rank, 0.0), st["gov"],
+            num_segments=num_graphs))                           # [G]
+        rank = jnp.where(st["real"],
+                         st["restart"] * ((1.0 - d) + d * dm[st["gov"]])
+                         + acc, 0.0)
+        return dict(st, rank=rank), sc, jnp.ones((), bool)
+
+    alg = AlgorithmSpec("graphs_ppr", "FF&AS", init, round_fn,
+                        lambda g, layout: iters)
+    res = run_distributed(alg, mesh, gs, capacity=capacity, axis=axis,
+                          spec=spec, max_subrounds=max_subrounds)
+    return res.state["rank"][:v]
 
 
 def distributed_pagerank(mesh, g: Graph, *, iters: int = 20,
@@ -174,6 +281,7 @@ def distributed_multi_source_pagerank(mesh, g: Graph, sources, *,
     accumulate waves on vertex-major [vpad * L] state, per-lane dangling
     mass psum'd as an [L] vector.  Returns rank [L, V];
     ``telemetry=True`` returns (rank, DistributedResult)."""
+    from repro.core.coalescing import QueryLanes
     from repro.core.engine import AlgorithmSpec, run_distributed
     v = g.num_vertices
 
@@ -206,7 +314,7 @@ def distributed_multi_source_pagerank(mesh, g: Graph, sources, *,
         acc0 = jnp.zeros(rank.shape, jnp.float32)
         acc, _ = rt.wave(acc0, tgt.reshape(-1), contrib.reshape(-1),
                          valid.reshape(-1), op="add",
-                         lane=lane.reshape(-1), num_lanes=lanes)
+                         major=lane.reshape(-1))
         rk = rank.reshape(-1, lanes)
         dm = rt.psum(jnp.sum(
             jnp.where(st["dangling"][:, None], rk, 0.0), axis=0))   # [L]
@@ -217,7 +325,8 @@ def distributed_multi_source_pagerank(mesh, g: Graph, sources, *,
     alg = AlgorithmSpec("multi_ppr", "FF&AS", init, round_fn,
                         lambda g, layout: iters)
     res = run_distributed(alg, mesh, g, capacity=capacity, m=m, axis=axis,
-                          spec=spec, max_subrounds=max_subrounds)
+                          spec=spec, max_subrounds=max_subrounds,
+                          batch=QueryLanes(lanes, v))
     rank = res.state["rank"].reshape(-1, lanes).T[:, :v]
     return (rank, res) if telemetry else rank
 

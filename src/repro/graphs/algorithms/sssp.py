@@ -64,7 +64,7 @@ def multi_source_sssp(g: Graph, sources, *, commit: str = "coarse",
     e = g.src.shape[0]
     dst_l = jnp.broadcast_to(g.dst, (lanes, e))
     step, lvl0 = AT.make_commit_step(spec, "min", dist0.reshape(-1),
-                                     n=lanes * e)
+                                     n=lanes * e, axis_width=lanes)
 
     def cond(state):
         _, frontier, it, _ = state
@@ -127,6 +127,7 @@ def distributed_multi_source_sssp(mesh, g: Graph, sources, *,
     distributed mirror of :func:`multi_source_sssp`.  Returns
     (dist [L, V], rounds); ``telemetry=True`` returns the
     DistributedResult instead of rounds."""
+    from repro.core.coalescing import QueryLanes
     from repro.core.engine import AlgorithmSpec, run_distributed
 
     sources = jnp.asarray(sources, jnp.int32)
@@ -151,16 +152,38 @@ def distributed_multi_source_sssp(mesh, g: Graph, sources, *,
         dist2, _ = rt.wave(dist, tgt.reshape(-1),
                            (dist[fl] + e.weight[:, None]).reshape(-1),
                            active.reshape(-1), op="min",
-                           lane=lane.reshape(-1), num_lanes=lanes)
+                           major=lane.reshape(-1))
         changed = dist2 != dist
         return {"dist": dist2, "frontier": changed}, sc, rt.any(changed)
 
     alg = AlgorithmSpec("multi_sssp", "FF&MF", init, round_fn,
                         lambda g, layout: layout.vpad)
     res = run_distributed(alg, mesh, g, capacity=capacity, m=m, axis=axis,
-                          spec=spec, max_subrounds=max_subrounds)
+                          spec=spec, max_subrounds=max_subrounds,
+                          batch=QueryLanes(lanes, g.num_vertices))
     dist = res.state["dist"].reshape(-1, lanes).T[:, :g.num_vertices]
     return (dist, res) if telemetry else (dist, res.rounds)
+
+
+def batched_over_graphs_sssp(gs, sources, *,
+                             spec: C.CommitSpec | None = None,
+                             mesh=None, capacity: int | str = 4096,
+                             axis: str = "data", max_subrounds: int = 64):
+    """G independent SSSP queries, one per tenant graph, fused on the
+    graph batch axis (disjoint-union flat keys — see
+    :func:`repro.graphs.algorithms.bfs.batched_over_graphs_bfs`).
+    ``sources[g]`` is graph g's LOCAL root.  Returns per-graph f32
+    distance rows, bit-identical to ``sssp(gs.graphs[g], sources[g])``
+    on every backend (f32 ``min`` over the same relaxation multiset is
+    order-independent)."""
+    flat = gs.flat_vertices(sources)
+    if mesh is not None:
+        dist, _ = distributed_sssp(mesh, gs, flat, spec=spec,
+                                   capacity=capacity, axis=axis,
+                                   max_subrounds=max_subrounds)
+    else:
+        dist, _ = sssp(gs.union(), flat, spec=spec)
+    return gs.split_vertex(dist)
 
 
 def sssp_reference(g: Graph, source: int):

@@ -84,7 +84,7 @@ def multi_source_stconn(g: Graph, ss, ts, *,
     e = g.src.shape[0]
     dst_l = jnp.broadcast_to(g.dst, (l2, e))
     step, lvl0 = AT.make_commit_step(spec, "or", marks0.reshape(-1),
-                                     n=l2 * e)
+                                     n=l2 * e, axis_width=l2)
 
     def cond(state):
         _, frontier, found, it, _ = state
@@ -107,6 +107,129 @@ def multi_source_stconn(g: Graph, ss, ts, *,
         cond, body, (marks0, frontier0, found0,
                      jnp.zeros((), jnp.int32), lvl0))
     return found, rounds
+
+
+@partial(jax.jit, static_argnames=("spec", "num_graphs", "axis_width"))
+def _union_stconn(g: Graph, ss_flat, ts_flat, gov, egov, *,
+                  spec: C.CommitSpec | None, num_graphs: int,
+                  axis_width: int):
+    """G s-t queries over a disjoint-union graph: grey marks live at flat
+    keys [0, V), green at [V, 2V) (a nested 2-lane axis on top of the
+    graph axis); per-graph found bits are segment reductions by the
+    graph-of-vertex map."""
+    v = g.num_vertices
+    e = g.src.shape[0]
+    marks0 = jnp.zeros((2 * v,), jnp.int32) \
+        .at[ss_flat].set(1).at[v + ts_flat].set(1)
+    frontier0 = jnp.zeros((2 * v,), bool) \
+        .at[ss_flat].set(True).at[v + ts_flat].set(True)
+    found0 = ss_flat == ts_flat
+    tgt2 = jnp.concatenate([g.dst, v + g.dst])
+    step, lvl0 = AT.make_commit_step(spec, "or", marks0, n=2 * e,
+                                     axis_width=axis_width)
+
+    def cond(state):
+        marks, frontier, found, it, _ = state
+        live = frontier & jnp.concatenate([~found[gov], ~found[gov]])
+        return jnp.any(live) & (it < v)
+
+    def body(state):
+        marks, frontier, found, it, lvl = state
+        live_e = ~found[egov]                    # answered graphs go quiet
+        a_grey = frontier[g.src] & live_e
+        a_green = frontier[v + g.src] & live_e
+        active = jnp.concatenate([a_grey, a_green])
+        msgs = make_messages(tgt2, active.astype(jnp.int32), active)
+        res, lvl = step(marks, msgs, lvl)
+        frontier2 = (res.state != 0) & (marks == 0)
+        meet = (res.state[:v] != 0) & (res.state[v:] != 0)      # [V]
+        found2 = found | (jax.ops.segment_sum(
+            meet.astype(jnp.int32), gov, num_segments=num_graphs) > 0)
+        return res.state, frontier2, found2, it + 1, lvl
+
+    _, _, found, rounds, _ = jax.lax.while_loop(
+        cond, body, (marks0, frontier0, found0,
+                     jnp.zeros((), jnp.int32), lvl0))
+    return found, rounds
+
+
+def batched_over_graphs_stconn(gs, ss, ts, *,
+                               spec: C.CommitSpec | None = None,
+                               mesh=None, capacity: int | str = 4096,
+                               axis: str = "data",
+                               max_subrounds: int = 64):
+    """G s-t connectivity queries, one per tenant graph, fused on the
+    graph batch axis.  ``ss[g]``/``ts[g]`` are graph g's LOCAL
+    endpoints.  Returns found [G] bool — ``found[g]`` equals
+    ``st_connectivity(gs.graphs[g], ss[g], ts[g])`` on every backend
+    (both compute ground-truth reachability; answered graphs stop
+    emitting messages while the wave serves the rest)."""
+    if spec is None:
+        spec = C.CommitSpec(backend="coarse")
+    ss_flat = gs.flat_vertices(ss)
+    ts_flat = gs.flat_vertices(ts)
+    if mesh is not None:
+        found, _ = _distributed_union_stconn(
+            mesh, gs, ss_flat, ts_flat, spec=spec, capacity=capacity,
+            axis=axis, max_subrounds=max_subrounds)
+        return found
+    found, _ = _union_stconn(gs.union(), ss_flat, ts_flat,
+                             gs.graph_of_vertex(), gs.graph_of_edge(),
+                             spec=spec, num_graphs=gs.num_graphs,
+                             axis_width=2 * gs.num_graphs)
+    return found
+
+
+def _distributed_union_stconn(mesh, gs, ss_flat, ts_flat, *, spec,
+                              capacity, axis, max_subrounds):
+    """Graph-batched s-t connectivity on the shared harness: the union's
+    grey/green marks ride as TWO payload fields through one coalescing
+    bucket per round, per-graph found bits psum'd as a [G] vector."""
+    from repro.core.engine import AlgorithmSpec, run_distributed
+    g = gs.union()
+    v = g.num_vertices
+    num_graphs = gs.num_graphs
+    gov_np = gs.graph_of_vertex()
+    voffs = jnp.asarray(gs.voffs, jnp.int32)
+
+    def init(g, layout):
+        vpad = layout.vpad
+        state = {"grey": jnp.zeros((vpad,), jnp.int32).at[ss_flat].set(1),
+                 "green": jnp.zeros((vpad,), jnp.int32).at[ts_flat].set(1),
+                 "fgrey": jnp.zeros((vpad,), bool).at[ss_flat].set(True),
+                 "fgreen": jnp.zeros((vpad,), bool).at[ts_flat].set(True),
+                 "gov": jnp.full((vpad,), num_graphs - 1, jnp.int32)
+                 .at[:v].set(gov_np),
+                 "real": jnp.zeros((vpad,), bool).at[:v].set(True)}
+        return state, {"found": ss_flat == ts_flat}
+
+    def round_fn(rt, e, st, sc, it):
+        egov = jnp.clip(
+            jnp.searchsorted(voffs[1:], e.src, side="right"), 0,
+            num_graphs - 1).astype(jnp.int32)
+        live_e = e.valid & ~sc["found"][egov]
+        ag = st["fgrey"][e.my_src] & live_e
+        agr = st["fgreen"][e.my_src] & live_e
+        marks, _ = rt.wave(
+            {"grey": st["grey"], "green": st["green"]}, e.dst,
+            {"grey": ag.astype(jnp.int32), "green": agr.astype(jnp.int32)},
+            ag | agr, op="or")
+        fgrey = (marks["grey"] != 0) & (st["grey"] == 0)
+        fgreen = (marks["green"] != 0) & (st["green"] == 0)
+        meet = (marks["grey"] != 0) & (marks["green"] != 0) & st["real"]
+        found = sc["found"] | (rt.psum(jax.ops.segment_sum(
+            meet.astype(jnp.int32), st["gov"],
+            num_segments=num_graphs)) > 0)
+        live2 = (fgrey | fgreen) & ~found[st["gov"]] & st["real"]
+        state = dict(st, grey=marks["grey"], green=marks["green"],
+                     fgrey=fgrey, fgreen=fgreen)
+        return state, {"found": found}, rt.any(live2)
+
+    alg = AlgorithmSpec("graphs_stconn", "FR&AS", init, round_fn,
+                        lambda g, layout: layout.vpad)
+    res = run_distributed(alg, mesh, gs, capacity=capacity, axis=axis,
+                          spec=spec, max_subrounds=max_subrounds)
+    return res.scalars["found"], res.rounds
 
 
 def distributed_stconn(mesh, g: Graph, s: int, t: int, *,
@@ -168,6 +291,7 @@ def distributed_multi_source_stconn(mesh, g: Graph, ss, ts, *,
     vertex-major [vpad * 2L] state, per-lane found bits psum'd each round
     (the FR "return true" as an [L] vector).  Returns (found [L], rounds);
     ``telemetry=True`` appends the DistributedResult."""
+    from repro.core.coalescing import QueryLanes
     from repro.core.engine import AlgorithmSpec, run_distributed
 
     ss = jnp.asarray(ss, jnp.int32)
@@ -198,7 +322,7 @@ def distributed_multi_source_stconn(mesh, g: Graph, ss, ts, *,
         marks2, _ = rt.wave(st["marks"], tgt.reshape(-1),
                             active.astype(jnp.int32).reshape(-1),
                             active.reshape(-1), op="or",
-                            lane=lane.reshape(-1), num_lanes=l2)
+                            major=lane.reshape(-1))
         frontier2 = (marks2 != 0) & (st["marks"] == 0)
         mk = marks2.reshape(-1, l2)
         meet = (mk[:, 0::2] != 0) & (mk[:, 1::2] != 0)  # [block, L]
@@ -211,7 +335,8 @@ def distributed_multi_source_stconn(mesh, g: Graph, ss, ts, *,
     alg = AlgorithmSpec("multi_stconn", "FR&AS", init, round_fn,
                         lambda g, layout: layout.vpad)
     res = run_distributed(alg, mesh, g, capacity=capacity, m=m, axis=axis,
-                          spec=spec, max_subrounds=max_subrounds)
+                          spec=spec, max_subrounds=max_subrounds,
+                          batch=QueryLanes(l2, g.num_vertices))
     out = (res.scalars["found"], res.rounds)
     return out + (res,) if telemetry else out
 

@@ -69,6 +69,115 @@ def from_edges(src: np.ndarray, dst: np.ndarray, num_vertices: int,
 
 
 # ---------------------------------------------------------------------------
+# GraphSet: G tenant graphs stacked into one flat vertex/edge space
+# ---------------------------------------------------------------------------
+
+
+class GraphSet:
+    """A batch of G independent graphs sharing one flat key space.
+
+    The serving layer's *graph* batch axis (ISSUE 5): graph ``i``'s
+    vertices occupy the contiguous range ``[vertex_offset(i),
+    vertex_offset(i) + V_i)`` of the flat space, its edges the range
+    ``[edge_offset(i), edge_offset(i) + E_i)`` of the stacked edge
+    arrays.  :meth:`union` materialises the disjoint-union
+    :class:`Graph` (per-graph CSR slices gathered from the stacked
+    arrays) — running a wave algorithm over the union IS running it on
+    every member at once, because components never exchange messages
+    and the flat ranges never collide in the commit key space (the same
+    disjointness argument as the query-lane composite keys,
+    ``repro.core.coalescing``).
+
+    The container is python-side/static: sizes and offsets are plain
+    ints so they can live in jit static args via
+    :class:`repro.core.coalescing.GraphBatch` (``self.axis``).
+    """
+
+    def __init__(self, graphs):
+        self.graphs = tuple(graphs)
+        if not self.graphs:
+            raise ValueError("GraphSet needs at least one graph")
+        self.vsizes = tuple(int(g.num_vertices) for g in self.graphs)
+        self.esizes = tuple(int(g.num_edges) for g in self.graphs)
+        self.voffs = np.concatenate(
+            [[0], np.cumsum(self.vsizes)]).astype(np.int64)
+        self.eoffs = np.concatenate(
+            [[0], np.cumsum(self.esizes)]).astype(np.int64)
+        self._union: Graph | None = None
+
+    @property
+    def num_graphs(self) -> int:
+        return len(self.graphs)
+
+    @property
+    def num_vertices(self) -> int:
+        return int(self.voffs[-1])
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.eoffs[-1])
+
+    def vertex_offset(self, i: int) -> int:
+        return int(self.voffs[i])
+
+    @property
+    def axis(self):
+        """The :class:`repro.core.coalescing.GraphBatch` batch axis of
+        this set (static, hashable)."""
+        from repro.core.coalescing import GraphBatch
+        return GraphBatch(sizes=self.vsizes)
+
+    def union(self) -> Graph:
+        """The disjoint-union graph (cached): stacked edge arrays with
+        per-graph vertex offsets applied, concatenated CSR indptr."""
+        if self._union is None:
+            src = jnp.concatenate(
+                [g.src + jnp.int32(self.voffs[i])
+                 for i, g in enumerate(self.graphs)])
+            dst = jnp.concatenate(
+                [g.dst + jnp.int32(self.voffs[i])
+                 for i, g in enumerate(self.graphs)])
+            w = jnp.concatenate([g.weights for g in self.graphs])
+            indptr = jnp.concatenate(
+                [g.indptr[:-1] + jnp.int32(self.eoffs[i])
+                 for i, g in enumerate(self.graphs)]
+                + [jnp.asarray([self.num_edges], jnp.int32)])
+            self._union = Graph(indptr=indptr, src=src, dst=dst, weights=w,
+                                num_vertices=self.num_vertices,
+                                num_edges=self.num_edges)
+        return self._union
+
+    def flat_vertices(self, per_graph) -> jax.Array:
+        """Map per-graph vertex ids ``per_graph`` ([G] int) into the
+        flat space: ``voffs[i] + per_graph[i]``."""
+        ids = np.asarray(per_graph, np.int64)
+        if ids.shape != (self.num_graphs,):
+            raise ValueError(f"expected one vertex per graph "
+                             f"({self.num_graphs}), got shape {ids.shape}")
+        return jnp.asarray(self.voffs[:-1] + ids, jnp.int32)
+
+    def split_vertex(self, flat) -> list:
+        """Slice a flat [num_vertices] (or [num_vertices, ...]) array
+        back into per-graph rows."""
+        return [flat[self.voffs[i]:self.voffs[i + 1]]
+                for i in range(self.num_graphs)]
+
+    def split_edge(self, flat) -> list:
+        return [flat[self.eoffs[i]:self.eoffs[i + 1]]
+                for i in range(self.num_graphs)]
+
+    def graph_of_vertex(self) -> jax.Array:
+        """int32 [num_vertices] graph index per flat vertex id."""
+        return jnp.asarray(np.repeat(np.arange(self.num_graphs),
+                                     self.vsizes), jnp.int32)
+
+    def graph_of_edge(self) -> jax.Array:
+        """int32 [num_edges] graph index per stacked edge id."""
+        return jnp.asarray(np.repeat(np.arange(self.num_graphs),
+                                     self.esizes), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
 # 1-D partitioning (paper §3.1: V split into contiguous owner ranges)
 # ---------------------------------------------------------------------------
 

@@ -1,31 +1,44 @@
-"""Graph query service — lane-batched multi-tenant serving of AAM queries.
+"""Graph query service — batch-axis multi-tenant serving of AAM queries.
 
 The paper's waves amortize per-message overhead by coalescing many active
 messages into one transaction; at serving scale the same move applies one
-level up: many *independent user queries* fuse into lanes of a single
-wave (composite commit keys ``lane * V + v``, one conflict resolution for
-all lanes — see ``repro.core.coalescing``).  UpDown's event fabric and
-PIUMA's multi-tenant pipelines make the identical
-aggregate-small-events-into-big-atomic-steps bet in hardware.
+level up, along TWO orthogonal batch axes (``repro.core.coalescing``):
+
+* **query lanes** — many independent queries over ONE graph fuse into
+  lanes of a single wave (composite commit keys ``lane * V + v``);
+* **graph batch** — the same query kind over MANY tenant graphs fuses
+  into one wave over the disjoint-union flat key space
+  (``offset[g] + v``) — the axis that makes coloring and Boruvka
+  servable at all (their rounds share no lane structure, but
+  independent graphs trivially share a wave).
+
+UpDown's event fabric and PIUMA's multi-tenant pipelines make the
+identical aggregate-small-events-into-big-atomic-steps bet in hardware.
 
 The service owns the non-wave half of serving:
 
-* **admission / microbatching** — submitted queries queue per
-  (graph, fuse key); ``drain()`` packs each queue into waves of at most
-  ``max_lanes`` lanes, padding the lane count up to the next rung of a
-  power-of-two lane ladder so only ``log2(max_lanes)+1`` jit cache
-  entries per query kind ever exist (pad lanes repeat a real query and
-  are discarded);
+* **admission / axis choice** — submitted queries queue per
+  (graph, fuse key); ``drain()`` picks the fusion axis per fuse-key
+  group: graphs holding SEVERAL queries of a kind fuse them as lanes
+  (at most ``max_lanes``, lane count padded up a power-of-two ladder),
+  graphs holding ONE query each fuse across graphs as a graph batch (at
+  most ``max_graphs``, graph count padded up its own ladder) — the
+  power-of-two ladder applied per axis keeps jit caches to
+  ``log2(width)+1`` entries per kind; padding repeats a real
+  query/graph and is discarded;
 * **in-flight dedup** — identical queries submitted before a drain share
   one lane;
 * **result cache** — keyed by ``(graph_id, query)``; hits answer at
-  submit time without touching the accelerator;
-* **telemetry** — :class:`ServiceStats` counts what the lane ladder and
+  submit time without touching the accelerator.  Re-registering a
+  ``graph_id`` with different topology invalidates that graph's cache
+  entries AND its in-flight queue (stale tickets raise KeyError
+  forever) instead of serving answers computed on the old graph;
+* **telemetry** — :class:`ServiceStats` counts what the ladders and
   cache actually saved.
 
-Execution is the lane-extended algorithm entry points
-(``multi_source_*``); pass ``mesh=`` to serve from the distributed
-harness (``distributed_multi_source_*`` + ``capacity="auto"``) instead of
+Execution is the batch-axis algorithm entry points (``multi_source_*``
+for lanes, ``batched_over_graphs_*`` for graph batches); pass ``mesh=``
+to serve from the distributed harness (``capacity="auto"``) instead of
 the single-shard loops.
 """
 from __future__ import annotations
@@ -34,10 +47,12 @@ import dataclasses
 from typing import Any
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import commit as C
 from repro.serve.queries import (BfsQuery, PprQuery, SsspQuery, StConnQuery,
-                                 QUERY_KINDS)
+                                 ColoringQuery, MstQuery, QUERY_KINDS,
+                                 GRAPH_ONLY_KINDS)
 
 
 @dataclasses.dataclass
@@ -47,23 +62,45 @@ class ServiceStats:
     submitted: int = 0
     cache_hits: int = 0
     deduped: int = 0         # submissions that joined an in-flight lane
-    waves: int = 0           # fused waves executed
+    waves: int = 0           # fused lane waves executed
     lanes_executed: int = 0  # total lanes across waves (incl. padding)
     lanes_padded: int = 0    # ladder-padding lanes (discarded results)
+    graph_waves: int = 0     # fused graph-batch waves executed
+    graphs_batched: int = 0  # graphs across graph waves (incl. padding)
+    graphs_padded: int = 0   # ladder-padding graphs (discarded results)
+    invalidated: int = 0     # in-flight tickets voided by re-registration
 
 
-def _lane_ladder(max_lanes: int) -> tuple:
-    """(1, 2, 4, ..., max_lanes)."""
+def _pow2_ladder(width: int) -> tuple:
+    """(1, 2, 4, ..., width) — the per-axis jit-shape ladder."""
     ladder = []
-    lane = 1
-    while lane < max_lanes:
-        ladder.append(lane)
-        lane *= 2
-    return tuple(ladder) + (max_lanes,)
+    w = 1
+    while w < width:
+        ladder.append(w)
+        w *= 2
+    return tuple(ladder) + (width,)
+
+
+# PR-4 name (the lane-axis instance of the per-axis ladder)
+_lane_ladder = _pow2_ladder
+
+
+def _same_topology(a, b) -> bool:
+    """Do two Graphs have identical topology/weights?  (The
+    re-registration staleness check — cheap shape gate first.)"""
+    if a is b:
+        return True
+    if (a.num_vertices, a.num_edges) != (b.num_vertices, b.num_edges):
+        return False
+    return (np.array_equal(np.asarray(a.src), np.asarray(b.src))
+            and np.array_equal(np.asarray(a.dst), np.asarray(b.dst))
+            and np.array_equal(np.asarray(a.weights), np.asarray(b.weights)))
 
 
 class GraphService:
-    """Serve streams of independent graph queries as fused lane waves.
+    """Serve streams of independent graph queries as fused batch-axis
+    waves: same-graph requests as query lanes, same-kind requests across
+    tenant graphs as graph batches (see the module docstring).
 
     spec:       CommitSpec for every fused commit.  None (default) serves
                 with ``CommitSpec(backend="auto", sort=False,
@@ -76,6 +113,7 @@ class GraphService:
                 Pallas tiers stay in the race.  Pass a concrete spec to
                 pin the mechanism.
     max_lanes:  lane budget L of one fused wave (power of two).
+    max_graphs: graph budget G of one graph-batch wave (power of two).
     mesh:       optional — execute on the distributed harness over
                 ``mesh[axis]`` shards instead of the single-shard loops.
     capacity:   coalescing factor for distributed execution ("auto" =
@@ -88,17 +126,22 @@ class GraphService:
     """
 
     def __init__(self, *, spec: C.CommitSpec | None = None,
-                 max_lanes: int = 8, mesh=None,
+                 max_lanes: int = 8, max_graphs: int = 8, mesh=None,
                  capacity: int | str = "auto", axis: str = "data",
                  cache: bool = True, max_results: int = 4096,
                  max_cache: int = 1024):
         if max_lanes < 1 or (max_lanes & (max_lanes - 1)):
             raise ValueError(f"max_lanes must be a power of two, got "
                              f"{max_lanes}")
+        if max_graphs < 1 or (max_graphs & (max_graphs - 1)):
+            raise ValueError(f"max_graphs must be a power of two, got "
+                             f"{max_graphs}")
         self.spec = spec if spec is not None \
             else C.CommitSpec(backend="auto", sort=False, stats=False)
         self.max_lanes = max_lanes
-        self.lane_ladder = _lane_ladder(max_lanes)
+        self.max_graphs = max_graphs
+        self.lane_ladder = _pow2_ladder(max_lanes)
+        self.graph_ladder = _pow2_ladder(max_graphs)
         self.mesh = mesh
         self.capacity = capacity
         self.axis = axis
@@ -106,6 +149,10 @@ class GraphService:
         self.max_cache = max_cache
         self.stats = ServiceStats()
         self._graphs: dict[Any, Any] = {}
+        # (graph_id tuple) -> GraphSet memo: keeps the union arrays (and
+        # therefore jit cache keys) stable across drains of a stable
+        # tenant mix
+        self._graphsets: dict[tuple, Any] = {}
         # (graph_id, fuse_key) -> {query: [tickets]} in arrival order
         self._queue: dict[tuple, dict] = {}
         self._results: dict[int, Any] = {}
@@ -123,8 +170,35 @@ class GraphService:
     # -- admission --------------------------------------------------------
 
     def register_graph(self, graph_id, g) -> None:
-        """Register a graph under ``graph_id`` (the tenant key)."""
+        """Register a graph under ``graph_id`` (the tenant key).
+
+        Re-registering an id with DIFFERENT topology invalidates every
+        ``(graph_id, query)`` result-cache entry and drops the graph's
+        in-flight queue — their tickets raise KeyError forever (counted
+        in ``stats.invalidated``) — so no answer computed on the old
+        topology is ever served.  Same-topology re-registration is a
+        no-op for the cache."""
+        old = self._graphs.get(graph_id)
+        if old is not None and not _same_topology(old, g):
+            if self._cache is not None:
+                for k in [k for k in self._cache if k[0] == graph_id]:
+                    del self._cache[k]
+            for qk in [qk for qk in self._queue if qk[0] == graph_id]:
+                for tickets in self._queue.pop(qk).values():
+                    self.stats.invalidated += len(tickets)
+        if old is not None:
+            # the union memo interns the old arrays — rebuild on demand
+            for k in [k for k in self._graphsets if graph_id in k]:
+                del self._graphsets[k]
         self._graphs[graph_id] = g
+
+    def _graphset(self, graph_ids: tuple):
+        from repro.graphs.csr import GraphSet
+        gs = self._graphsets.get(graph_ids)
+        if gs is None:
+            gs = GraphSet([self._graphs[gid] for gid in graph_ids])
+            self._bounded_put(self._graphsets, graph_ids, gs, 32)
+        return gs
 
     def submit(self, graph_id, query) -> int:
         """Enqueue one query; returns a ticket for :meth:`result`.
@@ -140,8 +214,12 @@ class GraphService:
         if query.kind not in QUERY_KINDS:
             raise ValueError(f"unknown query kind {query.kind!r}")
         v = self._graphs[graph_id].num_vertices
-        ids = (query.s, query.t) if query.kind == "stconn" \
-            else (query.source,)
+        if query.kind == "stconn":
+            ids = (query.s, query.t)
+        elif query.kind in GRAPH_ONLY_KINDS:
+            ids = ()                      # whole-graph queries name no vertex
+        else:
+            ids = (query.source,)
         for i in ids:
             if not 0 <= int(i) < v:
                 raise ValueError(f"{query} names vertex {i} outside "
@@ -172,26 +250,101 @@ class GraphService:
     # -- execution --------------------------------------------------------
 
     def drain(self) -> dict:
-        """Execute every queued query in fused lane waves.
+        """Execute every queued query in fused batch-axis waves.
 
-        Returns {ticket: result} for everything completed by this call."""
+        Per fuse-key group the fusion axis is chosen here: graphs
+        holding SEVERAL distinct queries of the kind lane-fuse them
+        (one wave per graph, ``multi_source_*``); graphs holding ONE
+        query each fuse ACROSS graphs as a graph batch
+        (``batched_over_graphs_*``) — whole-graph kinds (coloring, MST)
+        only have the graph axis.  Returns {ticket: result} for
+        everything completed by this call."""
         done: dict[int, Any] = {}
         queues, self._queue = self._queue, {}
-        for (graph_id, _), lanes in queues.items():
-            g = self._graphs[graph_id]
-            queries = list(lanes)
-            for lo in range(0, len(queries), self.max_lanes):
-                chunk = queries[lo:lo + self.max_lanes]
-                rows = self._execute_wave(g, chunk)
-                for q, row in zip(chunk, rows):
-                    if self._cache is not None:
-                        self._bounded_put(self._cache, (graph_id, q), row,
-                                          self.max_cache)
-                    for t in lanes[q]:
-                        self._bounded_put(self._results, t, row,
-                                          self.max_results)
-                        done[t] = row
+        by_fuse: dict[tuple, list] = {}
+        for (graph_id, fk), lanes in queues.items():
+            by_fuse.setdefault(fk, []).append((graph_id, lanes))
+
+        def finish(graph_id, q, row):
+            if self._cache is not None:
+                self._bounded_put(self._cache, (graph_id, q), row,
+                                  self.max_cache)
+            for t in queues[(graph_id, q.fuse_key())][q]:
+                self._bounded_put(self._results, t, row, self.max_results)
+                done[t] = row
+
+        for fk, entries in by_fuse.items():
+            kind = fk[0]
+            singles = [(gid, next(iter(lanes)))
+                       for gid, lanes in entries if len(lanes) == 1]
+            multis = [(gid, lanes) for gid, lanes in entries
+                      if len(lanes) > 1]
+            if len(singles) >= 2 or (singles and kind in GRAPH_ONLY_KINDS):
+                # graph axis: one query per graph, chunked by max_graphs
+                for lo in range(0, len(singles), self.max_graphs):
+                    chunk = singles[lo:lo + self.max_graphs]
+                    rows = self._execute_graph_batch(kind, chunk)
+                    for (gid, q), row in zip(chunk, rows):
+                        finish(gid, q, row)
+            else:
+                multis += [(gid, {q: queues[(gid, fk)][q]})
+                           for gid, q in singles]
+            for graph_id, lanes in multis:
+                # lane axis: many queries, one graph
+                g = self._graphs[graph_id]
+                queries = list(lanes)
+                for lo in range(0, len(queries), self.max_lanes):
+                    chunk = queries[lo:lo + self.max_lanes]
+                    rows = self._execute_wave(g, chunk)
+                    for q, row in zip(chunk, rows):
+                        finish(graph_id, q, row)
         return done
+
+    def _execute_graph_batch(self, kind: str, chunk: list) -> list:
+        """One graph-batch wave: ``chunk`` is [(graph_id, query)], one
+        per graph; pad the graph count up the graph ladder, execute the
+        ``batched_over_graphs_*`` entry point, return one result row per
+        real (graph, query) pair."""
+        k = len(chunk)
+        width = next(w for w in self.graph_ladder if w >= k)
+        padded = chunk + [chunk[-1]] * (width - k)
+        self.stats.graph_waves += 1
+        self.stats.graphs_batched += width
+        self.stats.graphs_padded += width - k
+        gs = self._graphset(tuple(gid for gid, _ in padded))
+        qs = [q for _, q in padded]
+        kw = dict(spec=self.spec, mesh=self.mesh, capacity=self.capacity,
+                  axis=self.axis)
+        if kind == "bfs":
+            from repro.graphs.algorithms.bfs import batched_over_graphs_bfs
+            rows = batched_over_graphs_bfs(gs, [q.source for q in qs], **kw)
+        elif kind == "sssp":
+            from repro.graphs.algorithms.sssp import \
+                batched_over_graphs_sssp
+            rows = batched_over_graphs_sssp(gs, [q.source for q in qs],
+                                            **kw)
+        elif kind == "ppr":
+            from repro.graphs.algorithms.pagerank import \
+                batched_over_graphs_pagerank
+            rows = batched_over_graphs_pagerank(
+                gs, [q.source for q in qs], iters=qs[0].iters, d=qs[0].d,
+                **kw)
+        elif kind == "stconn":
+            from repro.graphs.algorithms.stconn import \
+                batched_over_graphs_stconn
+            found = batched_over_graphs_stconn(
+                gs, [q.s for q in qs], [q.t for q in qs], **kw)
+            rows = [bool(found[i]) for i in range(width)]
+        elif kind == "coloring":
+            from repro.graphs.algorithms.coloring import \
+                batched_over_graphs_coloring
+            rows, _, _ = batched_over_graphs_coloring(
+                gs, seed=qs[0].seed, max_rounds=qs[0].max_rounds, **kw)
+        else:   # mst
+            from repro.graphs.algorithms.boruvka import \
+                batched_over_graphs_boruvka
+            rows, _ = batched_over_graphs_boruvka(gs, **kw)
+        return list(rows)[:k]
 
     def run(self, graph_id, queries) -> list:
         """Convenience: submit all, drain, return results in order."""

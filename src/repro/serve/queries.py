@@ -59,4 +59,36 @@ class StConnQuery:
         return (self.kind,)
 
 
-QUERY_KINDS = ("bfs", "sssp", "ppr", "stconn")
+@dataclasses.dataclass(frozen=True)
+class ColoringQuery:
+    """Boman coloring of the whole graph — result row: int32 [V] colors.
+
+    Coloring has no query-lane form (two colorings of the same graph
+    would collide on every vertex), so it fuses on the GRAPH batch axis
+    only: one query each over many tenant graphs shares a wave.  The
+    seeded coin flips are trace-shared, so ``seed``/``max_rounds`` are
+    part of the fuse key."""
+    seed: int = 0
+    max_rounds: int = 500
+    kind: ClassVar[str] = "coloring"
+
+    def fuse_key(self) -> tuple:
+        return (self.kind, self.seed, self.max_rounds)
+
+
+@dataclasses.dataclass(frozen=True)
+class MstQuery:
+    """Boruvka MST forest of the whole graph — result:
+    ``(comp int32 [V], weight, n_edges)``.
+
+    Like coloring, MST is a whole-graph query with no lane form; it
+    fuses on the graph batch axis."""
+    kind: ClassVar[str] = "mst"
+
+    def fuse_key(self) -> tuple:
+        return (self.kind,)
+
+
+QUERY_KINDS = ("bfs", "sssp", "ppr", "stconn", "coloring", "mst")
+# kinds with no query-lane form — servable via the graph batch axis only
+GRAPH_ONLY_KINDS = ("coloring", "mst")

@@ -1,15 +1,18 @@
 """Property tests for the coalescing planner (paper §4.2, §5.6): the
 bucket plan must partition messages exactly into kept + requeued, count
-overflow instead of losing it, and scatter/gather must round-trip."""
+overflow instead of losing it, and scatter/gather must round-trip — plus
+the batch-axis flat-key maps (ISSUE 5): QueryLanes/GraphBatch flatten
+must be a bijection onto [0, flat_size) that unflatten inverts."""
 import numpy as np
 import jax.numpy as jnp
 
 from _hypothesis_compat import given, settings, strategies as st
 
-from repro.core.coalescing import (DENSE_PLANNER_MAX_BUCKETS,
-                                   bucket_message_ids, gather_from_buckets,
-                                   plan_buckets, plan_buckets_dense,
-                                   plan_buckets_sorted, scatter_to_buckets)
+from repro.core.coalescing import (DENSE_PLANNER_MAX_BUCKETS, GraphBatch,
+                                   QueryLanes, bucket_message_ids,
+                                   gather_from_buckets, plan_buckets,
+                                   plan_buckets_dense, plan_buckets_sorted,
+                                   scatter_to_buckets)
 
 
 @st.composite
@@ -94,6 +97,53 @@ def test_overflow_is_requeued_never_lost(case):
     assert not pending.any()
     # exactly-once delivery over the sub-rounds
     assert np.array_equal(delivered, valid.astype(np.int32))
+
+
+@settings(max_examples=30)
+@given(st.lists(st.integers(1, 60), min_size=1, max_size=7),
+       st.integers(0, 2 ** 31 - 1))
+def test_graph_batch_flat_key_offset_roundtrip(sizes, seed):
+    """GraphBatch.flatten is a bijection from {(g, v): v < sizes[g]}
+    onto disjoint contiguous ranges of [0, flat_size); unflatten
+    inverts it exactly (heterogeneous sizes, no padding)."""
+    ax = GraphBatch(sizes=tuple(sizes))
+    assert ax.flat_size == sum(sizes)
+    assert ax.offsets == tuple(np.cumsum([0] + sizes[:-1]).tolist())
+    rng = np.random.default_rng(seed)
+    n = 64
+    major = rng.integers(0, len(sizes), n)
+    minor = np.asarray([rng.integers(0, sizes[m]) for m in major])
+    key = np.asarray(ax.flatten(jnp.asarray(major), jnp.asarray(minor)))
+    # in range, and distinct pairs -> distinct keys (disjointness: one
+    # commit over flat keys == per-graph commits)
+    assert (0 <= key).all() and (key < ax.flat_size).all()
+    pairs = set(zip(major.tolist(), minor.tolist()))
+    assert len(set(key.tolist())) == len(pairs)
+    ma, mi = ax.unflatten(jnp.asarray(key))
+    np.testing.assert_array_equal(np.asarray(ma), major)
+    np.testing.assert_array_equal(np.asarray(mi), minor)
+    # exhaustive bijection onto [0, flat_size)
+    all_major = np.repeat(np.arange(len(sizes)), sizes)
+    all_minor = np.concatenate([np.arange(s) for s in sizes])
+    all_keys = np.asarray(ax.flatten(jnp.asarray(all_major),
+                                     jnp.asarray(all_minor)))
+    np.testing.assert_array_equal(np.sort(all_keys),
+                                  np.arange(ax.flat_size))
+
+
+@settings(max_examples=30)
+@given(st.integers(1, 12), st.integers(1, 80), st.integers(0, 2 ** 31 - 1))
+def test_query_lanes_flat_key_roundtrip(lanes, v, seed):
+    ax = QueryLanes(lanes, v)
+    assert ax.flat_size == lanes * v and ax.wave_width == lanes
+    rng = np.random.default_rng(seed)
+    major = rng.integers(0, lanes, 50)
+    minor = rng.integers(0, v, 50)
+    key = ax.flatten(jnp.asarray(major), jnp.asarray(minor))
+    assert (np.asarray(key) == major * v + minor).all()
+    ma, mi = ax.unflatten(key)
+    np.testing.assert_array_equal(np.asarray(ma), major)
+    np.testing.assert_array_equal(np.asarray(mi), minor)
 
 
 @settings(max_examples=30)

@@ -1,17 +1,23 @@
-"""Lane-batched serving tests (ISSUE 4).
+"""Batch-axis serving tests (ISSUE 4 lanes + ISSUE 5 graph batches).
 
-Three layers:
+Four layers:
 
-* the lane-parity matrix — ``multi_source_*`` with L lanes must equal L
-  looped single-query runs bit-for-bit (float ``add`` to rounding) on
-  every commit backend including ``auto``, and the 1-shard
+* the QueryLanes parity matrix — ``multi_source_*`` with L lanes must
+  equal L looped single-query runs bit-for-bit (float ``add`` to
+  rounding) on every commit backend including ``auto``, and the 1-shard
   ``run_distributed`` lane path must match the single-shard fused loops
   (the 8-device version lives in tests/test_distributed.py under the
   ``slow`` marker);
-* the GraphService batching layer — admission, lane-ladder padding,
-  in-flight dedup, result cache, telemetry counters;
-* the satellites — persistent autotune calibration cache and
-  ``capacity="auto"`` overflow-feedback sizing.
+* the GraphBatch parity matrix — ``batched_over_graphs_*`` for all SIX
+  algorithms (including coloring and Boruvka, which have no lane form)
+  must equal the looped single-graph runs on every backend, single-shard
+  and through the 1-device ``run_distributed`` union path;
+* the GraphService batching layer — admission/axis choice, per-axis
+  ladder padding, in-flight dedup, result cache, re-registration
+  invalidation, telemetry counters;
+* the satellites — per-op/axis-width autotune calibration keys, the
+  persistent calibration cache, and ``capacity="auto"``
+  overflow-feedback sizing.
 """
 import dataclasses
 import json
@@ -22,10 +28,16 @@ import numpy as np
 import pytest
 
 from repro.core import autotune as AT
-from repro.core.commit import BACKENDS, CommitSpec, commit, commit_lanes
-from repro.core.messages import lane_messages, make_messages
-from repro.graphs.generators import erdos_renyi, kronecker, random_weights
+from repro.core.commit import (BACKENDS, CommitSpec, commit, commit_batched,
+                               commit_lanes)
+from repro.core.coalescing import GraphBatch, QueryLanes
+from repro.core.messages import batch_messages, lane_messages, make_messages
+from repro.graphs.csr import GraphSet
+from repro.graphs.generators import (erdos_renyi, grid2d, kronecker,
+                                     random_weights)
 from repro.graphs.algorithms import bfs as B
+from repro.graphs.algorithms import boruvka as BO
+from repro.graphs.algorithms import coloring as CO
 from repro.graphs.algorithms import pagerank as PR
 from repro.graphs.algorithms import sssp as S
 from repro.graphs.algorithms import stconn as ST
@@ -194,6 +206,131 @@ def test_multi_source_distributed_matches_single_shard_1dev():
 
 
 # ---------------------------------------------------------------------------
+# the GraphBatch parity matrix: one fused wave over G graphs == G loops
+# (the QueryLanes half of the 6-alg x backend x axis matrix is the
+# multi_source_* section above; coloring/Boruvka exist only on this axis)
+# ---------------------------------------------------------------------------
+
+
+def _tenant_graphs(weighted: bool = False):
+    """Four heterogeneous tenants: power-law, uniform, lattice, denser
+    power-law — different V, E, degree regimes."""
+    gs = [kronecker(5, 4, seed=1), erdos_renyi(50, 3.0, seed=2),
+          grid2d(6), kronecker(6, 3, seed=7)]
+    if weighted:
+        gs = [random_weights(g, seed=i) for i, g in enumerate(gs)]
+    return gs
+
+
+GB_ALGS = ("bfs", "sssp", "ppr", "stconn", "coloring", "boruvka")
+
+
+def _assert_graph_batch_parity(alg: str, backend: str, mesh=None):
+    spec = CommitSpec(backend=backend, stats=False)
+    kw = {} if mesh is None else dict(mesh=mesh, capacity=64,
+                                      max_subrounds=256)
+    graphs = _tenant_graphs(weighted=alg in ("sssp", "boruvka"))
+    gs = GraphSet(graphs)
+    srcs = [0, 3, 5, 1]
+    tag = f"{alg}/{backend}"
+    if alg == "bfs":
+        rows = B.batched_over_graphs_bfs(gs, srcs, spec=spec, **kw)
+        for i, (g, s) in enumerate(zip(graphs, srcs)):
+            np.testing.assert_array_equal(
+                np.asarray(rows[i]), np.asarray(B.bfs(g, s, spec=spec).dist),
+                err_msg=f"{tag} graph {i}")
+    elif alg == "sssp":
+        rows = S.batched_over_graphs_sssp(gs, srcs, spec=spec, **kw)
+        for i, (g, s) in enumerate(zip(graphs, srcs)):
+            np.testing.assert_array_equal(
+                np.asarray(rows[i]), np.asarray(S.sssp(g, s, spec=spec)[0]),
+                err_msg=f"{tag} graph {i}")
+    elif alg == "ppr":
+        rows = PR.batched_over_graphs_pagerank(gs, srcs, iters=5, spec=spec,
+                                               **kw)
+        for i, (g, s) in enumerate(zip(graphs, srcs)):
+            ref, _ = PR.personalized_pagerank(g, s, iters=5, spec=spec)
+            # float add: the fused commit reorders each graph's
+            # accumulate like any transaction-size change
+            np.testing.assert_allclose(np.asarray(rows[i]), np.asarray(ref),
+                                       atol=1e-6, err_msg=f"{tag} graph {i}")
+    elif alg == "stconn":
+        ts = [7, 7, 0, 0]
+        found = ST.batched_over_graphs_stconn(gs, srcs, ts, spec=spec, **kw)
+        for i, (g, s, t) in enumerate(zip(graphs, srcs, ts)):
+            one, _ = ST.st_connectivity(g, s, t, spec=spec)
+            ref = ST.st_reference(g, s, t)
+            assert bool(found[i]) == bool(one) == ref, (tag, i)
+    elif alg == "coloring":
+        colors, _, not_conv = CO.batched_over_graphs_coloring(
+            gs, seed=0, spec=spec, **kw)
+        for i, g in enumerate(graphs):
+            c1, _, nc1 = CO.coloring(g, seed=0, spec=spec)
+            np.testing.assert_array_equal(np.asarray(colors[i]),
+                                          np.asarray(c1),
+                                          err_msg=f"{tag} graph {i}")
+            assert bool(not_conv[i]) == bool(nc1), (tag, i)
+            assert CO.validate_coloring(g, colors[i]), (tag, i)
+    else:   # boruvka
+        out, _ = BO.batched_over_graphs_boruvka(gs, spec=spec, **kw)
+        for i, g in enumerate(graphs):
+            comp1, w1, ne1, _ = BO.boruvka(g, spec=spec)
+            comp, w, ne = out[i]
+            np.testing.assert_array_equal(np.asarray(comp),
+                                          np.asarray(comp1),
+                                          err_msg=f"{tag} graph {i}")
+            assert float(w) == float(w1) and int(ne) == int(ne1), (tag, i)
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+@pytest.mark.parametrize("alg", GB_ALGS)
+def test_batched_over_graphs_parity_matrix(alg, backend):
+    """All six algorithms x every backend (incl. auto): each batched
+    element bit-identical to its unbatched run (ppr to float-add
+    rounding)."""
+    _assert_graph_batch_parity(alg, backend)
+
+
+@pytest.mark.parametrize("alg", GB_ALGS)
+def test_batched_over_graphs_distributed_1dev(alg):
+    """The mesh= union path on a 1-device run_distributed (capacity 64
+    forces sub-round requeue of the flat-keyed messages); the 8-device
+    version lives in tests/test_distributed.py under `slow`."""
+    from repro.launch.mesh import make_host_mesh
+    _assert_graph_batch_parity(alg, "coarse", mesh=make_host_mesh(1, 1))
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_graph_batch_commit_equals_per_graph_commits(backend):
+    """commit_batched over GraphBatch flat keys == per-graph commits,
+    every backend — the axis-level disjointness argument itself."""
+    rng = np.random.default_rng(1)
+    sizes = (17, 33, 8)
+    ax = GraphBatch(sizes=sizes)
+    states = [jnp.asarray(rng.integers(0, 1000, s), jnp.int32)
+              for s in sizes]
+    n = 60
+    major = jnp.asarray(rng.integers(0, len(sizes), n), jnp.int32)
+    minor = jnp.asarray([rng.integers(0, sizes[m]) for m in
+                         np.asarray(major)], jnp.int32)
+    val = jnp.asarray(rng.integers(-50, 50, n), jnp.int32)
+    valid = jnp.asarray(rng.random(n) < 0.8)
+    spec = CommitSpec(backend=backend)
+    msgs = batch_messages(ax, major, minor, val, valid)
+    res = commit_batched(jnp.concatenate(states), msgs, "min", spec,
+                         axis=ax)
+    offs = ax.offsets
+    for gi, s in enumerate(sizes):
+        mask = np.asarray(major) == gi
+        ref = commit(states[gi],
+                     make_messages(minor[mask], val[mask], valid[mask]),
+                     "min", spec)
+        np.testing.assert_array_equal(
+            np.asarray(res.state[offs[gi]:offs[gi] + s]),
+            np.asarray(ref.state), err_msg=f"graph {gi} ({backend})")
+
+
+# ---------------------------------------------------------------------------
 # GraphService: admission, lane ladder, dedup, cache
 # ---------------------------------------------------------------------------
 
@@ -344,6 +481,157 @@ def test_service_rejects_unknown_graph_and_pending_result():
         svc.result(t)                        # not drained yet
     svc.drain()
     svc.result(t)
+
+
+def test_service_mixed_axes_routing():
+    """Axis choice at drain: same-graph requests fuse as lanes,
+    same-kind single requests across graphs fuse as a graph batch, and
+    the whole-graph kinds (coloring, mst) ride the graph axis they
+    finally have."""
+    from repro.serve.queries import BfsQuery, ColoringQuery, MstQuery
+    g1, g2, g3 = (kronecker(6, 4, seed=1), erdos_renyi(60, 3.0, seed=2),
+                  kronecker(5, 4, seed=9))
+    svc = _service(max_lanes=4, max_graphs=4)
+    for gid, g in (("a", g1), ("b", g2), ("c", g3)):
+        svc.register_graph(gid, g)
+    ta = [svc.submit("a", BfsQuery(s)) for s in (0, 1, 2)]   # lane wave
+    tb = svc.submit("b", BfsQuery(5))                        # graph batch
+    tc = svc.submit("c", BfsQuery(7))
+    tcol = [svc.submit(gid, ColoringQuery()) for gid in ("a", "b", "c")]
+    tmst = svc.submit("b", MstQuery())
+    svc.drain()
+    assert svc.stats.waves == 1                  # bfs{a x3} as lanes
+    assert svc.stats.graph_waves == 3            # bfs{b,c}, coloring, mst
+    assert svc.stats.graphs_padded == 1          # coloring 3 -> ladder 4
+    for t, s in zip(ta, (0, 1, 2)):
+        np.testing.assert_array_equal(
+            np.asarray(svc.result(t)),
+            np.asarray(B.bfs(g1, s, spec=svc.spec).dist))
+    np.testing.assert_array_equal(
+        np.asarray(svc.result(tb)),
+        np.asarray(B.bfs(g2, 5, spec=svc.spec).dist))
+    np.testing.assert_array_equal(
+        np.asarray(svc.result(tc)),
+        np.asarray(B.bfs(g3, 7, spec=svc.spec).dist))
+    for t, g in zip(tcol, (g1, g2, g3)):
+        c1, _, _ = CO.coloring(g, seed=0)
+        np.testing.assert_array_equal(np.asarray(svc.result(t)),
+                                      np.asarray(c1))
+    comp, w, ne = svc.result(tmst)
+    bcomp, bw, bne, _ = BO.boruvka(g2)
+    np.testing.assert_array_equal(np.asarray(comp), np.asarray(bcomp))
+    assert float(w) == float(bw) and int(ne) == int(bne)
+
+
+def test_service_graph_ladder_and_chunking():
+    """> max_graphs single-query tenants chunk into several graph waves,
+    each padded up the graph ladder; results stay per-tenant correct."""
+    from repro.serve.queries import BfsQuery
+    graphs = [kronecker(5, 4, seed=i) for i in range(5)]
+    svc = _service(max_graphs=2)
+    for i, g in enumerate(graphs):
+        svc.register_graph(i, g)
+    tickets = [svc.submit(i, BfsQuery(0)) for i in range(5)]
+    svc.drain()
+    assert svc.stats.graph_waves == 3            # 2 + 2 + 1
+    assert svc.stats.graphs_batched == 5 and svc.stats.graphs_padded == 0
+    for i, t in enumerate(tickets):
+        np.testing.assert_array_equal(
+            np.asarray(svc.result(t)),
+            np.asarray(B.bfs(graphs[i], 0, spec=svc.spec).dist))
+    with pytest.raises(ValueError):
+        _service(max_graphs=3)
+
+
+def test_service_reregister_invalidates_cache_and_inflight():
+    """The re-registration bugfix: different topology under the same
+    graph_id must never serve answers computed on the old graph —
+    cached rows are purged, queued tickets void (KeyError), and
+    same-topology re-registration keeps the cache warm."""
+    from repro.serve.queries import BfsQuery
+    g_old = kronecker(6, 4, seed=1)
+    g_new = kronecker(6, 4, seed=42)             # same V, different edges
+    svc = _service(max_lanes=2)
+    svc.register_graph("g", g_old)
+    svc.run("g", [BfsQuery(0)])                  # populates the cache
+    t_inflight = svc.submit("g", BfsQuery(3))    # queued, not drained
+    svc.register_graph("g", g_new)
+    assert svc.stats.invalidated == 1
+    with pytest.raises(KeyError):
+        svc.result(t_inflight)                   # voided forever
+    t = svc.submit("g", BfsQuery(0))             # would have been a stale hit
+    assert svc.stats.cache_hits == 0
+    svc.drain()
+    np.testing.assert_array_equal(
+        np.asarray(svc.result(t)),
+        np.asarray(B.bfs(g_new, 0, spec=svc.spec).dist))
+    svc.register_graph("g", g_new)               # same topology: no purge
+    svc.submit("g", BfsQuery(0))
+    assert svc.stats.cache_hits == 1 and svc.stats.invalidated == 1
+
+
+# ---------------------------------------------------------------------------
+# satellite: per-op / axis-width calibration keys
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_calibration_is_per_op(tmp_path, monkeypatch):
+    """`add` (MXU path) and vector payloads get their own affine fits:
+    the fit cache — in-memory and on disk — is keyed by (op, payload
+    dtype, payload width), not just the knob set."""
+    monkeypatch.setenv(AT._CACHE_ENV, str(tmp_path / "c.json"))
+    t = AT.AutoTuner(ns=(4, 16), v_cal=256, repeats=1, warmup=0)
+    base = dict(sort=True, stats=False, tile_m=64, block_v=128,
+                interpret=None, with_pallas=False)
+    c_min = t.calibrate(**base)
+    c_add = t.calibrate(op="add", dtype=jnp.float32, **base)
+    c_vec = t.calibrate(op="add", dtype=jnp.float32, width=4, **base)
+    assert c_min is not c_add and c_add is not c_vec
+    keys = list(json.loads((tmp_path / "c.json").read_text())["entries"])
+    assert len(keys) == 3
+    assert any("op=add|dtype=float32|w=1" in k for k in keys)
+    assert any("op=add|dtype=float32|w=4" in k for k in keys)
+    assert any("op=min|dtype=int32|w=1" in k for k in keys)
+
+
+def test_autotune_race_key_records_axis_width(tmp_path, monkeypatch):
+    """The race is re-run (and cached) per batch-axis width: a fused
+    8-wide wave must not inherit the width-1 sort-vs-scatter verdict."""
+    monkeypatch.setenv(AT._CACHE_ENV, str(tmp_path / "c.json"))
+    t = AT.AutoTuner(ns=(4, 16), v_cal=256, repeats=1, warmup=0)
+    base = dict(sort=True, stats=False, tile_m=64, block_v=128,
+                interpret=None)
+    finalists = {"coarse": None, "atomic": None}
+    w1 = t.race(finalists, 64, **base)
+    w8 = t.race(finalists, 64, axis_width=8, **base)
+    assert w1 in finalists and w8 in finalists
+    race_keys = [k for k in t._cache if k[0] == "race"]
+    assert len(race_keys) == 2               # distinct cache rows per width
+    dkeys = list(json.loads((tmp_path / "c.json").read_text())["entries"])
+    assert any("|aw=1|" in k for k in dkeys)
+    assert any("|aw=8|" in k for k in dkeys)
+
+
+def test_policy_for_reads_payload_dtype_and_width():
+    """policy_for must hand the tuner the payload's op/dtype/width so
+    vector-payload callers calibrate their own workload."""
+    state = jnp.zeros((64, 4), jnp.float32)
+    msgs = make_messages(jnp.asarray([1, 2], jnp.int32),
+                         jnp.zeros((2, 4), jnp.float32))
+    monkey_calls = {}
+    tuner = AT.AutoTuner(ns=(4, 16), v_cal=256, repeats=1, warmup=0)
+    orig = tuner.policy
+
+    def spy(spec, **kw):
+        monkey_calls.update(kw)
+        return orig(spec, **kw)
+
+    tuner.policy = spy
+    AT.policy_for(CommitSpec(backend="auto"), state, msgs, op="add",
+                  tuner=tuner, axis_width=3)
+    assert monkey_calls["op"] == "add"
+    assert jnp.dtype(monkey_calls["dtype"]) == jnp.float32
+    assert monkey_calls["width"] == 4 and monkey_calls["axis_width"] == 3
 
 
 # ---------------------------------------------------------------------------
