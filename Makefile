@@ -14,7 +14,7 @@ export PYTHONPATH := src
 TIER2_XLA := --xla_cpu_multi_thread_eigen=false
 TIER2_ENV := REPRO_XLA_EXTRA="$(TIER2_XLA)" PYTHONHASHSEED=0
 
-.PHONY: tier1 tier2 test bench bench-json bench-serve
+.PHONY: tier1 tier2 test bench bench-json bench-serve bench-crash
 
 tier1:
 	$(PY) -m pytest -x -q -m "not slow"
@@ -32,10 +32,16 @@ bench:
 # tests/test_autotune.py), auto-diffed against the most recent previous
 # BENCH_*.json; serve rows cover BOTH batch axes (L= lanes, G= graphs)
 bench-json:
-	$(PY) -m benchmarks.run --json BENCH_pr5.json --sizes tiny
+	$(PY) -m benchmarks.run --json BENCH_pr6.json --sizes tiny
 
 # serving throughput/latency: batch-axis GraphService QPS + p50/p99 vs
 # the sequential query-at-a-time loop (lane axis by default; add
 # `--axis graphs` for the tenant-graph axis)
 bench-serve:
 	$(PY) -m benchmarks.serve_qps
+
+# durability: supervised service snapshots warm, crashes mid-drain,
+# restores (snapshot + WAL replay) and finishes the workload — restore
+# latency + recovery QPS rows merge into the persistent trajectory
+bench-crash:
+	$(PY) -m benchmarks.serve_qps --crash-resume --json BENCH_pr6.json

@@ -284,6 +284,135 @@ def sweep_graphs(kinds, counts, *, scale: int, backend: str | None = None,
     return out
 
 
+# ---------------------------------------------------------------------------
+# Crash-resume: kill mid-drain, restore from snapshot, finish the workload
+# ---------------------------------------------------------------------------
+
+
+def crash_resume(kinds=("bfs", "ppr"), *, scale: int = 8, queries: int = 32,
+                 lanes: int = 8, crash_at: float = 0.5,
+                 backend: str | None = None, seed: int = 0,
+                 ckpt_dir: str | None = None):
+    """The durability benchmark: a supervised service snapshots warm,
+    takes the full workload (journaled tickets), crashes at
+    ``crash_at`` of the way through its drain waves, restores, and
+    finishes.  Reports restore latency and post-restore recovery QPS,
+    and checks the recovered answers bit-match an uninterrupted
+    service's.  Returns [{kind, restore_ms, recovery_qps, ...}] rows
+    for the persistent bench trajectory."""
+    import shutil
+    import tempfile
+
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.graphs.generators import kronecker, random_weights
+    from repro.serve.durable import ServiceSupervisor
+
+    g = kronecker(scale, 8, seed=seed)
+    if "sssp" in kinds:
+        g = random_weights(g, seed=seed + 1)
+    rng = np.random.default_rng(seed)
+    sources = rng.choice(g.num_vertices, queries, replace=False)
+    extra = rng.choice(g.num_vertices, queries, replace=False)
+    base_dir = ckpt_dir or tempfile.mkdtemp(prefix="aam_crash_bench_")
+    rows = []
+    try:
+        for kind in kinds:
+            qs = _queries(kind, sources, extra)
+            # the uninterrupted reference (also warms jit/calibration)
+            ref = GraphService(max_lanes=lanes, cache=False,
+                               spec=_spec(backend))
+            ref.register_graph("g", g)
+            ref_rows = ref.run("g", qs)
+            svc = GraphService(max_lanes=lanes, cache=False,
+                               spec=_spec(backend))
+            svc.register_graph("g", g)
+            sup = ServiceSupervisor(
+                svc, Checkpointer(f"{base_dir}/{kind}"),
+                log=lambda *_: None)
+            sup.save()                      # snapshot the warm service
+            tickets = [sup.submit("g", q) for q in qs]
+            n_waves = max(-(-len(qs) // lanes), 1)
+            kill_at = min(int(n_waves * crash_at), n_waves - 1)
+
+            def injector(where, i, kill_at=kill_at):
+                if i == kill_at:
+                    raise RuntimeError("injected host loss")
+
+            svc.fault_injector = injector
+            try:
+                svc.drain()
+                raise AssertionError("injector never fired")
+            except RuntimeError:
+                pass                        # the crash
+            t0 = time.perf_counter()
+            restored = sup.restore()        # snapshot + WAL replay
+            restore_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            restored.drain()
+            out = [restored.result(t) for t in tickets]
+            jax.block_until_ready(
+                [x for r in out
+                 for x in (r if isinstance(r, tuple) else (r,))
+                 if not isinstance(x, bool)])
+            recover_s = time.perf_counter() - t0
+            rows.append({
+                "kind": kind, "lanes": lanes, "queries": len(qs),
+                "crash_wave": kill_at,
+                "restore_ms": round(restore_s * 1e3, 2),
+                "recovery_qps": round(len(qs) / recover_s, 1),
+                "recovery_s": round(recover_s, 4),
+                "timing_runs_post_restore": restored.stats.timing_runs,
+                "tickets_recovered": len(out) == len(tickets),
+                "correct": _same(kind, ref_rows, out),
+            })
+    finally:
+        if ckpt_dir is None:
+            shutil.rmtree(base_dir, ignore_errors=True)
+    return rows
+
+
+def _crash_rows_to_json(rows, json_path: str) -> None:
+    """Land the crash-resume rows in the persistent ``aam-bench/v1``
+    trajectory: merge into ``json_path`` if it exists (replacing any
+    previous crash rows), create a minimal doc otherwise."""
+    import json
+    import os
+    doc = None
+    if os.path.exists(json_path):
+        try:
+            with open(json_path) as f:
+                doc = json.load(f)
+            if doc.get("schema") != "aam-bench/v1":
+                doc = None
+        except (OSError, ValueError):
+            doc = None
+    if doc is None:
+        doc = {"schema": "aam-bench/v1", "sizes": "crash",
+               "platform": jax.default_backend(), "rows": [],
+               "summary": {}}
+    doc["rows"] = [r for r in doc.get("rows", [])
+                   if r.get("suite") != "crash"]
+    for r in rows:
+        doc["rows"].append({
+            "suite": "crash", "backend": "auto",
+            "name": f"crash/{r['kind']}/restore",
+            "us_per_call": round(r["restore_ms"] * 1e3, 1),
+            "derived": f"recovery_qps={r['recovery_qps']} "
+                       f"crash_wave={r['crash_wave']} "
+                       f"recovered={r['tickets_recovered']} "
+                       f"correct={r['correct']} "
+                       f"timing_runs={r['timing_runs_post_restore']}"})
+    doc.setdefault("summary", {})["crash"] = {
+        r["kind"]: {"restore_ms": r["restore_ms"],
+                    "recovery_qps": r["recovery_qps"],
+                    "recovered": r["tickets_recovered"],
+                    "correct": r["correct"]}
+        for r in rows}
+    with open(json_path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+
+
 def main(kinds=("bfs", "ppr"), lanes=(1, 2, 4, 8), scale: int = 8,
          queries: int = 32, backend: str | None = None,
          axis: str = "lanes", graphs=(1, 2, 4, 8)):
@@ -326,7 +455,33 @@ if __name__ == "__main__":
     ap.add_argument("--graphs", default="1,2,4,8")
     ap.add_argument("--scale", type=int, default=8)
     ap.add_argument("--queries", type=int, default=32)
+    ap.add_argument("--crash-resume", action="store_true",
+                    help="durability mode: snapshot, crash mid-drain, "
+                         "restore, finish; reports restore latency and "
+                         "recovery QPS")
+    ap.add_argument("--crash-at", type=float, default=0.5,
+                    help="fraction of drain waves before the injected "
+                         "crash (default 0.5)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="with --crash-resume: merge the crash rows "
+                         "into this aam-bench/v1 trajectory file")
     args = ap.parse_args()
+    if args.crash_resume:
+        kinds = tuple((args.kinds or "bfs,ppr").split(","))
+        lane = max(int(x) for x in args.lanes.split(","))
+        rows = crash_resume(kinds, scale=args.scale, queries=args.queries,
+                            lanes=lane, crash_at=args.crash_at,
+                            backend=args.backend)
+        for r in rows:
+            assert r["tickets_recovered"], (r["kind"], "lost tickets")
+            assert r["correct"], (r["kind"], "recovered answers diverged")
+            emit(f"crash/{r['kind']}/restore", r["restore_ms"] / 1e3,
+                 f"recovery_qps={r['recovery_qps']} "
+                 f"crash_wave={r['crash_wave']} "
+                 f"timing_runs={r['timing_runs_post_restore']}")
+        if args.json:
+            _crash_rows_to_json(rows, args.json)
+        raise SystemExit(0)
     kinds = args.kinds or ("bfs,coloring" if args.axis == "graphs"
                            else "bfs,ppr")
     main(kinds=tuple(kinds.split(",")),

@@ -177,6 +177,9 @@ class AutoTuner:
         self.repeats = repeats
         self._cache: dict = {}
         self._disk: dict | None = None      # lazy-loaded JSON entries
+        # timed micro-benchmark invocations this process — a restored
+        # warm service asserts this stays flat (zero recalibration)
+        self.timed_runs = 0
 
     # -- persistent cache -------------------------------------------------
 
@@ -195,11 +198,14 @@ class AutoTuner:
         return self._disk
 
     def _disk_put(self, key: str, value) -> None:
+        # the in-memory entry dict is ALWAYS updated (it is what
+        # export_entries snapshots), even when no cache file is
+        # configured — only the file write is conditional
+        entries = self._disk_entries()
+        entries[key] = value
         p = _cache_path()
         if p is None:
             return
-        entries = self._disk_entries()
-        entries[key] = value
         try:
             tmp = f"{p}.tmp.{os.getpid()}"
             with open(tmp, "w") as f:
@@ -209,6 +215,20 @@ class AutoTuner:
             os.replace(tmp, p)               # atomic vs concurrent readers
         except OSError:
             pass                             # read-only cwd = no cache
+
+    def export_entries(self) -> dict:
+        """Every calibration fit and race verdict this tuner knows, in
+        the portable JSON disk-cache format (:data:`CACHE_SCHEMA`
+        entries) — what a service snapshot persists."""
+        return dict(self._disk_entries())
+
+    def import_entries(self, entries: dict) -> None:
+        """Warm this tuner from exported entries (snapshot restore).
+        Entries already measured in this process win — imports only fill
+        gaps, so a restore can never clobber fresher local fits."""
+        mine = self._disk_entries()
+        for k, v in dict(entries).items():
+            mine.setdefault(k, v)
 
     def _knob_key(self, *, sort, stats, tile_m, block_v, interpret,
                   op="min", dtype=jnp.int32, width=1) -> str:
@@ -226,6 +246,7 @@ class AutoTuner:
 
     def _time(self, fn, *args) -> float:
         import time
+        self.timed_runs += 1
         for _ in range(self.warmup):
             jax.block_until_ready(fn(*args))
         ts = []
@@ -410,6 +431,8 @@ class AutoTuner:
             # deterministic fallback: the paper's default tier (coarse
             # transactions), M* at the Fig-4 sweet spot bounded by n
             m_star = min(1024, 1 << max(n - 1, 1).bit_length())
+            if spec.m is None and spec.seed_m is not None:
+                m_star = spec.seed_m or n   # 0 = whole batch
             backend = "coarse"
         else:
             cal = self.calibrate(with_pallas=pallas_ok, **base, **wl)
@@ -422,6 +445,8 @@ class AutoTuner:
                     return None
                 if spec.m is not None:
                     return spec.m
+                if spec.seed_m is not None:
+                    return spec.seed_m or None   # 0 = whole batch
                 f = cal.tier(b) or cal.tiers[0][1]
                 return perf_model.select_m(cal.fine, f, cap=cap)
 

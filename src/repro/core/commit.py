@@ -86,6 +86,11 @@ class CommitSpec:
     tile_m:    pallas transaction tile (used when ``m`` is None).
     block_v:   pallas state block resident in VMEM.
     interpret: force pallas interpret mode; ``None`` = off-TPU auto.
+    seed_m:    warm-start hint for ``backend="auto"``: seed the
+               conflict-feedback ladder at this transaction size instead
+               of the calibrated M* (0 = whole batch).  Unlike ``m`` this
+               does NOT pin the size — the ladder still adapts.  Restored
+               services use it to re-enter at the learned level.
 
     Frozen + hashable so a spec can be a ``static_argnames`` entry of any
     jitted caller.
@@ -97,10 +102,14 @@ class CommitSpec:
     tile_m: int = 256
     block_v: int = 512
     interpret: bool | None = None
+    seed_m: int | None = None
 
     def __post_init__(self):
         if self.m is not None and self.m < 1:
             raise ValueError(f"transaction size m must be >= 1, got {self.m}")
+        if self.seed_m is not None and self.seed_m < 0:
+            raise ValueError(f"seed_m must be >= 0 (0 = whole batch), "
+                             f"got {self.seed_m}")
         if self.tile_m < 1 or self.block_v < 1:
             raise ValueError(f"tile_m/block_v must be >= 1, got "
                              f"{self.tile_m}/{self.block_v}")

@@ -453,6 +453,144 @@ class DistributedResult:
     #                         (0 = whole batch, -1 = static spec, no tuner)
     capacity: jax.Array     # int32 — the coalescing factor C the run used
     #                         (resolved value when capacity="auto")
+    degraded: jax.Array = None  # bool — True when the run survived a mesh
+    #                         shrink (host drop) by re-deriving ownership
+    #                         and replaying from the last round snapshot
+
+
+class _Runner:
+    """One compiled round-loop over one mesh shape.
+
+    Owns the partition, layout, calibrated tuner policy, and the jitted
+    shard_map'd loop body for a fixed (mesh, P).  The loop carry
+    ``(conflicts, subrounds, delivered_all, level, it, active)`` enters
+    and leaves as replicated scalars, and the round cap is a TRACED
+    ``limit`` — so the same compiled function serves both the single-shot
+    path (limit = max_rounds) and the chunked/degraded path (limit = next
+    snapshot boundary), and a degraded continuation re-enters mid-run.
+    """
+
+    def __init__(self, alg: AlgorithmSpec, mesh, g, *, axis: str,
+                 capacity: int, m, spec, batch, max_subrounds: int,
+                 edges=None):
+        from jax.sharding import PartitionSpec as Ps
+        from repro.graphs.csr import partition_edges
+
+        self.P = mesh.shape[axis]
+        self.mesh = mesh
+        if edges is None:
+            edges = partition_edges(g, self.P)
+        (src, dst, w, val, eid), part = edges
+        self.arrays = (src, dst, w, val, eid)
+        self.layout = ShardLayout(self.P, part.block, src.shape[1],
+                                  g.num_vertices, g.num_edges)
+        ecfg = EngineConfig(self.P, part.block, capacity, axis=axis, m=m,
+                            spec=spec, batch=batch)
+        self.state0, self.scalars0 = alg.init(g, self.layout)
+        self.tuner = None
+        if ecfg.commit_spec.backend == C.AUTO:
+            # stage-1 calibration BEFORE tracing: per-shard commits see a
+            # [block] state slice and up to P*C routed messages/sub-round
+            leaf = jax.tree_util.tree_leaves(self.state0)[0]
+            self.tuner = AT.policy_for(
+                ecfg.commit_spec,
+                jax.ShapeDtypeStruct((part.block,), leaf.dtype),
+                n=min(self.P * capacity, g.num_edges or 1),
+                axis_width=batch.race_width if batch is not None else 1)
+            ecfg = dataclasses.replace(ecfg, spec=None, tuner=self.tuner)
+        self.max_rounds = int(alg.max_rounds(g, self.layout))
+        tuner = self.tuner
+
+        def shard_fn(state, scalars, carry, limit,
+                     src_l, dst_l, w_l, val_l, eid_l):
+            shard = jax.lax.axis_index(axis)
+            edges = EdgeSlice(
+                src=src_l[0], dst=dst_l[0], weight=w_l[0], valid=val_l[0],
+                eid=eid_l[0],
+                my_src=jnp.clip(src_l[0] - shard * part.block, 0,
+                                part.block - 1))
+
+            def cond(c):
+                return c[-1] & (c[-2] < limit)
+
+            def body(c):
+                state, scalars, conflicts, subrounds, dall, level, it, _ = c
+                rt = WaveRuntime(ecfg, self.layout, max_subrounds,
+                                 level=level)
+                state, scalars, active = alg.round_fn(rt, edges, state,
+                                                      scalars, it)
+                if tuner is not None:
+                    # stage-2 feedback: this round's psum'd conflicts vs
+                    # routed messages move the ladder (replicated =>
+                    # every shard steps identically)
+                    level = AT.next_level(tuner, level, rt.conflicts,
+                                          rt.messages)
+                return (state, scalars, conflicts + rt.conflicts,
+                        subrounds + rt.subrounds, dall & rt.delivered_all,
+                        level, it + 1, active)
+
+            out = jax.lax.while_loop(cond, body, (state, scalars) + carry)
+            return out[:2], out[2:]
+
+        st_specs = jax.tree.map(lambda _: Ps(axis), self.state0)
+        sc_specs = jax.tree.map(lambda _: Ps(), self.scalars0)
+        fn = compat.shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(st_specs, sc_specs, (Ps(),) * 6, Ps())
+            + (Ps(axis),) * 5,
+            out_specs=((st_specs, sc_specs), (Ps(),) * 6),
+            check_vma=False)
+        self._jfn = jax.jit(fn)
+
+    def zero_carry(self) -> tuple:
+        z = jnp.zeros((), jnp.int32)
+        level0 = jnp.asarray(self.tuner.init_level if self.tuner else 0,
+                             jnp.int32)
+        return (z, z, jnp.ones((), bool), level0, z, jnp.ones((), bool))
+
+    def run(self, state, scalars, carry, limit: int):
+        (state, scalars), carry = self._jfn(
+            state, scalars, carry, jnp.asarray(limit, jnp.int32),
+            *self.arrays)
+        return state, scalars, carry
+
+    def m_final(self, level) -> jax.Array:
+        if self.tuner is None:
+            return jnp.full((), -1, jnp.int32)
+        ms = jnp.asarray([m or 0 for m in self.tuner.ladder], jnp.int32)
+        return ms[jnp.clip(level, 0, len(self.tuner.ladder) - 1)]
+
+
+def _shrink_mesh(mesh, axis: str, new_size: int):
+    """The surviving sub-mesh after a host drop: slice the device array
+    along ``axis`` (the simulation of 'P-1 hosts remain')."""
+    import numpy as np
+    devs = np.asarray(mesh.devices)
+    sl = [slice(None)] * devs.ndim
+    sl[list(mesh.axis_names).index(axis)] = slice(0, new_size)
+    return jax.sharding.Mesh(devs[tuple(sl)], mesh.axis_names)
+
+
+def _remap_state(alg: AlgorithmSpec, g, old_layout: ShardLayout,
+                 new_layout: ShardLayout, state):
+    """Re-home a round-snapshot state onto a smaller mesh.
+
+    The 1-D partition puts vertex v at GLOBAL index v with padding only at
+    the tail, so vertex-state leaves ([vpad, ...]) carry over by value:
+    a fresh ``alg.init`` on the new layout supplies the canonical padding
+    rows, and the first V rows are overwritten with the snapshot.  Leaves
+    NOT shaped by vpad (per-edge state — the partition order changed under
+    them) cannot be re-homed; returns None => restart from round 0.
+    """
+    V = g.num_vertices
+    fresh, _ = alg.init(g, new_layout)
+    conforms = all(
+        getattr(o, "ndim", 0) >= 1 and o.shape[0] == old_layout.vpad
+        and n.shape[0] == new_layout.vpad and o.shape[1:] == n.shape[1:]
+        for o, n in zip(jax.tree.leaves(state), jax.tree.leaves(fresh)))
+    if not conforms:
+        return None
+    return jax.tree.map(lambda n, o: n.at[:V].set(o[:V]), fresh, state)
 
 
 def run_distributed(alg: AlgorithmSpec, mesh, g, *,
@@ -460,7 +598,10 @@ def run_distributed(alg: AlgorithmSpec, mesh, g, *,
                     m: int | None = None, axis: str = "data",
                     spec: C.CommitSpec | None = None,
                     max_subrounds: int = 64,
-                    edges=None, batch=None) -> DistributedResult:
+                    edges=None, batch=None,
+                    snapshot_rounds: int | None = None,
+                    fault_injector=None,
+                    max_faults: int = 8) -> DistributedResult:
     """Execute ``alg`` over ``mesh[axis]`` shards — the one distributed
     driver behind all six ``distributed_*`` algorithms.
 
@@ -486,8 +627,18 @@ def run_distributed(alg: AlgorithmSpec, mesh, g, *,
     run's default batch axis (``QueryLanes``/``GraphBatch``); waves
     issued without an explicit ``batch=`` use it, and its ``race_width``
     (L lanes / G graphs) keys the tuner's axis-aware race.
+
+    **Degraded-mesh mode.**  ``snapshot_rounds`` chunks the round loop:
+    every chunk boundary the (replicated) carry and global state come
+    back to the host as a round snapshot.  ``fault_injector(chunk,
+    rounds_done)`` raising simulates a host drop — instead of failing the
+    query, the run shrinks the mesh by one device along ``axis``,
+    re-derives the 1-D ownership for the smaller mesh, re-homes the last
+    snapshot onto it (see :func:`_remap_state`; per-edge state restarts
+    from round 0), and finishes there.  ``DistributedResult.degraded``
+    reports it.  With neither parameter set the loop runs single-shot,
+    exactly as before.
     """
-    from jax.sharding import PartitionSpec as Ps
     from repro.graphs.csr import GraphSet, partition_edges
 
     if isinstance(g, GraphSet):
@@ -499,79 +650,53 @@ def run_distributed(alg: AlgorithmSpec, mesh, g, *,
         capacity = auto_capacity(g, P)
     if edges is None:
         edges = partition_edges(g, P)
-    (src, dst, w, val, eid), part = edges
-    layout = ShardLayout(P, part.block, src.shape[1], g.num_vertices,
-                         g.num_edges)
-    ecfg = EngineConfig(P, part.block, capacity, axis=axis, m=m, spec=spec,
-                        batch=batch)
-    state0, scalars0 = alg.init(g, layout)
-    tuner = None
-    if ecfg.commit_spec.backend == C.AUTO:
-        # stage-1 calibration BEFORE tracing: per-shard commits see a
-        # [block] state slice and up to P*C routed messages per sub-round
-        leaf = jax.tree_util.tree_leaves(state0)[0]
-        tuner = AT.policy_for(
-            ecfg.commit_spec, jax.ShapeDtypeStruct((part.block,),
-                                                   leaf.dtype),
-            n=min(P * capacity, g.num_edges or 1),
-            axis_width=batch.race_width if batch is not None else 1)
-        ecfg = dataclasses.replace(ecfg, spec=None, tuner=tuner)
-    max_rounds = int(alg.max_rounds(g, layout))
-
-    def shard_fn(state, scalars, src_l, dst_l, w_l, val_l, eid_l):
-        shard = jax.lax.axis_index(axis)
-        edges = EdgeSlice(
-            src=src_l[0], dst=dst_l[0], weight=w_l[0], valid=val_l[0],
-            eid=eid_l[0],
-            my_src=jnp.clip(src_l[0] - shard * part.block, 0,
-                            part.block - 1))
-        z = jnp.zeros((), jnp.int32)
-        level0 = jnp.asarray(tuner.init_level if tuner else 0, jnp.int32)
-
-        def cond(c):
-            return c[-1] & (c[-2] < max_rounds)
-
-        def body(c):
-            state, scalars, conflicts, subrounds, dall, level, it, _ = c
-            rt = WaveRuntime(ecfg, layout, max_subrounds, level=level)
-            state, scalars, active = alg.round_fn(rt, edges, state, scalars,
-                                                  it)
-            if tuner is not None:
-                # stage-2 feedback: this round's psum'd conflicts vs
-                # routed messages move the ladder (replicated => every
-                # shard steps identically)
-                level = AT.next_level(tuner, level, rt.conflicts,
-                                      rt.messages)
-            return (state, scalars, conflicts + rt.conflicts,
-                    subrounds + rt.subrounds, dall & rt.delivered_all,
-                    level, it + 1, active)
-
-        (state, scalars, conflicts, subrounds, dall, level, rounds, _) = \
-            jax.lax.while_loop(cond, body,
-                               (state, scalars, z, z, jnp.ones((), bool),
-                                level0, z, jnp.ones((), bool)))
-        if tuner is not None:
-            ms = jnp.asarray([m or 0 for m in tuner.ladder], jnp.int32)
-            m_final = ms[jnp.clip(level, 0, len(tuner.ladder) - 1)]
-        else:
-            m_final = jnp.full((), -1, jnp.int32)
-        return state, scalars, conflicts, subrounds, dall, rounds, m_final
-
-    st_specs = jax.tree.map(lambda _: Ps(axis), state0)
-    sc_specs = jax.tree.map(lambda _: Ps(), scalars0)
-    fn = compat.shard_map(
-        shard_fn, mesh=mesh,
-        in_specs=(st_specs, sc_specs) + (Ps(axis),) * 5,
-        out_specs=(st_specs, sc_specs, Ps(), Ps(), Ps(), Ps(), Ps()),
-        check_vma=False)
-    state, scalars, conflicts, subrounds, dall, rounds, m_final = jax.jit(
-        fn)(state0, scalars0, src, dst, w, val, eid)
+    kw = dict(axis=axis, capacity=capacity, m=m, spec=spec, batch=batch,
+              max_subrounds=max_subrounds)
+    r = _Runner(alg, mesh, g, edges=edges, **kw)
+    state, scalars, carry = r.state0, r.scalars0, r.zero_carry()
+    degraded, faults, chunk_i = False, 0, 0
+    chunk = (snapshot_rounds if snapshot_rounds
+             else max(r.max_rounds, 1))
+    snap = (state, scalars, carry)
+    while bool(carry[5]) and int(carry[4]) < r.max_rounds:
+        limit = min(int(carry[4]) + chunk, r.max_rounds)
+        try:
+            if fault_injector is not None:
+                fault_injector(chunk_i, int(carry[4]))
+            state, scalars, carry = r.run(state, scalars, carry, limit)
+            jax.block_until_ready(carry)     # surface device faults HERE
+            snap = (state, scalars, carry)
+        except KeyboardInterrupt:
+            raise
+        except Exception:
+            faults += 1
+            if faults > max_faults:
+                raise
+            degraded = True
+            state, scalars, carry = snap     # last completed chunk
+            if r.P > 1:
+                new_mesh = _shrink_mesh(r.mesh, axis, r.P - 1)
+                old_layout = r.layout
+                r = _Runner(alg, new_mesh, g, **kw)
+                remapped = _remap_state(alg, g, old_layout, r.layout,
+                                        state)
+                if remapped is None:
+                    # per-edge state can't be re-homed: restart the
+                    # query from round 0 on the surviving mesh
+                    state, scalars = r.state0, r.scalars0
+                    carry = r.zero_carry()
+                else:
+                    state = remapped
+            # P == 1: nothing to shrink — retry the snapshot in place
+        chunk_i += 1
+    conflicts, subrounds, dall, level, rounds, _ = carry
     if auto_cap:
         _capacity_feedback(g, P, capacity, int(subrounds), int(rounds))
     return DistributedResult(state=state, scalars=scalars, rounds=rounds,
                              conflicts=conflicts, subrounds=subrounds,
-                             delivered_all=dall, m_final=m_final,
-                             capacity=jnp.asarray(capacity, jnp.int32))
+                             delivered_all=dall, m_final=r.m_final(level),
+                             capacity=jnp.asarray(capacity, jnp.int32),
+                             degraded=jnp.asarray(degraded))
 
 
 # Legacy entry points live with their algorithms now; keep the old import

@@ -116,11 +116,16 @@ def distributed_bfs(mesh, g: Graph, source: int, *,
                     capacity: int | str = 4096,
                     m: int | None = None, axis: str = "data",
                     spec: C.CommitSpec | None = None, max_subrounds: int = 64,
-                    telemetry: bool = False):
+                    telemetry: bool = False,
+                    snapshot_rounds: int | None = None,
+                    fault_injector=None):
     """BFS over a mesh axis — FF&MF ``min`` waves on the shared harness.
 
     Returns (dist [V], rounds); with ``telemetry=True`` returns
-    (dist, DistributedResult)."""
+    (dist, DistributedResult).  ``snapshot_rounds``/``fault_injector``
+    enable the engine's degraded-mesh mode (survive a host drop by
+    shrinking the mesh and replaying the last round snapshot — see
+    :func:`repro.core.engine.run_distributed`)."""
     from repro.core.engine import AlgorithmSpec, run_distributed
 
     def init(g, layout):
@@ -138,7 +143,9 @@ def distributed_bfs(mesh, g: Graph, source: int, *,
     alg = AlgorithmSpec("bfs", "FF&MF", init, round_fn,
                         lambda g, layout: layout.vpad)
     res = run_distributed(alg, mesh, g, capacity=capacity, m=m, axis=axis,
-                          spec=spec, max_subrounds=max_subrounds)
+                          spec=spec, max_subrounds=max_subrounds,
+                          snapshot_rounds=snapshot_rounds,
+                          fault_injector=fault_injector)
     dist = res.state["dist"][:g.num_vertices]
     return (dist, res) if telemetry else (dist, res.rounds)
 
@@ -148,7 +155,9 @@ def distributed_multi_source_bfs(mesh, g: Graph, sources, *,
                                  m: int | None = None, axis: str = "data",
                                  spec: C.CommitSpec | None = None,
                                  max_subrounds: int = 64,
-                                 telemetry: bool = False):
+                                 telemetry: bool = False,
+                                 snapshot_rounds: int | None = None,
+                                 fault_injector=None):
     """Lane-batched BFS over a mesh axis: L queries share every wave.
 
     Vertex state is vertex-major [vpad * L] (all lanes of a vertex live on
@@ -156,7 +165,10 @@ def distributed_multi_source_bfs(mesh, g: Graph, sources, *,
     payload field, and owners commit on composite local keys — the
     distributed mirror of :func:`multi_source_bfs`.  Returns
     (dist [L, V], rounds); ``telemetry=True`` returns the
-    DistributedResult instead of rounds."""
+    DistributedResult instead of rounds.  ``snapshot_rounds``/
+    ``fault_injector`` enable degraded-mesh mode (the vertex-major
+    [vpad*L] state is not vpad-shaped, so a shrink restarts the query
+    from round 0 on the surviving mesh rather than replaying)."""
     from repro.core.coalescing import QueryLanes
     from repro.core.engine import AlgorithmSpec, run_distributed
 
@@ -190,7 +202,9 @@ def distributed_multi_source_bfs(mesh, g: Graph, sources, *,
                         lambda g, layout: layout.vpad)
     res = run_distributed(alg, mesh, g, capacity=capacity, m=m, axis=axis,
                           spec=spec, max_subrounds=max_subrounds,
-                          batch=QueryLanes(lanes, g.num_vertices))
+                          batch=QueryLanes(lanes, g.num_vertices),
+                          snapshot_rounds=snapshot_rounds,
+                          fault_injector=fault_injector)
     dist = res.state["dist"].reshape(-1, lanes).T[:, :g.num_vertices]
     return (dist, res) if telemetry else (dist, res.rounds)
 

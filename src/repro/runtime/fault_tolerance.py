@@ -1,14 +1,19 @@
-"""Fault tolerance: supervised train loop with checkpoint/restart, straggler
-watchdog, and failure injection (for tests).
+"""Fault tolerance: supervised restart/replay over a Checkpointer, a
+straggler watchdog, and failure injection (for tests).
 
-On a real fleet the supervisor wraps per-step execution; a host failure
-surfaces as an exception (collective timeout / halted device) → restore
-from the last committed checkpoint and replay.  The data pipeline is
-step-indexed (repro.data.pipeline), so replay is exact.  The watchdog
-implements the paper-adjacent straggler story at the system level: step
-times exceeding ``threshold ×`` a running median are flagged; the fleet
-hook (``on_straggler``) would evict/reshuffle the slow host — here it
-feeds metrics and tests.
+On a real fleet a supervisor wraps per-unit-of-work execution; a host
+failure surfaces as an exception (collective timeout / halted device) →
+restore from the last committed checkpoint and replay.  The restart
+accounting and budget live in the generic :class:`Supervisor`;
+:class:`TrainSupervisor` (step-indexed train loop — the data pipeline in
+repro.data.pipeline is step-indexed, so replay is exact) and
+``repro.serve.durable.ServiceSupervisor`` (ticket-journaled query
+service) both subclass it.
+
+The watchdog implements the paper-adjacent straggler story at the system
+level: step times exceeding ``threshold ×`` a running median are flagged;
+the fleet hook (``on_straggler``) would evict/reshuffle the slow host —
+here it feeds metrics and tests.
 """
 from __future__ import annotations
 
@@ -53,7 +58,36 @@ class StragglerWatchdog:
         return flagged
 
 
-class TrainSupervisor:
+class Supervisor:
+    """Restart/replay core shared by the train loop and the query
+    service: counts faults against a restart budget and resolves which
+    committed step to restore from.  Subclasses own the work loop and
+    what "replay" means (step-indexed batches vs journaled tickets)."""
+
+    def __init__(self, ckpt: Checkpointer, *, max_restarts: int = 10):
+        self.ckpt = ckpt
+        self.max_restarts = max_restarts
+        self.restarts = 0
+
+    def recover_step(self, exc: BaseException, *, what: str = "work",
+                     log=print) -> int:
+        """Account one fault.  Raises if the restart budget is exhausted
+        or there is nothing committed to restore from; otherwise returns
+        the step to restore (after draining any in-flight async save)."""
+        self.restarts += 1
+        if self.restarts > self.max_restarts:
+            raise RuntimeError(
+                f"exceeded {self.max_restarts} restarts") from exc
+        last = self.ckpt.latest_step()
+        log(f"[supervisor] {what} failed ({type(exc).__name__}: {exc}); "
+            f"restoring from {last}")
+        if last is None:
+            raise exc
+        self.ckpt.wait()
+        return last
+
+
+class TrainSupervisor(Supervisor):
     """Run a step function with periodic async checkpoints and
     restore-on-failure.  ``fail_injector(step)`` raising simulates a node
     loss (tests); any exception triggers restore + replay."""
@@ -61,17 +95,21 @@ class TrainSupervisor:
     def __init__(self, ckpt: Checkpointer, *, save_every: int = 50,
                  max_restarts: int = 10,
                  watchdog: StragglerWatchdog | None = None):
-        self.ckpt = ckpt
+        super().__init__(ckpt, max_restarts=max_restarts)
         self.save_every = save_every
-        self.max_restarts = max_restarts
         self.watchdog = watchdog or StragglerWatchdog()
-        self.restarts = 0
 
     def run(self, state: Any, step_fn, data_fn, *, start_step: int,
             num_steps: int, fail_injector=None, log_every: int = 10,
             log=print) -> tuple[Any, int, list]:
         """state: pytree; step_fn(state, step, batch) -> (state, metrics).
         Returns (state, final_step, metric_log)."""
+        import jax
+        # Pristine restore template captured BEFORE any step runs: after
+        # a fault the in-flight ``state`` may hold corrupted buffers
+        # (NaN-poisoned or halted-device arrays) — restore must only
+        # depend on its shapes/dtypes, never its values.
+        template = jax.eval_shape(lambda: state)
         metrics_log = []
         step = start_step
         while step < num_steps:
@@ -95,17 +133,8 @@ class TrainSupervisor:
             except KeyboardInterrupt:
                 raise
             except Exception as e:  # noqa: BLE001 — any fault → restart
-                self.restarts += 1
-                if self.restarts > self.max_restarts:
-                    raise RuntimeError(
-                        f"exceeded {self.max_restarts} restarts") from e
-                last = self.ckpt.latest_step()
-                log(f"[supervisor] step {step} failed ({type(e).__name__}: "
-                    f"{e}); restoring from {last}")
-                if last is None:
-                    raise
-                self.ckpt.wait()
-                state, step = self.ckpt.restore(state)
+                self.recover_step(e, what=f"step {step}", log=log)
+                state, step = self.ckpt.restore(template)
         self.ckpt.wait()
         self.ckpt.save(num_steps, state, blocking=True)
         return state, step, metrics_log

@@ -49,6 +49,7 @@ from typing import Any
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import autotune as AT
 from repro.core import commit as C
 from repro.serve.queries import (BfsQuery, PprQuery, SsspQuery, StConnQuery,
                                  ColoringQuery, MstQuery, QUERY_KINDS,
@@ -69,6 +70,8 @@ class ServiceStats:
     graphs_batched: int = 0  # graphs across graph waves (incl. padding)
     graphs_padded: int = 0   # ladder-padding graphs (discarded results)
     invalidated: int = 0     # in-flight tickets voided by re-registration
+    timing_runs: int = 0     # autotune timed micro-benchmarks drains paid
+    #                          (a warm-restored service asserts this stays 0)
 
 
 def _pow2_ladder(width: int) -> tuple:
@@ -158,6 +161,15 @@ class GraphService:
         self._results: dict[int, Any] = {}
         self._cache: dict | None = {} if cache else None
         self._next_ticket = 0
+        # (kind, graph_id) -> last adaptive transaction size M the mesh
+        # harness converged to (0 = whole batch); seeds the next wave's
+        # conflict ladder and rides the service snapshot so a restored
+        # service re-enters at the learned level
+        self._m_learned: dict[tuple, int] = {}
+        # fault injection (tests / crash-resume bench): callable
+        # (where, wave_index) raising to simulate a crash mid-drain
+        self.fault_injector = None
+        self._wave_i = 0
 
     @staticmethod
     def _bounded_put(d: dict, key, value, bound: int) -> None:
@@ -239,6 +251,23 @@ class GraphService:
         lanes.setdefault(query, []).append(ticket)
         return ticket
 
+    def _replay_submit(self, graph_id, query, ticket: int) -> None:
+        """Re-enter an already-acknowledged submission under its ORIGINAL
+        ticket id (snapshot-restore WAL replay).  Idempotent: tickets that
+        already have a result (or are already queued) are left alone."""
+        self._next_ticket = max(self._next_ticket, ticket + 1)
+        if ticket in self._results:
+            return
+        ck = (graph_id, query)
+        if self._cache is not None and ck in self._cache:
+            self._bounded_put(self._results, ticket, self._cache[ck],
+                              self.max_results)
+            return
+        lanes = self._queue.setdefault((graph_id, query.fuse_key()), {})
+        tickets = lanes.setdefault(query, [])
+        if ticket not in tickets:
+            tickets.append(ticket)
+
     def pending(self) -> int:
         """Distinct queries waiting for the next :meth:`drain`."""
         return sum(len(q) for q in self._queue.values())
@@ -258,9 +287,17 @@ class GraphService:
         query each fuse ACROSS graphs as a graph batch
         (``batched_over_graphs_*``) — whole-graph kinds (coloring, MST)
         only have the graph axis.  Returns {ticket: result} for
-        everything completed by this call."""
+        everything completed by this call.
+
+        Crash safety: a wave raising mid-drain (device fault, injected
+        crash) re-queues every not-yet-finished query — with its original
+        tickets — before the exception propagates, so a retry or a
+        restore-and-replay never loses an acknowledged submission."""
         done: dict[int, Any] = {}
         queues, self._queue = self._queue, {}
+        # queries not finished yet — merged back on a mid-drain fault
+        remaining = {k: dict(v) for k, v in queues.items()}
+        t0_timing = AT.DEFAULT_TUNER.timed_runs
         by_fuse: dict[tuple, list] = {}
         for (graph_id, fk), lanes in queues.items():
             by_fuse.setdefault(fk, []).append((graph_id, lanes))
@@ -272,39 +309,84 @@ class GraphService:
             for t in queues[(graph_id, q.fuse_key())][q]:
                 self._bounded_put(self._results, t, row, self.max_results)
                 done[t] = row
+            remaining[(graph_id, q.fuse_key())].pop(q, None)
 
-        for fk, entries in by_fuse.items():
-            kind = fk[0]
-            singles = [(gid, next(iter(lanes)))
-                       for gid, lanes in entries if len(lanes) == 1]
-            multis = [(gid, lanes) for gid, lanes in entries
-                      if len(lanes) > 1]
-            if len(singles) >= 2 or (singles and kind in GRAPH_ONLY_KINDS):
-                # graph axis: one query per graph, chunked by max_graphs
-                for lo in range(0, len(singles), self.max_graphs):
-                    chunk = singles[lo:lo + self.max_graphs]
-                    rows = self._execute_graph_batch(kind, chunk)
-                    for (gid, q), row in zip(chunk, rows):
-                        finish(gid, q, row)
-            else:
-                multis += [(gid, {q: queues[(gid, fk)][q]})
-                           for gid, q in singles]
-            for graph_id, lanes in multis:
-                # lane axis: many queries, one graph
-                g = self._graphs[graph_id]
-                queries = list(lanes)
-                for lo in range(0, len(queries), self.max_lanes):
-                    chunk = queries[lo:lo + self.max_lanes]
-                    rows = self._execute_wave(g, chunk)
-                    for q, row in zip(chunk, rows):
-                        finish(graph_id, q, row)
+        try:
+            for fk, entries in by_fuse.items():
+                kind = fk[0]
+                singles = [(gid, next(iter(lanes)))
+                           for gid, lanes in entries if len(lanes) == 1]
+                multis = [(gid, lanes) for gid, lanes in entries
+                          if len(lanes) > 1]
+                if len(singles) >= 2 or (singles
+                                         and kind in GRAPH_ONLY_KINDS):
+                    # graph axis: one query per graph, chunked by
+                    # max_graphs
+                    for lo in range(0, len(singles), self.max_graphs):
+                        chunk = singles[lo:lo + self.max_graphs]
+                        rows = self._execute_graph_batch(kind, chunk)
+                        for (gid, q), row in zip(chunk, rows):
+                            finish(gid, q, row)
+                else:
+                    multis += [(gid, {q: queues[(gid, fk)][q]})
+                               for gid, q in singles]
+                for graph_id, lanes in multis:
+                    # lane axis: many queries, one graph
+                    g = self._graphs[graph_id]
+                    queries = list(lanes)
+                    for lo in range(0, len(queries), self.max_lanes):
+                        chunk = queries[lo:lo + self.max_lanes]
+                        rows = self._execute_wave(g, chunk,
+                                                  graph_id=graph_id)
+                        for q, row in zip(chunk, rows):
+                            finish(graph_id, q, row)
+        except Exception:
+            for key, lanes in remaining.items():
+                if not lanes:
+                    continue
+                tgt = self._queue.setdefault(key, {})
+                for q, tickets in lanes.items():
+                    tgt.setdefault(q, []).extend(
+                        t for t in tickets if t not in tgt.get(q, ()))
+            raise
+        finally:
+            self.stats.timing_runs += AT.DEFAULT_TUNER.timed_runs \
+                - t0_timing
         return done
+
+    def _fault(self, where: str) -> None:
+        """Fault-injection hook: called before every wave with a running
+        wave index; the injector raising simulates a crash mid-drain."""
+        i = self._wave_i
+        self._wave_i += 1
+        if self.fault_injector is not None:
+            self.fault_injector(where, i)
+
+    def _spec_for(self, kind: str, graph_id) -> C.CommitSpec:
+        """The commit spec for one wave: the service spec, seeded with
+        the learned ladder M when serving ``backend="auto"`` and a
+        previous mesh wave on this (kind, graph) reported its converged
+        transaction size."""
+        if self.spec.backend != C.AUTO or self.spec.m is not None:
+            return self.spec
+        m = self._m_learned.get((kind, graph_id))
+        if m is None:
+            return self.spec
+        return dataclasses.replace(self.spec, seed_m=m)
+
+    def _learn_m(self, kind: str, graph_id, res) -> None:
+        """Record the adaptive ladder's final M from a mesh wave's
+        telemetry (-1 = static spec, nothing to learn)."""
+        m = int(res.m_final)
+        if m >= 0:
+            self._m_learned[(kind, graph_id)] = m
 
     def _execute_graph_batch(self, kind: str, chunk: list) -> list:
         """One graph-batch wave: ``chunk`` is [(graph_id, query)], one
         per graph; pad the graph count up the graph ladder, execute the
         ``batched_over_graphs_*`` entry point, return one result row per
         real (graph, query) pair."""
+        self._fault("graph_batch")
         k = len(chunk)
         width = next(w for w in self.graph_ladder if w >= k)
         padded = chunk + [chunk[-1]] * (width - k)
@@ -352,9 +434,16 @@ class GraphService:
         self.drain()
         return [self._results[t] for t in tickets]
 
-    def _execute_wave(self, g, chunk: list) -> list:
+    def _execute_wave(self, g, chunk: list, *, graph_id=None) -> list:
         """One fused wave: pad ``chunk`` up the lane ladder, execute,
-        return one result row per real query."""
+        return one result row per real query.
+
+        Mesh waves run with telemetry so the adaptive ladder's converged
+        M is learned per (kind, graph) — seeding the NEXT wave's ladder
+        (and, through the snapshot, the first wave after a restore) at
+        the learned level.  The single-shard loops do not expose their
+        final ladder level, so learning is mesh-path only."""
+        self._fault("wave")
         k = len(chunk)
         lanes = next(l for l in self.lane_ladder if l >= k)
         padded = chunk + [chunk[-1]] * (lanes - k)
@@ -362,29 +451,32 @@ class GraphService:
         self.stats.lanes_executed += lanes
         self.stats.lanes_padded += lanes - k
         kind = chunk[0].kind
+        spec = self._spec_for(kind, graph_id)
         if kind == "bfs":
             srcs = jnp.asarray([q.source for q in padded], jnp.int32)
             if self.mesh is not None:
                 from repro.graphs.algorithms.bfs import \
                     distributed_multi_source_bfs
-                dist, _ = distributed_multi_source_bfs(
-                    self.mesh, g, srcs, spec=self.spec,
-                    capacity=self.capacity, axis=self.axis)
+                dist, res = distributed_multi_source_bfs(
+                    self.mesh, g, srcs, spec=spec,
+                    capacity=self.capacity, axis=self.axis, telemetry=True)
+                self._learn_m(kind, graph_id, res)
             else:
                 from repro.graphs.algorithms.bfs import multi_source_bfs
-                dist = multi_source_bfs(g, srcs, spec=self.spec).dist
+                dist = multi_source_bfs(g, srcs, spec=spec).dist
             return [dist[i] for i in range(k)]
         if kind == "sssp":
             srcs = jnp.asarray([q.source for q in padded], jnp.int32)
             if self.mesh is not None:
                 from repro.graphs.algorithms.sssp import \
                     distributed_multi_source_sssp
-                dist, _ = distributed_multi_source_sssp(
-                    self.mesh, g, srcs, spec=self.spec,
-                    capacity=self.capacity, axis=self.axis)
+                dist, res = distributed_multi_source_sssp(
+                    self.mesh, g, srcs, spec=spec,
+                    capacity=self.capacity, axis=self.axis, telemetry=True)
+                self._learn_m(kind, graph_id, res)
             else:
                 from repro.graphs.algorithms.sssp import multi_source_sssp
-                dist, _ = multi_source_sssp(g, srcs, spec=self.spec)
+                dist, _ = multi_source_sssp(g, srcs, spec=spec)
             return [dist[i] for i in range(k)]
         if kind == "ppr":
             srcs = jnp.asarray([q.source for q in padded], jnp.int32)
@@ -392,14 +484,15 @@ class GraphService:
             if self.mesh is not None:
                 from repro.graphs.algorithms.pagerank import \
                     distributed_multi_source_pagerank
-                rank = distributed_multi_source_pagerank(
-                    self.mesh, g, srcs, iters=iters, d=d, spec=self.spec,
-                    capacity=self.capacity, axis=self.axis)
+                rank, res = distributed_multi_source_pagerank(
+                    self.mesh, g, srcs, iters=iters, d=d, spec=spec,
+                    capacity=self.capacity, axis=self.axis, telemetry=True)
+                self._learn_m(kind, graph_id, res)
             else:
                 from repro.graphs.algorithms.pagerank import \
                     multi_source_pagerank
                 rank, _ = multi_source_pagerank(g, srcs, iters=iters, d=d,
-                                                spec=self.spec)
+                                                spec=spec)
             return [rank[i] for i in range(k)]
         # stconn
         ss = jnp.asarray([q.s for q in padded], jnp.int32)
@@ -407,10 +500,32 @@ class GraphService:
         if self.mesh is not None:
             from repro.graphs.algorithms.stconn import \
                 distributed_multi_source_stconn
-            found, _ = distributed_multi_source_stconn(
-                self.mesh, g, ss, ts, spec=self.spec,
-                capacity=self.capacity, axis=self.axis)
+            found, _, res = distributed_multi_source_stconn(
+                self.mesh, g, ss, ts, spec=spec,
+                capacity=self.capacity, axis=self.axis, telemetry=True)
+            self._learn_m(kind, graph_id, res)
         else:
             from repro.graphs.algorithms.stconn import multi_source_stconn
-            found, _ = multi_source_stconn(g, ss, ts, spec=self.spec)
+            found, _ = multi_source_stconn(g, ss, ts, spec=spec)
         return [bool(found[i]) for i in range(k)]
+
+    # -- durability -------------------------------------------------------
+
+    def snapshot(self):
+        """Freeze the warm state of this service into a
+        :class:`repro.serve.durable.ServiceSnapshot`: registered graphs,
+        result cache, issued results, the in-flight ticket journal,
+        learned ladder levels, and the autotuner's calibration fits."""
+        from repro.serve.durable import build_snapshot
+        return build_snapshot(self)
+
+    @classmethod
+    def restore(cls, snap, *, mesh=None):
+        """Rebuild a WARM service from a snapshot: same config, graphs,
+        cache, pending queue (original tickets), learned M levels, and
+        imported autotune fits — the first drain runs zero timed
+        calibrations and commits at the learned transaction size.
+        ``mesh`` re-attaches distributed execution (meshes are process
+        resources and do not serialize)."""
+        from repro.serve.durable import restore_service
+        return restore_service(snap, mesh=mesh)

@@ -92,3 +92,24 @@ class MstQuery:
 QUERY_KINDS = ("bfs", "sssp", "ppr", "stconn", "coloring", "mst")
 # kinds with no query-lane form — servable via the graph batch axis only
 GRAPH_ONLY_KINDS = ("coloring", "mst")
+
+QUERY_CLASSES = {cls.kind: cls for cls in
+                 (BfsQuery, SsspQuery, PprQuery, StConnQuery,
+                  ColoringQuery, MstQuery)}
+
+
+def query_to_dict(q) -> dict:
+    """JSON-portable form of a query — what the service snapshot's
+    ticket journal and result index store."""
+    if q.kind not in QUERY_CLASSES:
+        raise ValueError(f"unknown query kind {q.kind!r}")
+    return {"kind": q.kind, **dataclasses.asdict(q)}
+
+
+def query_from_dict(d: dict):
+    """Inverse of :func:`query_to_dict` (frozen dataclasses round-trip
+    by field dict; hash/equality are value-based, so a rebuilt query
+    hits the same cache keys)."""
+    d = dict(d)
+    cls = QUERY_CLASSES[d.pop("kind")]
+    return cls(**d)

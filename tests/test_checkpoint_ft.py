@@ -58,6 +58,106 @@ def test_elastic_restore_new_sharding(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_restore_validates_template_against_manifest(tmp_path):
+    """The silent zip-truncation bugfix: a template whose leaf names /
+    count disagree with the manifest must raise, not restore the wrong
+    leaves into right-shaped arrays."""
+    ck = Checkpointer(tmp_path)
+    t = _tree()
+    ck.save(1, t)
+    short = {"a": t["a"]}                        # fewer leaves
+    with pytest.raises(ValueError, match="does not match the manifest"):
+        ck.restore(jax.eval_shape(lambda: short))
+    renamed = {"a": t["a"], "z": t["b"]}         # same count, wrong names
+    with pytest.raises(ValueError, match="does not match the manifest"):
+        ck.restore(jax.eval_shape(lambda: renamed))
+
+
+def test_restore_validates_shardings_leaf_count(tmp_path):
+    """A truncated shardings pytree used to zip-truncate the restore —
+    now it raises with the counts."""
+    ck = Checkpointer(tmp_path)
+    t = _tree()
+    ck.save(1, t)
+    sh = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    with pytest.raises(ValueError, match="shardings pytree"):
+        ck.restore(jax.eval_shape(lambda: t), shardings=[sh])
+
+
+def test_domain_save_restore_roundtrip(tmp_path):
+    ck = Checkpointer(tmp_path)
+    dom_a = {"x": jnp.arange(6), "y": jnp.float32(2.5)}
+    dom_b = [jnp.ones((3, 2))]
+    ck.save_domains(7, {"alpha": dom_a, "beta": dom_b},
+                    versions={"alpha": 2}, meta={"note": "hello"})
+    assert ck.domains() == {"alpha": 2, "beta": 1}
+    assert ck.meta() == {"note": "hello"}
+    got, step = ck.restore_domain("alpha", jax.eval_shape(lambda: dom_a),
+                                  expect_version=2)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(dom_a), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    arrays, version, _ = ck.load_domain_arrays("beta")
+    assert version == 1 and len(arrays) == 1
+    np.testing.assert_array_equal(arrays[0], np.ones((3, 2)))
+    with pytest.raises(ValueError, match="version"):
+        ck.restore_domain("alpha", jax.eval_shape(lambda: dom_a),
+                          expect_version=9)
+    with pytest.raises(KeyError):
+        ck.restore_domain("nope", jax.eval_shape(lambda: dom_a))
+    # the legacy restore path refuses domain checkpoints with a pointer
+    with pytest.raises(ValueError, match="domain checkpoint"):
+        ck.restore(jax.eval_shape(lambda: dom_a))
+
+
+def test_domain_crash_mid_save_keeps_previous(tmp_path):
+    """_pre_commit raising = host dies after the leaves, before the
+    COMMITTED marker: the partial step is invisible, the previous
+    snapshot intact."""
+    ck = Checkpointer(tmp_path)
+    ck.save_domains(1, {"d": {"x": jnp.arange(4)}}, meta={"gen": 1})
+    with pytest.raises(RuntimeError, match="power cut"):
+        ck.save_domains(2, {"d": {"x": jnp.arange(9)}}, meta={"gen": 2},
+                        _pre_commit=lambda: (_ for _ in ()).throw(
+                            RuntimeError("power cut")))
+    assert ck.latest_step() == 1
+    assert ck.meta() == {"gen": 1}
+    arrays, _, _ = ck.load_domain_arrays("d")
+    np.testing.assert_array_equal(arrays[0], np.arange(4))
+    ck.save_domains(2, {"d": {"x": jnp.arange(9)}}, meta={"gen": 2})
+    assert ck.latest_step() == 2                 # retry lands cleanly
+
+
+def test_retention_skips_step_pinned_by_concurrent_restore(tmp_path,
+                                                           monkeypatch):
+    """Regression for the retention-vs-restore race: a save whose
+    retention pass runs while a restore is mid-read must not delete the
+    pinned step (keep=1 would otherwise reap it)."""
+    import repro.checkpoint.checkpointer as CK
+    ck = Checkpointer(tmp_path, keep=1)
+    t = _tree(2)
+    ck.save(2, t)
+    orig_load = CK.np.load
+    raced = {"done": False}
+
+    def racing_load(path, *a, **kw):
+        if not raced["done"]:
+            raced["done"] = True
+            # a concurrent save's retention fires mid-restore; without
+            # the pin it deletes step 2 out from under the reader
+            ck.save(3, _tree(3))
+        return orig_load(path, *a, **kw)
+
+    monkeypatch.setattr(CK.np, "load", racing_load)
+    got, step = ck.restore(jax.eval_shape(lambda: t), step=2)
+    assert step == 2 and raced["done"]
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # with the pin released, the next retention pass reaps step 2
+    ck.save(4, _tree(4))
+    assert ck.all_steps() == [4]
+
+
 def test_supervisor_restores_after_injected_failure(tmp_path):
     ck = Checkpointer(tmp_path)
     state0 = {"w": jnp.zeros((4,)), "n": jnp.int32(0)}

@@ -305,6 +305,85 @@ def test_distributed_batched_over_graphs_parity_matrix():
 
 
 # ---------------------------------------------------------------------------
+# Degraded-mesh mode: survive a host drop mid-query on 8 devices (ISSUE 6)
+# ---------------------------------------------------------------------------
+
+DEGRADED_CHILD = """
+import json, numpy as np, jax.numpy as jnp
+from repro.launch.mesh import make_host_mesh
+from repro.core.commit import CommitSpec
+from repro.graphs.generators import kronecker
+from repro.graphs.algorithms import bfs as B
+
+mesh = make_host_mesh(8, 1)
+g = kronecker(8, 8, seed=3)
+src = int(np.argmax(np.asarray(g.degrees)))
+ref = B.bfs_reference(g, src)
+out = {}
+
+# a) vertex-state replay: BFS state is [vpad], so the 8->7 shrink re-homes
+#    the round snapshot and resumes mid-query
+fired = {"n": 0}
+def injector(chunk, rounds_done):
+    if chunk == 1 and fired["n"] == 0:
+        fired["n"] = 1
+        raise RuntimeError("host 7 lost")
+dist, res = B.distributed_bfs(
+    mesh, g, src, capacity=64, max_subrounds=256,
+    spec=CommitSpec(backend="coarse", m=48), telemetry=True,
+    snapshot_rounds=2, fault_injector=injector)
+out["single"] = dict(
+    ok=bool(np.array_equal(np.asarray(dist, np.int64), ref)),
+    degraded=bool(res.degraded), delivered_all=bool(res.delivered_all),
+    fired=fired["n"])
+
+# b) lane-batched: vertex-major [vpad*L] state can't be re-homed, so the
+#    shrink restarts the fused query from round 0 on the 7 survivors —
+#    answers still exact
+srcs = jnp.asarray([src, 0, 5, 17], jnp.int32)
+fired2 = {"n": 0}
+def injector2(chunk, rounds_done):
+    if chunk == 1 and fired2["n"] == 0:
+        fired2["n"] = 1
+        raise RuntimeError("host 7 lost")
+md, mres = B.distributed_multi_source_bfs(
+    mesh, g, srcs, capacity=64, max_subrounds=256,
+    spec=CommitSpec(backend="coarse", m=48), telemetry=True,
+    snapshot_rounds=2, fault_injector=injector2)
+looped = all(
+    np.array_equal(np.asarray(md[l]),
+                   np.asarray(B.bfs(g, int(srcs[l])).dist))
+    for l in range(len(srcs)))
+out["lanes"] = dict(ok=bool(looped), degraded=bool(mres.degraded),
+                    delivered_all=bool(mres.delivered_all),
+                    fired=fired2["n"])
+
+# c) fault-free control on the same args: degraded must stay False
+dist0, res0 = B.distributed_bfs(
+    mesh, g, src, capacity=64, max_subrounds=256,
+    spec=CommitSpec(backend="coarse", m=48), telemetry=True,
+    snapshot_rounds=2)
+out["control"] = dict(
+    ok=bool(np.array_equal(np.asarray(dist0, np.int64), ref)),
+    degraded=bool(res0.degraded))
+print("RESULT", json.dumps(out))
+"""
+
+
+def test_degraded_mesh_parity_8_devices():
+    """A host drop mid-query on 8 devices: the run shrinks to 7, replays
+    the round snapshot (vertex state) or restarts from round 0 (lane
+    state), and the answers still match the reference exactly."""
+    r = run_devices(DEGRADED_CHILD, timeout=1500)
+    for case in ("single", "lanes"):
+        assert r[case]["fired"] == 1, (case, r[case])
+        assert r[case]["degraded"], (case, r[case])
+        assert r[case]["delivered_all"], (case, r[case])
+        assert r[case]["ok"], (case, r[case])
+    assert r["control"]["ok"] and not r["control"]["degraded"], r["control"]
+
+
+# ---------------------------------------------------------------------------
 # Conflict-telemetry invariant (Tables 3c/3f analogue across the refactor)
 # ---------------------------------------------------------------------------
 

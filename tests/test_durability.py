@@ -1,0 +1,406 @@
+"""Durable serving (ISSUE 6): service snapshot/restore, the supervised
+crash-resume loop, warm autotune state, learned-M ladder seeding, and the
+engine's degraded-mesh mode.
+
+Four layers:
+
+* ServiceSnapshot round-trip — a restored service serves the same
+  answers, keeps its cache/results/pending queue (original tickets), and
+  refuses ids/queries the schema can't carry;
+* warm restore — on every backend (incl. ``auto``) the restored service
+  is bit-identical to the original, and for ``auto`` a fresh-process
+  stand-in (fresh DEFAULT_TUNER, disk cache off) serves with ZERO timed
+  calibration runs because the snapshot carries the fits;
+* ServiceSupervisor — WAL-journaled submits survive a crash mid-drain
+  (restore + replay: no acknowledged ticket lost, none answered twice),
+  and a crash mid-save leaves the previous snapshot intact;
+* degraded-mesh engine — ``run_distributed(snapshot_rounds=...,
+  fault_injector=...)`` survives an injected fault by replaying the last
+  round snapshot (P=1 retry here; the 8-device shrink parity test lives
+  in tests/test_distributed.py under ``slow``).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core import autotune as AT
+from repro.core.commit import BACKENDS, CommitSpec
+from repro.graphs.generators import erdos_renyi, kronecker, random_weights
+from repro.graphs.algorithms import bfs as B
+from repro.serve.durable import (ServiceSupervisor, build_snapshot,
+                                 load_snapshot, restore_service,
+                                 save_snapshot)
+from repro.serve.graph_service import GraphService
+from repro.serve.queries import (BfsQuery, MstQuery, SsspQuery, StConnQuery,
+                                 query_from_dict, query_to_dict)
+
+ALL_BACKENDS = BACKENDS + ("auto",)
+
+
+def _service(**kw):
+    kw.setdefault("spec", CommitSpec(backend="coarse", stats=False))
+    return GraphService(**kw)
+
+
+def _loaded_service(max_lanes=4, **kw):
+    """A service with warm state in every snapshot domain: two tenants
+    (str + int ids), cached array/bool/mst result rows, and a pending
+    (undrained) queue."""
+    g1 = kronecker(6, 4, seed=1)
+    g2 = random_weights(erdos_renyi(50, 3.0, seed=2), seed=3)
+    svc = _service(max_lanes=max_lanes, **kw)
+    svc.register_graph("kron", g1)
+    svc.register_graph(7, g2)
+    drained = [svc.submit("kron", BfsQuery(0)),
+               svc.submit("kron", StConnQuery(0, 9)),
+               svc.submit(7, SsspQuery(3)),
+               svc.submit(7, MstQuery())]
+    svc.drain()
+    pending = [svc.submit("kron", BfsQuery(5)),
+               svc.submit(7, SsspQuery(1))]
+    return svc, (g1, g2), drained, pending
+
+
+def _rows_equal(a, b) -> bool:
+    if isinstance(a, bool) or isinstance(b, bool):
+        return a == b
+    if isinstance(a, tuple):                     # mst rows
+        return (np.array_equal(np.asarray(a[0]), np.asarray(b[0]))
+                and float(a[1]) == float(b[1]) and int(a[2]) == int(b[2]))
+    return np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# snapshot round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_roundtrip_in_memory():
+    """restore(build_snapshot(svc)) preserves graphs, cache, results,
+    the pending queue with its original tickets, and the ticket
+    counter."""
+    svc, _, drained, pending = _loaded_service()
+    svc2 = GraphService.restore(svc.snapshot())
+    assert set(svc2._graphs) == {"kron", 7}
+    assert svc2._next_ticket == svc._next_ticket
+    assert svc2.pending() == svc.pending() == 2
+    for t in drained:
+        assert _rows_equal(svc2.result(t), svc.result(t)), t
+    assert set(svc2._cache) == set(svc._cache)
+    # drain both: the replayed pending tickets answer identically
+    svc.drain()
+    svc2.drain()
+    for t in pending:
+        assert _rows_equal(svc2.result(t), svc.result(t)), t
+
+
+def test_snapshot_roundtrip_through_checkpointer(tmp_path):
+    """The on-disk path: save_snapshot -> load_snapshot across
+    Checkpointer domain checkpoints."""
+    svc, _, drained, pending = _loaded_service()
+    ck = Checkpointer(tmp_path)
+    step = save_snapshot(ck, svc.snapshot())
+    assert step == 1 and ck.domains(step).keys() == {"graphs", "cache",
+                                                     "results"}
+    snap, got = load_snapshot(ck)
+    assert got == step
+    svc2 = restore_service(snap)
+    for t in drained:
+        assert _rows_equal(svc2.result(t), svc.result(t)), t
+    svc.drain()
+    svc2.drain()
+    for t in pending:
+        assert _rows_equal(svc2.result(t), svc.result(t)), t
+    # a non-snapshot domain checkpoint is refused by schema
+    ck2 = Checkpointer(tmp_path / "other")
+    ck2.save_domains(1, {"d": {"x": jnp.arange(3)}}, meta={"schema": "???"})
+    with pytest.raises(ValueError, match="not a service snapshot"):
+        load_snapshot(ck2)
+
+
+def test_snapshot_rejects_unportable_graph_ids():
+    svc = _service()
+    svc.register_graph(("tuple", "id"), kronecker(5, 4, seed=0))
+    with pytest.raises(TypeError, match="str or int"):
+        build_snapshot(svc)
+
+
+def test_query_dict_roundtrip():
+    for q in (BfsQuery(3), SsspQuery(1), StConnQuery(2, 5), MstQuery()):
+        q2 = query_from_dict(query_to_dict(q))
+        assert q2 == q and hash(q2) == hash(q)
+
+
+# ---------------------------------------------------------------------------
+# warm restore: parity on every backend, zero recalibration for auto
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_restored_service_parity_all_backends(backend):
+    """A restored service answers a mixed-tenant batch bit-identical to
+    the original, whatever the commit mechanism."""
+    spec = None if backend == "auto" else CommitSpec(backend=backend,
+                                                     stats=False)
+    svc, (g1, g2), _, _ = _loaded_service(spec=spec, cache=False)
+    svc2 = GraphService.restore(svc.snapshot())
+    qs1 = [BfsQuery(2), BfsQuery(9), StConnQuery(0, 3)]
+    qs2 = [SsspQuery(4), MstQuery()]
+    ref = svc.run("kron", qs1) + svc.run(7, qs2)
+    got = svc2.run("kron", qs1) + svc2.run(7, qs2)
+    for i, (a, b) in enumerate(zip(ref, got)):
+        assert _rows_equal(a, b), (backend, i)
+
+
+def test_restored_auto_service_runs_zero_timed_calibrations(monkeypatch):
+    """THE warm-restore claim: a fresh process (fresh DEFAULT_TUNER, no
+    disk cache, cold jit caches) restoring a snapshot serves auto-spec
+    waves with zero timed micro-benchmarks — the snapshot carries the
+    calibration fits and race verdicts, and ServiceStats.timing_runs
+    proves it."""
+    monkeypatch.setenv(AT._CACHE_ENV, "off")
+    jax.clear_caches()                # force auto-policy resolution
+    t1 = AT.AutoTuner(ns=(4, 16), v_cal=256, repeats=1, warmup=0)
+    monkeypatch.setattr(AT, "DEFAULT_TUNER", t1)
+    svc = GraphService(max_lanes=2, cache=False)   # default auto spec
+    svc.register_graph("g", kronecker(6, 4, seed=1))
+    qs = [BfsQuery(2), BfsQuery(9)]
+    ref = svc.run("g", qs)
+    assert t1.timed_runs > 0          # the original service DID calibrate
+    assert svc.stats.timing_runs > 0
+    snap = svc.snapshot()
+    assert snap.meta["autotune"]      # ... and the snapshot carries it
+    # fresh-process stand-in: new tuner that MUST NOT time anything, and
+    # cold jit caches so every wave re-resolves its policy
+    t2 = AT.AutoTuner(ns=(4, 16), v_cal=256, repeats=1, warmup=0)
+    monkeypatch.setattr(AT, "DEFAULT_TUNER", t2)
+    monkeypatch.setattr(t2, "_time", lambda *a: pytest.fail(
+        "restored service ran a timed micro-benchmark"))
+    jax.clear_caches()
+    svc2 = GraphService.restore(snap)
+    got = svc2.run("g", qs)
+    for a, b in zip(ref, got):
+        assert _rows_equal(a, b)
+    assert svc2.stats.timing_runs == 0
+
+
+def test_import_entries_never_clobbers_local_fits(monkeypatch):
+    monkeypatch.setenv(AT._CACHE_ENV, "off")
+    t = AT.AutoTuner()
+    t._disk_entries()["race|k"] = "coarse"
+    t.import_entries({"race|k": "atomic", "race|new": "pallas"})
+    assert t.export_entries() == {"race|k": "coarse", "race|new": "pallas"}
+
+
+# ---------------------------------------------------------------------------
+# learned-M ladder seeding
+# ---------------------------------------------------------------------------
+
+
+def test_commit_spec_seed_m_validation():
+    assert CommitSpec(seed_m=64).seed_m == 64
+    assert CommitSpec(seed_m=0).seed_m == 0      # 0 = whole batch
+    with pytest.raises(ValueError):
+        CommitSpec(seed_m=-2)
+
+
+def test_seed_m_seeds_the_ladder_level(monkeypatch):
+    """seed_m places the auto policy's initial ladder level at the
+    learned M without pinning it (adaptation stays on)."""
+    monkeypatch.setenv(AT._CACHE_ENV, "off")
+    monkeypatch.setenv("REPRO_AUTOTUNE", "off")  # deterministic policy
+    t = AT.AutoTuner()
+    pol = t.policy(CommitSpec(backend="auto", seed_m=64), n=5000,
+                   pallas_ok=False)
+    assert pol.ladder[pol.init_level] == 64
+    assert pol.adaptive                          # seeded, not pinned
+    pol0 = t.policy(CommitSpec(backend="auto", seed_m=0), n=5000,
+                    pallas_ok=False)
+    assert pol0.ladder[pol0.init_level] is None  # 0 = whole batch
+
+
+def test_service_learns_and_seeds_m():
+    svc = GraphService()                         # default auto spec
+    assert svc._spec_for("bfs", "g") is svc.spec  # nothing learned yet
+
+    class FakeRes:
+        m_final = jnp.asarray(256, jnp.int32)
+
+    svc._learn_m("bfs", "g", FakeRes)
+    assert svc._m_learned[("bfs", "g")] == 256
+    seeded = svc._spec_for("bfs", "g")
+    assert seeded.seed_m == 256 and seeded.backend == "auto"
+
+    class StaticRes:
+        m_final = jnp.asarray(-1, jnp.int32)     # static spec: no signal
+
+    svc._learn_m("sssp", "g", StaticRes)
+    assert ("sssp", "g") not in svc._m_learned
+    # learned levels ride the snapshot
+    svc.register_graph("g", kronecker(5, 4, seed=0))
+    svc2 = GraphService.restore(svc.snapshot())
+    assert svc2._m_learned == {("bfs", "g"): 256}
+    # a pinned-m spec never gets seeded
+    pinned = GraphService(spec=CommitSpec(backend="auto", m=32))
+    pinned._m_learned[("bfs", "g")] = 256
+    assert pinned._spec_for("bfs", "g").m == 32
+
+
+# ---------------------------------------------------------------------------
+# ServiceSupervisor: WAL replay, crash mid-drain, crash mid-save
+# ---------------------------------------------------------------------------
+
+
+def _silent(*_):
+    pass
+
+
+def test_supervisor_crash_mid_drain_loses_no_ticket(tmp_path):
+    """Acknowledged tickets survive a crash mid-drain: the supervisor
+    restores the last snapshot, replays the WAL under the original
+    ticket ids, and re-drains.  Nothing lost, nothing answered twice."""
+    g = kronecker(6, 4, seed=1)
+    svc = _service(max_lanes=2, cache=False)
+    svc.register_graph("g", g)
+    sup = ServiceSupervisor(svc, Checkpointer(tmp_path), log=_silent)
+    pre = [sup.submit("g", BfsQuery(s)) for s in (0, 1)]
+    sup.drain()
+    pre_rows = [np.asarray(sup.result(t)) for t in pre]
+    sup.save()                                   # snapshot: pre answered
+    post = [sup.submit("g", BfsQuery(s)) for s in (2, 3, 4, 5)]
+
+    crashes = {"n": 0}
+
+    # the pre-drain already ran wave 0, so this drain's two waves are
+    # i=1 and i=2: the first lands, the crash eats the second
+    def injector(where, i):
+        if i == 2:
+            crashes["n"] += 1
+            raise RuntimeError("host lost")
+
+    svc.fault_injector = injector
+    sup.drain()
+    assert crashes["n"] == 1 and sup.restarts == 1
+    assert sup.service is not svc                # faulted instance dropped
+    for t, row in zip(pre, pre_rows):            # snapshot rows intact
+        np.testing.assert_array_equal(np.asarray(sup.result(t)), row)
+    for t, s in zip(post, (2, 3, 4, 5)):         # WAL-replayed, answered once
+        np.testing.assert_array_equal(
+            np.asarray(sup.result(t)),
+            np.asarray(B.bfs(g, s, spec=svc.spec).dist))
+    assert sup.service.pending() == 0
+    # exactly-once: replaying result() is stable and no extra tickets exist
+    assert sup.service._next_ticket == len(pre) + len(post)
+
+
+def test_supervisor_replay_skips_tickets_inside_snapshot(tmp_path):
+    """A crash between snapshot commit and WAL truncation leaves stale
+    WAL lines; replay must skip tickets the snapshot already accounts
+    for instead of double-answering them."""
+    g = kronecker(6, 4, seed=1)
+    svc = _service(max_lanes=2, cache=False)
+    svc.register_graph("g", g)
+    sup = ServiceSupervisor(svc, Checkpointer(tmp_path), log=_silent)
+    t0 = sup.submit("g", BfsQuery(0))
+    sup.drain()
+    save_snapshot(sup.ckpt, svc.snapshot())      # snapshot WITHOUT the
+    #                                              supervisor's WAL truncate
+    assert sup._wal.read_text().strip()          # stale line survives
+    restored = sup.restore()
+    assert restored.pending() == 0               # not re-queued
+    np.testing.assert_array_equal(np.asarray(restored.result(t0)),
+                                  np.asarray(B.bfs(g, 0, spec=svc.spec).dist))
+
+
+def test_supervisor_crash_mid_save_keeps_previous_snapshot(tmp_path):
+    svc = _service(cache=False)
+    svc.register_graph("g", kronecker(5, 4, seed=0))
+    sup = ServiceSupervisor(svc, Checkpointer(tmp_path), log=_silent)
+    t = sup.submit("g", BfsQuery(1))
+    sup.drain()
+    sup.save()
+    sup.submit("g", BfsQuery(2))
+    with pytest.raises(RuntimeError, match="disk gone"):
+        sup.save(_pre_commit=lambda: (_ for _ in ()).throw(
+            RuntimeError("disk gone")))
+    restored = sup.restore()                     # previous snapshot wins
+    restored.result(t)
+    assert restored.pending() == 1               # BfsQuery(2) via the WAL
+
+
+def test_supervisor_gives_up_past_max_restarts(tmp_path):
+    svc = _service(cache=False)
+    svc.register_graph("g", kronecker(5, 4, seed=0))
+    sup = ServiceSupervisor(svc, Checkpointer(tmp_path), max_restarts=1,
+                            log=_silent)
+    sup.save()
+    sup.submit("g", BfsQuery(0))
+
+    def always_crash(where, i):
+        raise RuntimeError("flaky host")
+
+    svc.fault_injector = always_crash
+    sup.drain()          # crash 1: restored instance (no injector) finishes
+    assert sup.restarts == 1
+    sup.service.fault_injector = always_crash
+    sup.submit("g", BfsQuery(1))
+    with pytest.raises(RuntimeError, match="restarts"):
+        sup.drain()      # crash 2: budget exhausted
+
+
+# ---------------------------------------------------------------------------
+# degraded-mesh engine (P=1 replay path; 8-device shrink is tier 2)
+# ---------------------------------------------------------------------------
+
+
+def test_degraded_mesh_replays_round_snapshot_1dev():
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(1, 1)
+    g = kronecker(7, 8, seed=3)
+    src = int(np.argmax(np.asarray(g.degrees)))
+    ref = B.bfs_reference(g, src)
+    faults = {"n": 0}
+
+    def injector(chunk, rounds_done):
+        if chunk == 1 and faults["n"] == 0:      # after chunk 0 landed
+            faults["n"] += 1
+            raise RuntimeError("host dropped")
+
+    dist, res = B.distributed_bfs(mesh, g, src, capacity=64,
+                                  max_subrounds=256, telemetry=True,
+                                  snapshot_rounds=2,
+                                  fault_injector=injector)
+    assert faults["n"] == 1 and bool(res.degraded)
+    assert bool(res.delivered_all)
+    np.testing.assert_array_equal(np.asarray(dist, np.int64), ref)
+    # chunked but fault-free: not degraded, same fixed point
+    dist2, res2 = B.distributed_bfs(mesh, g, src, capacity=64,
+                                    max_subrounds=256, telemetry=True,
+                                    snapshot_rounds=2)
+    assert not bool(res2.degraded)
+    np.testing.assert_array_equal(np.asarray(dist2, np.int64), ref)
+
+
+def test_degraded_mesh_gives_up_past_max_faults():
+    from repro.core.engine import AlgorithmSpec, run_distributed
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(1, 1)
+    g = kronecker(5, 4, seed=0)
+
+    def injector(chunk, rounds_done):
+        raise RuntimeError("always down")
+
+    def init(g, layout):
+        return {"x": jnp.zeros((layout.vpad,), jnp.int32)}, {}
+
+    def round_fn(rt, e, st, sc, it):
+        return st, sc, jnp.asarray(False)
+
+    alg = AlgorithmSpec("noop", "FF", init, round_fn, lambda g, l: 3)
+    with pytest.raises(RuntimeError, match="always down"):
+        run_distributed(alg, mesh, g, capacity=64, snapshot_rounds=1,
+                        fault_injector=injector, max_faults=2)
