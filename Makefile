@@ -14,7 +14,8 @@ export PYTHONPATH := src
 TIER2_XLA := --xla_cpu_multi_thread_eigen=false
 TIER2_ENV := REPRO_XLA_EXTRA="$(TIER2_XLA)" PYTHONHASHSEED=0
 
-.PHONY: tier1 tier2 test bench bench-json bench-serve bench-crash
+.PHONY: tier1 tier2 test bench bench-json bench-serve bench-crash \
+	bench-latency
 
 tier1:
 	$(PY) -m pytest -x -q -m "not slow"
@@ -32,7 +33,7 @@ bench:
 # tests/test_autotune.py), auto-diffed against the most recent previous
 # BENCH_*.json; serve rows cover BOTH batch axes (L= lanes, G= graphs)
 bench-json:
-	$(PY) -m benchmarks.run --json BENCH_pr6.json --sizes tiny
+	$(PY) -m benchmarks.run --json BENCH_pr7.json --sizes tiny
 
 # serving throughput/latency: batch-axis GraphService QPS + p50/p99 vs
 # the sequential query-at-a-time loop (lane axis by default; add
@@ -44,4 +45,12 @@ bench-serve:
 # restores (snapshot + WAL replay) and finishes the workload — restore
 # latency + recovery QPS rows merge into the persistent trajectory
 bench-crash:
-	$(PY) -m benchmarks.serve_qps --crash-resume --json BENCH_pr6.json
+	$(PY) -m benchmarks.serve_qps --crash-resume --json BENCH_pr7.json
+
+# open-loop latency under load (smoke sizes): Poisson arrivals against
+# the continuous-batching loop, p50/p99 vs offered QPS, product axis vs
+# the single-axis drain — rows carry offered_qps/p99_ms in the
+# trajectory (schema checked by tests/test_continuous.py)
+bench-latency:
+	$(PY) -m benchmarks.serve_qps --open-loop --kinds bfs --qps 20,50 \
+		--duration 1.0 --scale 6 --tenants 4 --json BENCH_pr7.json

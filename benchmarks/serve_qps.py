@@ -24,6 +24,16 @@ waves; sequential per-width measurement would hand arbitrary widths a
       [--axis lanes|graphs] [--kinds bfs,ppr] [--lanes 1,2,4,8]
       [--graphs 1,2,4,8] [--scale 9] [--queries 32]
 
+``--open-loop`` (ISSUE 7) switches from this closed loop to an OPEN one:
+Poisson arrivals at each ``--qps`` level drive the asynchronous
+continuous-batching server (:mod:`repro.serve.continuous`) over a
+mixed-tenant workload — one hot graph absorbing lane pressure plus
+``--tenants`` single-query tenants — and report p50/p99 submit-to-answer
+latency vs offered QPS, with the lanes×graphs product axis on
+(``product`` mode) and off (``single-axis``, the PR-5 two-axis drain).
+``--json`` merges rows carrying ``offered_qps``/``p99_ms`` into the
+``aam-bench/v1`` trajectory.
+
 CSV rows: ``serve/<kind>/L=<l>/qps`` / ``serve/<kind>/G=<g>/qps`` with
 us-per-query; ``benchmarks.run --json`` folds the same ``sweep(...)`` /
 ``sweep_graphs(...)`` measurements into the persistent ``aam-bench/v1``
@@ -285,6 +295,147 @@ def sweep_graphs(kinds, counts, *, scale: int, backend: str | None = None,
 
 
 # ---------------------------------------------------------------------------
+# Open-loop latency under load: Poisson arrivals against the continuous
+# batching loop (ISSUE 7) — p50/p99 vs offered QPS
+# ---------------------------------------------------------------------------
+
+
+def _open_workload(kind: str, graphs_by_gid: dict, n: int, rng,
+                   hot_frac: float = 0.5):
+    """One mixed-tenant arrival sequence: ``hot_frac`` of queries hit
+    the hot graph (lane pressure), the rest spread over the single-query
+    tenants (graph pressure) — the shape only the PRODUCT axis serves as
+    one wave."""
+    gids = [g for g in graphs_by_gid if g != "hot"]
+    subs = []
+    for _ in range(n):
+        gid = "hot" if rng.random() < hot_frac \
+            else gids[int(rng.integers(len(gids)))]
+        g = graphs_by_gid[gid]
+        src = int(rng.integers(g.num_vertices))
+        if kind == "bfs":
+            q = BfsQuery(src)
+        elif kind == "sssp":
+            q = SsspQuery(src)
+        elif kind == "ppr":
+            q = PprQuery(src, iters=PPR_ITERS)
+        elif kind == "stconn":
+            q = StConnQuery(src, int(rng.integers(g.num_vertices)))
+        else:
+            raise ValueError(f"kind {kind!r} has no lane form; the "
+                             f"open-loop bench accepts {LANE_KINDS}")
+        subs.append((gid, q))
+    return subs
+
+
+def open_loop(kinds=("bfs",), *, qps_levels=(20, 50), duration_s: float = 2.0,
+              scale: int = 7, tenants: int = 5, backend: str | None = None,
+              seed: int = 0, max_wait_s: float = 0.005,
+              modes=("product", "single-axis")):
+    """The latency-under-load benchmark: an OPEN loop (arrivals don't
+    wait for completions — Poisson gaps at each offered QPS) drives the
+    asynchronous :class:`repro.serve.continuous.ContinuousServer` over a
+    mixed-tenant workload, once with the product axis on and once
+    degraded to the PR-5 two-axis drain (``product=False``).  Per-query
+    latency is submit-to-publish through the service clock; rows carry
+    ``offered_qps``/``achieved_qps``/``p50_ms``/``p99_ms`` per
+    (kind, mode, level)."""
+    from repro.graphs.generators import kronecker, random_weights
+    from repro.serve.continuous import ContinuousServer
+
+    rows = []
+    for kind in kinds:
+        graphs = {"hot": kronecker(scale, 8, seed=seed)}
+        for i in range(tenants):
+            graphs[f"t{i}"] = kronecker(max(scale - 1, 2), 8,
+                                        seed=seed + 17 * i + 1)
+        if kind == "sssp":
+            graphs = {gid: random_weights(g, seed=seed + 3)
+                      for gid, g in graphs.items()}
+        for mode in modes:
+            svc = GraphService(cache=False, product=(mode == "product"),
+                               spec=_spec(backend))
+            for gid, g in graphs.items():
+                svc.register_graph(gid, g)
+            # warm the jit ladder: one mixed drain compiles the shapes
+            # the open loop will hit (hot lane pressure + tenant spread)
+            warm = _open_workload(kind, graphs, 2 * (tenants + 1),
+                                  np.random.default_rng(seed + 7))
+            for gid, q in warm:
+                svc.submit(gid, q)
+            svc.drain()
+            for qps in qps_levels:
+                rng = np.random.default_rng(seed + 11)
+                n = max(8, int(duration_s * qps))
+                subs = _open_workload(kind, graphs, n, rng)
+                gaps = rng.exponential(1.0 / qps, n)
+                with ContinuousServer(svc, max_wait_s=max_wait_s) as cs:
+                    t0 = time.perf_counter()
+                    tickets = []
+                    for (gid, q), gap in zip(subs, gaps):
+                        time.sleep(gap)
+                        tickets.append(cs.submit(gid, q))
+                    cs.results(tickets, timeout=600)
+                    total = time.perf_counter() - t0
+                    if cs.last_error is not None:
+                        raise cs.last_error
+                lat = [(cs.done_at[t] - cs.submit_at[t]) * 1e3
+                       for t in tickets]
+                rows.append({
+                    "kind": kind, "mode": mode, "offered_qps": qps,
+                    "achieved_qps": round(len(tickets) / total, 1),
+                    "p50_ms": round(float(np.percentile(lat, 50)), 2),
+                    "p99_ms": round(float(np.percentile(lat, 99)), 2),
+                    "mean_ms": round(float(np.mean(lat)), 2),
+                    "n": len(tickets),
+                    "product_waves": svc.stats.product_waves,
+                })
+    return rows
+
+
+def _open_rows_to_json(rows, json_path: str) -> None:
+    """Land the open-loop rows in the persistent ``aam-bench/v1``
+    trajectory (same merge protocol as :func:`_crash_rows_to_json`:
+    replace previous ``serve_open`` rows, keep everything else)."""
+    import json
+    import os
+    doc = None
+    if os.path.exists(json_path):
+        try:
+            with open(json_path) as f:
+                doc = json.load(f)
+            if doc.get("schema") != "aam-bench/v1":
+                doc = None
+        except (OSError, ValueError):
+            doc = None
+    if doc is None:
+        doc = {"schema": "aam-bench/v1", "sizes": "open",
+               "platform": jax.default_backend(), "rows": [],
+               "summary": {}}
+    doc["rows"] = [r for r in doc.get("rows", [])
+                   if r.get("suite") != "serve_open"]
+    for r in rows:
+        doc["rows"].append({
+            "suite": "serve_open", "backend": "auto",
+            "name": f"serve_open/{r['kind']}/{r['mode']}"
+                    f"/qps={r['offered_qps']}",
+            "us_per_call": round(r["p99_ms"] * 1e3, 1),
+            "offered_qps": r["offered_qps"],
+            "achieved_qps": r["achieved_qps"],
+            "p50_ms": r["p50_ms"], "p99_ms": r["p99_ms"],
+            "derived": f"n={r['n']} mean={r['mean_ms']}ms "
+                       f"product_waves={r['product_waves']}"})
+    doc.setdefault("summary", {})["serve_open"] = {
+        f"{r['kind']}/{r['mode']}/qps={r['offered_qps']}": {
+            "p50_ms": r["p50_ms"], "p99_ms": r["p99_ms"],
+            "achieved_qps": r["achieved_qps"]}
+        for r in rows}
+    with open(json_path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+
+
+# ---------------------------------------------------------------------------
 # Crash-resume: kill mid-drain, restore from snapshot, finish the workload
 # ---------------------------------------------------------------------------
 
@@ -462,10 +613,45 @@ if __name__ == "__main__":
     ap.add_argument("--crash-at", type=float, default=0.5,
                     help="fraction of drain waves before the injected "
                          "crash (default 0.5)")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="latency-under-load mode: Poisson arrivals "
+                         "against the continuous-batching loop; p50/p99 "
+                         "vs offered QPS, product vs single-axis drain")
+    ap.add_argument("--qps", default="20,50",
+                    help="open-loop offered QPS levels (default 20,50)")
+    ap.add_argument("--duration", type=float, default=2.0,
+                    help="open-loop seconds of arrivals per level")
+    ap.add_argument("--tenants", type=int, default=5,
+                    help="open-loop single-query tenant graphs beside "
+                         "the hot graph (default 5)")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="with --crash-resume: merge the crash rows "
-                         "into this aam-bench/v1 trajectory file")
+                    help="with --crash-resume/--open-loop: merge the "
+                         "rows into this aam-bench/v1 trajectory file")
     args = ap.parse_args()
+    if args.open_loop:
+        kinds = tuple((args.kinds or "bfs").split(","))
+        rows = open_loop(kinds,
+                         qps_levels=tuple(int(x)
+                                          for x in args.qps.split(",")),
+                         duration_s=args.duration, scale=args.scale,
+                         tenants=args.tenants, backend=args.backend)
+        for r in rows:
+            emit(f"serve_open/{r['kind']}/{r['mode']}"
+                 f"/qps={r['offered_qps']}", r["p99_ms"] / 1e3,
+                 f"p50={r['p50_ms']}ms p99={r['p99_ms']}ms "
+                 f"achieved_qps={r['achieved_qps']} n={r['n']}")
+        by_level: dict = {}
+        for r in rows:
+            by_level.setdefault((r["kind"], r["offered_qps"]),
+                                {})[r["mode"]] = r["p99_ms"]
+        for (kind, qps), modes in sorted(by_level.items()):
+            if len(modes) == 2:
+                print(f"# {kind} @ {qps} qps: p99 product="
+                      f"{modes['product']}ms single-axis="
+                      f"{modes['single-axis']}ms")
+        if args.json:
+            _open_rows_to_json(rows, args.json)
+        raise SystemExit(0)
     if args.crash_resume:
         kinds = tuple((args.kinds or "bfs,ppr").split(","))
         lane = max(int(x) for x in args.lanes.split(","))

@@ -1,4 +1,4 @@
-"""Serving graph queries — GraphService quickstart (ISSUE 4 + 5).
+"""Serving graph queries — GraphService quickstart (ISSUE 4 + 5 + 7).
 
 Many independent user queries fuse into ONE AAM wave along whichever
 batch axis fits: same-graph queries (BFS sources, SSSP roots,
@@ -6,8 +6,12 @@ personalized PageRank seeds, s-t pairs) as lanes on composite commit
 keys ``lane * V + v``; same-kind queries across tenant graphs —
 including the whole-graph kinds, coloring and Boruvka MST, which have
 no lane form — as a graph batch on the tenants' disjoint-union key
-space.  The service picks the axis at drain time and pads each axis up
-its own power-of-two ladder so the jit caches stay warm.
+space; MIXED same-kind traffic as one lanes×graphs PRODUCT wave on
+keys ``lane * Vtot + offset[g] + v``.  The service picks the axis at
+drain time and pads each axis up its own power-of-two ladder so the
+jit caches stay warm.  The final stanza serves asynchronously: a
+ContinuousServer drain loop admits on a deadline window and boards
+late arrivals onto the running product wave.
 
   PYTHONPATH=src python examples/serve_queries.py
 """
@@ -124,4 +128,27 @@ print(f"\nkilled wave {kill_wave}, supervisor restored snapshot + WAL and "
       f"finished {len(rows)} tickets in {dt * 1e3:.1f} ms "
       f"(restarts={sup.restarts}, "
       f"post-restore timing runs={svc.stats.timing_runs})")
+
+# --- continuous batching: async submits board the running wave -------------
+# ContinuousServer runs drain() on a background thread behind a deadline
+# admission window; submit() is non-blocking and late arrivals claim free
+# cells of the RUNNING lanes×graphs product wave instead of waiting for
+# the next drain.  Wrapping the supervisor keeps the WAL journaling, so
+# an async crash mid-wave restores and still answers every ticket.
+from repro.serve.continuous import ContinuousServer
+
+fresh = rng.choice(g.num_vertices, 4, replace=False)
+with ContinuousServer(sup, max_wait_s=0.01) as cs:
+    hot = [cs.submit("social", BfsQuery(int(s))) for s in fresh[:3]]
+    tail = [cs.submit(f"tenant{i}", BfsQuery(1)) for i in range(3)]
+    late = cs.submit("social", BfsQuery(int(fresh[3])))  # boards mid-wave
+    rows = cs.results(hot + tail + [late], timeout=120)
+svc = sup.service
+lat = sorted((cs.done_at[t] - cs.submit_at[t]) * 1e3
+             for t in hot + tail + [late])
+print(f"\ncontinuous batching: {len(rows)} async tickets over "
+      f"{svc.stats.product_waves} product wave(s) "
+      f"({svc.stats.product_cells} cells, "
+      f"{svc.stats.product_cells_padded} padded); "
+      f"latency p50={lat[len(lat) // 2]:.1f}ms max={lat[-1]:.1f}ms")
 shutil.rmtree(ckdir, ignore_errors=True)

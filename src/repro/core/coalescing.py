@@ -52,7 +52,11 @@ DENSE_PLANNER_MAX_BUCKETS = 32
 #   of vertex v lives at flat key ``l * V + v``;
 # * GraphBatch(sizes) — ONE query each over G graphs: graph g's vertex v
 #   lives at flat key ``offset[g] + v`` (the disjoint-union key space of
-#   ``repro.graphs.csr.GraphSet``).
+#   ``repro.graphs.csr.GraphSet``);
+# * ProductAxis(L, sizes) — the PRODUCT: up to L queries over EACH of G
+#   graphs, flat key ``lane * Vtot + offset[g] + v`` (lane axis nested
+#   over the graph axis — one wave serves many queries on many tenant
+#   graphs at once, ISSUE 7).
 #
 # Items never collide (disjoint flat ranges), so conflict resolution over
 # flat keys is exactly per-item conflict resolution: one commit() — any
@@ -188,6 +192,96 @@ class GraphBatch:
         major = jnp.searchsorted(bounds, key, side="right").astype(jnp.int32)
         offs = jnp.asarray(self.offsets, jnp.int32)
         return major, key - offs[jnp.clip(major, 0, len(self.sizes) - 1)]
+
+
+@dataclasses.dataclass(frozen=True)
+class ProductAxis:
+    """Batch axis PRODUCT: up to L queries over EACH of G tenant graphs.
+
+    The composite key nests the lane axis over the graph axis::
+
+        flat = lane * Vtot + (offset[g] + v),   Vtot = sum(sizes)
+
+    i.e. ``fuse_keys(lane, GraphBatch(sizes).flatten(g, v), Vtot)`` —
+    lane-major over the disjoint-union key space, exactly the 2-mark
+    nesting ``_union_stconn`` already uses (grey marks at ``[0, Vtot)``,
+    green at ``[Vtot, 2*Vtot)``).  Cells (lane, graph) are independent
+    work items occupying disjoint flat ranges, so one ``commit()`` over
+    product keys resolves every cell's conflicts bit-identically to
+    per-cell commits (order-independent ops).
+
+    Degenerate forms collapse key-for-key onto the single axes
+    (pinned by tests/test_product_axis.py)::
+
+        ProductAxis(1, sizes).flatten3(0, g, v) == GraphBatch(sizes).flatten(g, v)
+        ProductAxis(L, (V,)).flatten3(l, 0, v)  == QueryLanes(L, V).flatten(l, v)
+
+    Frozen + hashable: rides in jit static args and
+    :class:`repro.core.engine.EngineConfig` like the other axes."""
+    lanes: int
+    sizes: tuple
+
+    def __post_init__(self):
+        if int(self.lanes) < 1:
+            raise ValueError(f"ProductAxis needs lanes >= 1, got {self.lanes}")
+        if not self.sizes or any(int(s) < 1 for s in self.sizes):
+            raise ValueError(f"ProductAxis needs positive per-graph sizes, "
+                             f"got {self.sizes}")
+
+    @property
+    def graph_axis(self) -> GraphBatch:
+        """The inner (minor) axis — the union key space."""
+        return GraphBatch(self.sizes)
+
+    @property
+    def num_graphs(self) -> int:
+        return len(self.sizes)
+
+    @property
+    def num_vertices(self) -> int:
+        """Union vertex count Vtot — the lane stride."""
+        return sum(int(s) for s in self.sizes)
+
+    @property
+    def offsets(self) -> tuple:
+        return self.graph_axis.offsets
+
+    @property
+    def flat_size(self) -> int:
+        return self.lanes * self.num_vertices
+
+    @property
+    def wave_width(self) -> int:
+        """Distributed vertex-major layout co-locates all L lanes of a
+        union vertex on its owner shard ([block * lanes] slices); the
+        graph coordinate is already folded into the flat vertex id, so
+        only the lane id rides the exchange — same as QueryLanes."""
+        return self.lanes
+
+    @property
+    def race_width(self) -> int:
+        """The autotuner race key: a product wave's argsort spans every
+        cell's messages — L lanes × G graphs."""
+        return self.lanes * len(self.sizes)
+
+    def flatten(self, major, minor) -> jax.Array:
+        """2-part key: (lane, flat_union_vertex) -> product key."""
+        return fuse_keys(jnp.asarray(major), jnp.asarray(minor),
+                         self.num_vertices)
+
+    def unflatten(self, key):
+        """Inverse of :func:`flatten`: (lane, flat_union_vertex)."""
+        return split_keys(key, self.num_vertices)
+
+    def flatten3(self, lane, graph, v) -> jax.Array:
+        """3-part key: (lane, graph, LOCAL vertex) -> product key."""
+        return self.flatten(lane, self.graph_axis.flatten(graph, v))
+
+    def split3(self, key):
+        """Inverse of :func:`flatten3`: (lane, graph, local_vertex)."""
+        lane, flat = self.unflatten(key)
+        g, v = self.graph_axis.unflatten(flat)
+        return lane, g, v
 
 
 def plan_buckets(owner: jax.Array, valid: jax.Array, num_buckets: int,

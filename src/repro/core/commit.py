@@ -154,8 +154,9 @@ def commit_batched(state: jax.Array, msgs: Messages, op: str,
                    axis) -> CommitResult:
     """Commit an axis-fused batch against the axis's flat key space.
 
-    ``axis`` is a batch axis (:class:`repro.core.coalescing.QueryLanes`
-    or :class:`~repro.core.coalescing.GraphBatch`); ``state`` is the
+    ``axis`` is a batch axis (:class:`repro.core.coalescing.QueryLanes`,
+    :class:`~repro.core.coalescing.GraphBatch`, or their composition
+    :class:`~repro.core.coalescing.ProductAxis`); ``state`` is the
     flat [axis.flat_size] array and ``msgs.target`` carries flat keys
     (build them with :func:`repro.core.messages.batch_messages`), so
     ONE ``commit()`` call — any backend, including ``"auto"`` —
@@ -180,6 +181,23 @@ def commit_lanes(state: jax.Array, msgs: Messages, op: str,
     res = commit_batched(state.reshape(lanes * v), msgs, op, spec,
                          axis=QueryLanes(lanes, v))
     return dataclasses.replace(res, state=res.state.reshape(lanes, v))
+
+
+def commit_product(state: jax.Array, msgs: Messages, op: str,
+                   spec: CommitSpec | None = None, *,
+                   axis) -> CommitResult:
+    """Thin wrapper over :func:`commit_batched` for the lanes×graphs
+    product axis: commit a product-fused batch against [L, Vtot]
+    lane-major union state (composite keys ``lane * Vtot + flat`` from
+    :func:`repro.core.messages.product_messages`); ``axis`` is the
+    :class:`repro.core.coalescing.ProductAxis`."""
+    lanes, vtot = state.shape
+    if (lanes, vtot) != (axis.lanes, axis.num_vertices):
+        raise ValueError(f"state shape {state.shape} != product axis "
+                         f"({axis.lanes}, {axis.num_vertices})")
+    res = commit_batched(state.reshape(lanes * vtot), msgs, op, spec,
+                         axis=axis)
+    return dataclasses.replace(res, state=res.state.reshape(lanes, vtot))
 
 
 _PALLAS_DTYPES = (jnp.int32, jnp.float32)

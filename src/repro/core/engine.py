@@ -100,7 +100,12 @@ def route_wave(ecfg: EngineConfig, state_l, target, payload, pending,
     conflicts (see ``repro.core.coalescing.fuse_keys``).  A
     ``GraphBatch`` has ``wave_width == 1`` — its targets are already
     flat union-graph ids, so owner slices and coalescing buckets are
-    keyed by flat id with no extra field.
+    keyed by flat id with no extra field.  A
+    :class:`~repro.core.coalescing.ProductAxis` composes both: targets
+    are union-flat ids (graph coordinate pre-folded, so buckets/owners
+    need nothing new) while the LANE id rides as ``major`` —
+    ``wave_width == lanes`` and one commit resolves every
+    (lane, graph) cell.
     Returns (state_l, delivered_mask, success pytree, conflicts)."""
     P, Cp = ecfg.num_shards, ecfg.capacity
     batch = batch if batch is not None else ecfg.batch
@@ -624,9 +629,14 @@ def run_distributed(alg: AlgorithmSpec, mesh, g, *,
     over its disjoint-union graph (per-graph CSR slices gathered from the
     stacked edge arrays), which IS the graph-batch axis — flat union ids
     key the owner slices and coalescing buckets.  ``batch`` names the
-    run's default batch axis (``QueryLanes``/``GraphBatch``); waves
-    issued without an explicit ``batch=`` use it, and its ``race_width``
-    (L lanes / G graphs) keys the tuner's axis-aware race.
+    run's default batch axis (``QueryLanes``/``GraphBatch``/
+    ``ProductAxis``); waves issued without an explicit ``batch=`` use
+    it, and its ``race_width`` (L lanes / G graphs / L·G cells) keys
+    the tuner's axis-aware race.  A ``ProductAxis`` run passes a
+    GraphSet here with ``batch=ProductAxis(L, gs.axis.sizes)``: union
+    ids route exactly as the graph batch while lane ids ride as
+    ``major`` (see :func:`route_wave`) — e.g.
+    :func:`repro.graphs.algorithms.bfs.distributed_product_bfs`.
 
     **Degraded-mesh mode.**  ``snapshot_rounds`` chunks the round loop:
     every chunk boundary the (replicated) carry and global state come

@@ -114,6 +114,24 @@ def lane_messages(target, payload, valid, num_vertices: int) -> Messages:
                           payload, valid)
 
 
+def product_messages(target, payload, valid, axis) -> Messages:
+    """Thin wrapper over :func:`batch_messages` for the lanes×graphs
+    PRODUCT axis: an [L, n] batch of UNION-flat targets fuses on
+    composite keys ``lane * Vtot + target`` (the graph coordinate is
+    already folded into the union-flat target id — see
+    :class:`repro.core.coalescing.ProductAxis`).
+
+    target/valid: int32/bool [L, n] with targets in ``[0, Vtot)``;
+    payload: [L, n] (or pytree of such).  Committing the result against
+    [L * Vtot] flattened state resolves every (lane, graph) cell's
+    conflicts in one pass."""
+    target = jnp.asarray(target, jnp.int32)
+    lanes, n = target.shape
+    lane = jnp.broadcast_to(
+        jnp.arange(lanes, dtype=jnp.int32)[:, None], (lanes, n))
+    return batch_messages(axis, lane, target, payload, valid)
+
+
 def concat_messages(a: Messages, b: Messages) -> Messages:
     return Messages(
         target=jnp.concatenate([a.target, b.target]),

@@ -209,6 +209,67 @@ def distributed_multi_source_bfs(mesh, g: Graph, sources, *,
     return (dist, res) if telemetry else (dist, res.rounds)
 
 
+def distributed_product_bfs(mesh, gs, sources, *,
+                            capacity: int | str = 4096,
+                            m: int | None = None, axis: str = "data",
+                            spec: C.CommitSpec | None = None,
+                            max_subrounds: int = 64,
+                            telemetry: bool = False):
+    """Product-axis BFS over a mesh axis: L queries over EACH graph of a
+    :class:`repro.graphs.csr.GraphSet` share every wave — the
+    distributed proof that :class:`repro.core.coalescing.ProductAxis`
+    threads through the harness unchanged.
+
+    ``sources`` is int32 [L, G], graph-LOCAL source ids (cell (l, g)
+    answers BFS from ``sources[l, g]`` in graph g).  State is
+    vertex-major [vpad * L] over the UNION — the graph coordinate is
+    pre-folded into the union vertex id, so each union vertex's L lanes
+    live on its owner shard and the lane id rides the exchange as
+    ``major`` exactly as in :func:`distributed_multi_source_bfs`; only
+    ``batch=ProductAxis(L, sizes)`` (race width L·G) differs.  Returns
+    (dist [L, Vtot], rounds); split per graph with
+    ``gs.split_vertex(dist[l])``."""
+    from repro.core.coalescing import ProductAxis
+    from repro.core.engine import AlgorithmSpec, run_distributed
+
+    sources = jnp.asarray(sources, jnp.int32)
+    lanes = sources.shape[0]
+    lidx = jnp.arange(lanes, dtype=jnp.int32)
+    product = ProductAxis(lanes, gs.axis.sizes)
+    # per-cell union-flat source ids [L, G]
+    flat_src = sources + jnp.asarray(gs.voffs[:-1], jnp.int32)[None, :]
+
+    def init(g, layout):
+        flat = flat_src * lanes + lidx[:, None]  # vertex-major composite
+        dist0 = jnp.full((layout.vpad * lanes,), INF, jnp.int32) \
+            .at[flat.reshape(-1)].set(0)
+        frontier0 = jnp.zeros((layout.vpad * lanes,), bool) \
+            .at[flat.reshape(-1)].set(True)
+        return {"dist": dist0, "frontier": frontier0}, {}
+
+    def round_fn(rt, e, st, sc, it):
+        dist = st["dist"]                       # [block * L]
+        emax = e.dst.shape[0]
+        fl = e.my_src[:, None] * lanes + lidx[None, :]      # [emax, L]
+        active = st["frontier"][fl] & e.valid[:, None]
+        tgt = jnp.broadcast_to(e.dst[:, None], (emax, lanes))
+        lane = jnp.broadcast_to(lidx[None, :], (emax, lanes))
+        dist2, _ = rt.wave(dist, tgt.reshape(-1),
+                           (dist[fl] + 1).reshape(-1),
+                           active.reshape(-1), op="min",
+                           major=lane.reshape(-1))
+        changed = dist2 != dist
+        return {"dist": dist2, "frontier": changed}, sc, rt.any(changed)
+
+    alg = AlgorithmSpec("product_bfs", "FF&MF", init, round_fn,
+                        lambda g, layout: layout.vpad)
+    res = run_distributed(alg, mesh, gs, capacity=capacity, m=m,
+                          axis=axis, spec=spec,
+                          max_subrounds=max_subrounds, batch=product)
+    dist = res.state["dist"].reshape(-1, lanes).T[:, :product.num_vertices]
+    return (dist, res) if telemetry else (dist, res.rounds)
+
+
 def batched_over_graphs_bfs(gs, sources, *, spec: C.CommitSpec | None = None,
                             mesh=None, capacity: int | str = 4096,
                             axis: str = "data", max_subrounds: int = 64):

@@ -129,6 +129,7 @@ def build_snapshot(svc: GraphService) -> ServiceSnapshot:
             "capacity": svc.capacity, "axis": svc.axis,
             "cache": svc._cache is not None,
             "max_results": svc.max_results, "max_cache": svc.max_cache,
+            "product": svc.product,
         },
         "graphs": graphs_meta,
         "cache": cache_meta,
@@ -146,7 +147,8 @@ def build_snapshot(svc: GraphService) -> ServiceSnapshot:
         "results": result_arrays})
 
 
-def restore_service(snap: ServiceSnapshot, *, mesh=None) -> GraphService:
+def restore_service(snap: ServiceSnapshot, *, mesh=None,
+                    clock=None) -> GraphService:
     meta = snap.meta
     if meta.get("version", 0) > SNAPSHOT_VERSION:
         raise ValueError(f"snapshot version {meta.get('version')} is newer "
@@ -158,7 +160,12 @@ def restore_service(snap: ServiceSnapshot, *, mesh=None) -> GraphService:
                        capacity=cfg["capacity"], axis=cfg["axis"],
                        cache=cfg["cache"],
                        max_results=cfg["max_results"],
-                       max_cache=cfg["max_cache"])
+                       max_cache=cfg["max_cache"],
+                       # pre-PR-7 snapshots predate the product axis
+                       product=cfg.get("product", True),
+                       # clocks are process resources (like meshes):
+                       # re-injected at restore, never serialized
+                       clock=clock)
     ga = iter(snap.domains["graphs"])
     for entry in meta["graphs"]:
         indptr, src, dst, weights = (next(ga) for _ in range(4))
@@ -266,7 +273,9 @@ class ServiceSupervisor(Supervisor):
         """Last committed snapshot + WAL replay -> a warm service bound
         to this supervisor (original ticket ids preserved)."""
         snap, step = load_snapshot(self.ckpt)
-        svc = restore_service(snap, mesh=mesh)
+        # the clock survives restore the same way the mesh does: it is a
+        # process resource, re-attached rather than serialized
+        svc = restore_service(snap, mesh=mesh, clock=self.service.clock)
         base = snap.next_ticket
         if self._wal.exists():
             for line in self._wal.read_text().splitlines():

@@ -10,7 +10,14 @@ level up, along TWO orthogonal batch axes (``repro.core.coalescing``):
   into one wave over the disjoint-union flat key space
   (``offset[g] + v``) — the axis that makes coloring and Boruvka
   servable at all (their rounds share no lane structure, but
-  independent graphs trivially share a wave).
+  independent graphs trivially share a wave);
+* **product axis** — their composition (``lane * Vtot + offset[g] + v``,
+  :class:`repro.core.coalescing.ProductAxis`): MANY queries over MANY
+  graphs in ONE wave, so a mixed tenant load (one hot graph with
+  several queries + a tail of single-query tenants) drains as a single
+  commit stream instead of a lane wave plus a graph batch
+  (:mod:`repro.serve.product_wave`; asynchronous continuous batching on
+  top lives in :mod:`repro.serve.continuous`).
 
 UpDown's event fabric and PIUMA's multi-tenant pipelines make the
 identical aggregate-small-events-into-big-atomic-steps bet in hardware.
@@ -44,6 +51,7 @@ the single-shard loops.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import jax.numpy as jnp
@@ -53,7 +61,7 @@ from repro.core import autotune as AT
 from repro.core import commit as C
 from repro.serve.queries import (BfsQuery, PprQuery, SsspQuery, StConnQuery,
                                  ColoringQuery, MstQuery, QUERY_KINDS,
-                                 GRAPH_ONLY_KINDS)
+                                 GRAPH_ONLY_KINDS, PRODUCT_KINDS)
 
 
 @dataclasses.dataclass
@@ -72,6 +80,14 @@ class ServiceStats:
     invalidated: int = 0     # in-flight tickets voided by re-registration
     timing_runs: int = 0     # autotune timed micro-benchmarks drains paid
     #                          (a warm-restored service asserts this stays 0)
+    product_waves: int = 0   # fused lanes×graphs product waves executed
+    product_cells: int = 0   # (lane, graph) cells across product waves
+    product_cells_padded: int = 0  # empty cells (no query) in those waves
+    # drain timing — read through the service's injected clock, so a
+    # fake-clock test sees deterministic values (no wall-clock flake)
+    drains: int = 0
+    drain_s: float = 0.0     # total time inside drain()
+    last_drain_s: float = 0.0
 
 
 def _pow2_ladder(width: int) -> tuple:
@@ -126,13 +142,24 @@ class GraphService:
                 daemon must not hold every [V] result row it ever
                 produced; ``result()`` raises KeyError for tickets older
                 than the last ``max_results``.
+    product:    fuse mixed-shape fuse-key groups (several graphs, some
+                holding several queries) as ONE lanes×graphs product
+                wave (:mod:`repro.serve.product_wave`) instead of a lane
+                wave per multi-query graph plus a graph batch for the
+                singles.  Single-shard only; mesh services keep the
+                two-axis drain.
+    clock:      0-arg callable returning seconds (default
+                ``time.perf_counter``) — every timing stat reads THIS
+                clock, so tests inject a fake clock and assert exact
+                values instead of flaking on wall time.
     """
 
     def __init__(self, *, spec: C.CommitSpec | None = None,
                  max_lanes: int = 8, max_graphs: int = 8, mesh=None,
                  capacity: int | str = "auto", axis: str = "data",
                  cache: bool = True, max_results: int = 4096,
-                 max_cache: int = 1024):
+                 max_cache: int = 1024, product: bool = True,
+                 clock=None):
         if max_lanes < 1 or (max_lanes & (max_lanes - 1)):
             raise ValueError(f"max_lanes must be a power of two, got "
                              f"{max_lanes}")
@@ -150,6 +177,8 @@ class GraphService:
         self.axis = axis
         self.max_results = max_results
         self.max_cache = max_cache
+        self.product = product
+        self.clock = clock if clock is not None else time.perf_counter
         self.stats = ServiceStats()
         self._graphs: dict[Any, Any] = {}
         # (graph_id tuple) -> GraphSet memo: keeps the union arrays (and
@@ -170,6 +199,10 @@ class GraphService:
         # (where, wave_index) raising to simulate a crash mid-drain
         self.fault_injector = None
         self._wave_i = 0
+        # re-registrations arriving while a drain is executing are
+        # DEFERRED to the drain boundary (see register_graph)
+        self._drain_depth = 0
+        self._deferred_regs: list = []
 
     @staticmethod
     def _bounded_put(d: dict, key, value, bound: int) -> None:
@@ -189,7 +222,22 @@ class GraphService:
         in-flight queue — their tickets raise KeyError forever (counted
         in ``stats.invalidated``) — so no answer computed on the old
         topology is ever served.  Same-topology re-registration is a
-        no-op for the cache."""
+        no-op for the cache.
+
+        Re-registering an EXISTING id while a drain is executing (the
+        async continuous loop, or a fault injector calling back into the
+        service mid-drain) defers the swap to the drain/wave boundary:
+        applying it immediately would purge the cache only for the
+        in-progress wave's ``finish`` to re-cache rows computed on the
+        old topology, and would void queue entries the drain's crash
+        handler is about to merge back.  The in-progress wave answers
+        against the graph its queries were admitted under; the new
+        topology (and its invalidation sweep) takes effect before the
+        next wave is built.  Brand-new ids register immediately — no
+        in-flight state can refer to them."""
+        if self._drain_depth > 0 and graph_id in self._graphs:
+            self._deferred_regs.append((graph_id, g))
+            return
         old = self._graphs.get(graph_id)
         if old is not None and not _same_topology(old, g):
             if self._cache is not None:
@@ -203,6 +251,14 @@ class GraphService:
             for k in [k for k in self._graphsets if graph_id in k]:
                 del self._graphsets[k]
         self._graphs[graph_id] = g
+
+    def _apply_deferred_regs(self) -> None:
+        """Apply re-registrations that arrived mid-drain (always called
+        at the drain boundary with ``_drain_depth`` back at 0 — the
+        point where cache purge + ticket voiding are race-free)."""
+        regs, self._deferred_regs = self._deferred_regs, []
+        for graph_id, g in regs:
+            self.register_graph(graph_id, g)
 
     def _graphset(self, graph_ids: tuple):
         from repro.graphs.csr import GraphSet
@@ -281,12 +337,14 @@ class GraphService:
     def drain(self) -> dict:
         """Execute every queued query in fused batch-axis waves.
 
-        Per fuse-key group the fusion axis is chosen here: graphs
-        holding SEVERAL distinct queries of the kind lane-fuse them
-        (one wave per graph, ``multi_source_*``); graphs holding ONE
-        query each fuse ACROSS graphs as a graph batch
-        (``batched_over_graphs_*``) — whole-graph kinds (coloring, MST)
-        only have the graph axis.  Returns {ticket: result} for
+        Per fuse-key group the fusion axis is chosen here: a MIXED group
+        — several graphs, at least one holding several queries — fuses
+        as ONE lanes×graphs PRODUCT wave (``product=True``, single-shard
+        only); otherwise graphs holding SEVERAL distinct queries of the
+        kind lane-fuse them (one wave per graph, ``multi_source_*``) and
+        graphs holding ONE query each fuse ACROSS graphs as a graph
+        batch (``batched_over_graphs_*``) — whole-graph kinds (coloring,
+        MST) only have the graph axis.  Returns {ticket: result} for
         everything completed by this call.
 
         Crash safety: a wave raising mid-drain (device fault, injected
@@ -298,6 +356,7 @@ class GraphService:
         # queries not finished yet — merged back on a mid-drain fault
         remaining = {k: dict(v) for k, v in queues.items()}
         t0_timing = AT.DEFAULT_TUNER.timed_runs
+        t0 = self.clock()
         by_fuse: dict[tuple, list] = {}
         for (graph_id, fk), lanes in queues.items():
             by_fuse.setdefault(fk, []).append((graph_id, lanes))
@@ -311,9 +370,18 @@ class GraphService:
                 done[t] = row
             remaining[(graph_id, q.fuse_key())].pop(q, None)
 
+        self._drain_depth += 1
         try:
             for fk, entries in by_fuse.items():
                 kind = fk[0]
+                if (self.product and self.mesh is None
+                        and kind in PRODUCT_KINDS and len(entries) >= 2
+                        and any(len(lanes) > 1 for _, lanes in entries)):
+                    # product axis: many queries × many graphs, one wave
+                    for gid, q, row in self._execute_product(kind,
+                                                             entries):
+                        finish(gid, q, row)
+                    continue
                 singles = [(gid, next(iter(lanes)))
                            for gid, lanes in entries if len(lanes) == 1]
                 multis = [(gid, lanes) for gid, lanes in entries
@@ -350,8 +418,15 @@ class GraphService:
                         t for t in tickets if t not in tgt.get(q, ()))
             raise
         finally:
+            self._drain_depth -= 1
+            if self._drain_depth == 0:
+                self._apply_deferred_regs()
             self.stats.timing_runs += AT.DEFAULT_TUNER.timed_runs \
                 - t0_timing
+            dt = self.clock() - t0
+            self.stats.drains += 1
+            self.stats.drain_s += dt
+            self.stats.last_drain_s = dt
         return done
 
     def _fault(self, where: str) -> None:
@@ -427,6 +502,45 @@ class GraphService:
                 batched_over_graphs_boruvka
             rows, _ = batched_over_graphs_boruvka(gs, **kw)
         return list(rows)[:k]
+
+    def _execute_product(self, kind: str, entries: list) -> list:
+        """Lanes×graphs product waves for one fuse-key group:
+        ``entries`` is [(graph_id, {query: tickets})] spanning several
+        graphs with mixed per-graph query counts.  Graphs chunk by
+        ``max_graphs``; the lane budget of each wave is the ladder width
+        of the deepest graph in the chunk (capped at ``max_lanes``;
+        deeper columns board follow-up waves).  Returns
+        [(graph_id, query, row)] for every real cell — empty cells are
+        padding, executed and discarded like ladder lanes."""
+        from repro.serve.product_wave import ProductWave
+        out = []
+        for lo in range(0, len(entries), self.max_graphs):
+            chunk = entries[lo:lo + self.max_graphs]
+            gids = tuple(gid for gid, _ in chunk)
+            gs = self._graphset(gids)
+            per_graph = [list(lanes) for _, lanes in chunk]
+            depth = max(len(qs) for qs in per_graph)
+            width = next(w for w in self.lane_ladder
+                         if w >= min(depth, self.max_lanes))
+            q0 = per_graph[0][0]
+            fuse = {"iters": q0.iters, "d": q0.d} if kind == "ppr" else {}
+            for r in range(0, depth, width):
+                self._fault("product")
+                wave = ProductWave(kind, gs, width, spec=self.spec,
+                                   fuse=fuse)
+                cells = []
+                for gi, qs in enumerate(per_graph):
+                    for li, q in enumerate(qs[r:r + width]):
+                        wave.insert(li, gi, q)
+                        cells.append((gi, li, q))
+                self.stats.product_waves += 1
+                self.stats.product_cells += width * len(chunk)
+                self.stats.product_cells_padded += \
+                    width * len(chunk) - len(cells)
+                wave.run()
+                for gi, li, q in cells:
+                    out.append((gids[gi], q, wave.extract(li, gi)))
+        return out
 
     def run(self, graph_id, queries) -> list:
         """Convenience: submit all, drain, return results in order."""
@@ -520,12 +634,13 @@ class GraphService:
         return build_snapshot(self)
 
     @classmethod
-    def restore(cls, snap, *, mesh=None):
+    def restore(cls, snap, *, mesh=None, clock=None):
         """Rebuild a WARM service from a snapshot: same config, graphs,
         cache, pending queue (original tickets), learned M levels, and
         imported autotune fits — the first drain runs zero timed
         calibrations and commits at the learned transaction size.
-        ``mesh`` re-attaches distributed execution (meshes are process
-        resources and do not serialize)."""
+        ``mesh`` re-attaches distributed execution and ``clock`` the
+        injected timebase (both are process resources and do not
+        serialize)."""
         from repro.serve.durable import restore_service
-        return restore_service(snap, mesh=mesh)
+        return restore_service(snap, mesh=mesh, clock=clock)

@@ -1,0 +1,371 @@
+"""Lanes×graphs product waves — resumable, insertable AAM execution
+(ISSUE 7).
+
+A :class:`ProductWave` runs ONE fused wave over the
+:class:`repro.core.coalescing.ProductAxis`: up to L queries over EACH
+graph of a :class:`repro.graphs.csr.GraphSet`.  State is lane-major
+over the union key space (``[L, Vtot]``; composite commit keys
+``lane * Vtot + offset[g] + v``), so a (lane, graph) CELL is an
+independent work item — the hot tenant's three BFS queries and five
+single-query tenants drain as one commit stream instead of a lane wave
+plus a graph wave.
+
+Two properties make it the serving substrate for continuous batching
+(the MaxText prefill/insert/generate shape):
+
+* **resumable** — rounds execute in jit'd chunks of ``round_chunk``;
+  between chunks the host owns the state;
+* **insertable** — an empty (padding or freed) cell admits a NEW query
+  mid-run by splicing its initial state at a round boundary
+  (:meth:`insert`); disjoint flat key ranges mean the late cell's
+  per-round arithmetic is exactly what an idle run would do, so its
+  answer is bit-identical (float ``add`` to rounding — same caveat as
+  every transaction-size change) no matter at which round it boarded.
+
+Per-cell completion (:meth:`cell_done`) lets a drain loop harvest and
+free finished cells while stragglers keep the wave warm.  Whole-graph
+kinds (coloring, MST) have no lane form and stay on the graph batch
+axis — ``PRODUCT_KINDS`` names what can ride here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import autotune as AT
+from repro.core import commit as C
+from repro.core.coalescing import ProductAxis
+from repro.core.messages import product_messages
+from repro.graphs.csr import GraphSet
+from repro.serve.queries import PRODUCT_KINDS
+
+INT_INF = jnp.int32(2 ** 30)
+F32_INF = jnp.float32(3.0e38)
+
+# full-run chunk limit: round loops are frontier/rem-bounded, the limit
+# only guards the while_loop — one static value keeps the jit key stable
+_RUN_ALL = 1 << 30
+
+
+def _strip_it(st):
+    st = dict(st)
+    st.pop("it")
+    return st
+
+
+@partial(jax.jit, static_argnames=("axis", "spec", "limit", "weighted"))
+def _dist_chunk(g, axis, state, spec, limit, weighted):
+    """BFS/SSSP product rounds: FF&MF ``min`` relaxation over the union,
+    every lane at once.  Cells converge independently (empty frontier);
+    extra rounds cannot move a converged cell (min is monotone and
+    components are disjoint)."""
+    lanes, vt = axis.lanes, axis.num_vertices
+    e = g.src.shape[0]
+    dst_b = jnp.broadcast_to(g.dst, (lanes, e))
+    step, _ = AT.make_commit_step(spec, "min", state["dist"].reshape(-1),
+                                  n=lanes * e, axis_width=axis.race_width)
+
+    def cond(st):
+        return jnp.any(st["frontier"]) & (st["it"] < limit)
+
+    def body(st):
+        dist = st["dist"]
+        active = st["frontier"][:, g.src]
+        pay = dist[:, g.src] + (g.weights[None, :] if weighted else 1)
+        msgs = product_messages(dst_b, pay, active, axis)
+        res, lvl = step(dist.reshape(-1), msgs, st["lvl"])
+        dist2 = res.state.reshape(lanes, vt)
+        return dict(st, dist=dist2, frontier=dist2 != dist, lvl=lvl,
+                    it=st["it"] + 1)
+
+    st = jax.lax.while_loop(cond, body,
+                            dict(state, it=jnp.zeros((), jnp.int32)))
+    return _strip_it(st), ~jnp.any(st["frontier"]), st["it"]
+
+
+@partial(jax.jit, static_argnames=("axis", "spec", "limit"))
+def _ppr_chunk(g, axis, gov, egov, deg, dangling, d, state, spec, limit):
+    """Personalized-PageRank product rounds: FF&AS ``add`` waves with a
+    per-CELL iteration budget ``rem`` [L, G] (a cell inserted at round k
+    still runs its full ``iters`` rounds while earlier cells stop on
+    their own schedule) and per-cell dangling mass (segment sums by the
+    graph-of-vertex map, one per lane)."""
+    lanes, vt = axis.lanes, axis.num_vertices
+    ng = axis.num_graphs
+    e = g.src.shape[0]
+    dst_b = jnp.broadcast_to(g.dst, (lanes, e))
+    acc0 = jnp.zeros((lanes * vt,), jnp.float32)
+    step, _ = AT.make_commit_step(spec, "add", acc0, n=lanes * e,
+                                  axis_width=axis.race_width)
+
+    def cond(st):
+        return jnp.any(st["rem"] > 0) & (st["it"] < limit)
+
+    def body(st):
+        rank = st["rank"]
+        alive = st["rem"] > 0                               # [L, G]
+        contrib = d * rank[:, g.src] / deg[g.src][None, :]
+        msgs = product_messages(dst_b, contrib, alive[:, egov], axis)
+        res, lvl = step(acc0, msgs, st["lvl"])
+        dm = jax.ops.segment_sum(
+            jnp.where(dangling[None, :], rank, 0.0).T, gov,
+            num_segments=ng).T                              # [L, G]
+        rank2 = st["restart"] * ((1.0 - d) + d * dm[:, gov]) \
+            + res.state.reshape(lanes, vt)
+        alive_v = alive[:, gov]                             # [L, Vt]
+        return dict(st, rank=jnp.where(alive_v, rank2, rank),
+                    rem=st["rem"] - alive.astype(jnp.int32),
+                    lvl=lvl, it=st["it"] + 1)
+
+    st = jax.lax.while_loop(cond, body,
+                            dict(state, it=jnp.zeros((), jnp.int32)))
+    return _strip_it(st), ~jnp.any(st["rem"] > 0), st["it"]
+
+
+@partial(jax.jit, static_argnames=("axis", "spec", "limit"))
+def _stconn_chunk(g, axis, gov, egov, state, spec, limit):
+    """s-t connectivity product rounds: query cell (l, g) runs its two
+    BFS marks as PAIRED lanes 2l (grey) / 2l+1 (green) of the product
+    axis — the same 2-mark nesting ``_union_stconn`` proves, one level
+    up.  ``found`` is [L, G] (per-cell segment reduction of the
+    mark-meet by graph); answered cells go quiet."""
+    l2, vt = axis.lanes, axis.num_vertices        # axis.lanes == 2L
+    ng = axis.num_graphs
+    e = g.src.shape[0]
+    dst_b = jnp.broadcast_to(g.dst, (l2, e))
+    step, _ = AT.make_commit_step(spec, "or", state["marks"].reshape(-1),
+                                  n=l2 * e, axis_width=axis.race_width)
+
+    def live(st):
+        quiet = jnp.repeat(~st["found"], 2, axis=0)         # [2L, G]
+        return st["frontier"] & quiet[:, gov]
+
+    def cond(st):
+        return jnp.any(live(st)) & (st["it"] < limit)
+
+    def body(st):
+        marks = st["marks"]
+        quiet_e = jnp.repeat(~st["found"], 2, axis=0)[:, egov]
+        active = st["frontier"][:, g.src] & quiet_e
+        msgs = product_messages(dst_b, active.astype(jnp.int32), active,
+                                axis)
+        res, lvl = step(marks.reshape(-1), msgs, st["lvl"])
+        marks2 = res.state.reshape(l2, vt)
+        frontier2 = (marks2 != 0) & (marks == 0)
+        meet = (marks2[0::2] != 0) & (marks2[1::2] != 0)    # [L, Vt]
+        found2 = st["found"] | (jax.ops.segment_sum(
+            meet.astype(jnp.int32).T, gov, num_segments=ng).T > 0)
+        return dict(st, marks=marks2, frontier=frontier2, found=found2,
+                    lvl=lvl, it=st["it"] + 1)
+
+    st = jax.lax.while_loop(cond, body,
+                            dict(state, it=jnp.zeros((), jnp.int32)))
+    return _strip_it(st), ~jnp.any(live(st)), st["it"]
+
+
+class ProductWave:
+    """One resumable lanes×graphs wave over a GraphSet.
+
+    ``lanes`` is the lane budget L (cells per graph); stconn internally
+    doubles the axis (paired mark lanes) but its cell coordinates are
+    still (lane < L, graph).  ``fuse`` carries the kind's trace-time
+    knobs (ppr: ``{"iters": .., "d": ..}``) — queries sharing the wave
+    must share them (the service's fuse-key grouping guarantees it).
+    """
+
+    def __init__(self, kind: str, gs: GraphSet, lanes: int, *,
+                 spec: C.CommitSpec | None = None, fuse: dict | None = None,
+                 round_chunk: int = 4):
+        if kind not in PRODUCT_KINDS:
+            raise ValueError(f"kind {kind!r} has no lane form — serve it "
+                             f"on the graph batch axis")
+        self.kind = kind
+        self.gs = gs
+        self.lanes = int(lanes)
+        self.spec = spec if spec is not None \
+            else C.CommitSpec(backend="coarse", stats=False)
+        self.fuse = dict(fuse or {})
+        self.round_chunk = int(round_chunk)
+        width = 2 * self.lanes if kind == "stconn" else self.lanes
+        self.axis = ProductAxis(width, gs.axis.sizes)
+        self.g = gs.union()
+        self._gov = gs.graph_of_vertex()
+        self._egov = gs.graph_of_edge()
+        self.occupied = np.zeros((self.lanes, gs.num_graphs), bool)
+        self.rounds = 0
+        self.done = True                 # empty wave has nothing to run
+        vt = self.axis.num_vertices
+        lvl_state = jax.ShapeDtypeStruct(
+            (self.axis.flat_size,),
+            jnp.float32 if kind in ("sssp", "ppr") else jnp.int32)
+        _, lvl0 = AT.make_commit_step(
+            self.spec, {"bfs": "min", "sssp": "min", "ppr": "add",
+                        "stconn": "or"}[kind],
+            lvl_state, n=self.axis.flat_size,
+            axis_width=self.axis.race_width)
+        if kind == "bfs":
+            self.state = {"dist": jnp.full((width, vt), INT_INF, jnp.int32),
+                          "frontier": jnp.zeros((width, vt), bool),
+                          "lvl": lvl0}
+        elif kind == "sssp":
+            self.state = {"dist": jnp.full((width, vt), F32_INF,
+                                           jnp.float32),
+                          "frontier": jnp.zeros((width, vt), bool),
+                          "lvl": lvl0}
+        elif kind == "ppr":
+            self.state = {"rank": jnp.zeros((width, vt), jnp.float32),
+                          "restart": jnp.zeros((width, vt), jnp.float32),
+                          "rem": jnp.zeros((width, gs.num_graphs),
+                                           jnp.int32),
+                          "lvl": lvl0}
+            deg = jnp.maximum(self.g.degrees, 1).astype(jnp.float32)
+            self._deg, self._dangling = deg, self.g.degrees == 0
+        else:                            # stconn
+            self.state = {"marks": jnp.zeros((width, vt), jnp.int32),
+                          "frontier": jnp.zeros((width, vt), bool),
+                          "found": jnp.zeros((self.lanes, gs.num_graphs),
+                                             bool),
+                          "lvl": lvl0}
+
+    # -- cell lifecycle ---------------------------------------------------
+
+    def free_cell(self, graph: int) -> int | None:
+        """Lowest free lane slot in column ``graph`` (None = full)."""
+        for lane in range(self.lanes):
+            if not self.occupied[lane, graph]:
+                return lane
+        return None
+
+    def insert(self, lane: int, graph: int, query) -> None:
+        """Claim cell (lane, graph) for ``query`` and splice its initial
+        state — legal at ANY round boundary, including round 0 of an
+        idle wave and round k of a running one (the continuous-batching
+        insert)."""
+        if self.occupied[lane, graph]:
+            raise ValueError(f"cell ({lane}, {graph}) is occupied")
+        off = int(self.gs.voffs[graph])
+        st = self.state
+        if self.kind in ("bfs", "sssp"):
+            src = off + int(query.source)
+            zero = 0 if self.kind == "bfs" else 0.0
+            self.state = dict(
+                st, dist=st["dist"].at[lane, src].set(zero),
+                frontier=st["frontier"].at[lane, src].set(True))
+        elif self.kind == "ppr":
+            src = off + int(query.source)
+            self.state = dict(
+                st, rank=st["rank"].at[lane, src].set(1.0),
+                restart=st["restart"].at[lane, src].set(1.0),
+                rem=st["rem"].at[lane, graph].set(int(query.iters)))
+        else:                            # stconn: paired mark lanes
+            s, t = off + int(query.s), off + int(query.t)
+            marks = st["marks"].at[2 * lane, s].set(1) \
+                .at[2 * lane + 1, t].set(1)
+            frontier = st["frontier"].at[2 * lane, s].set(True) \
+                .at[2 * lane + 1, t].set(True)
+            self.state = dict(
+                st, marks=marks, frontier=frontier,
+                found=st["found"].at[lane, graph].set(
+                    int(query.s) == int(query.t)))
+        self.occupied[lane, graph] = True
+        self.done = False
+
+    def cell_done(self, lane: int, graph: int) -> bool:
+        """Has cell (lane, graph) converged?  (Monotone kinds cannot
+        un-converge — a done cell's answer is final even while the wave
+        keeps running for the stragglers.)"""
+        if not self.occupied[lane, graph]:
+            return False
+        lo = int(self.gs.voffs[graph])
+        hi = int(self.gs.voffs[graph + 1])
+        st = self.state
+        if self.kind in ("bfs", "sssp"):
+            return not bool(jnp.any(st["frontier"][lane, lo:hi]))
+        if self.kind == "ppr":
+            return int(st["rem"][lane, graph]) == 0
+        if bool(st["found"][lane, graph]):
+            return True
+        return not bool(jnp.any(st["frontier"][2 * lane:2 * lane + 2,
+                                               lo:hi]))
+
+    def extract(self, lane: int, graph: int):
+        """The cell's result row (same row types the service caches)."""
+        lo = int(self.gs.voffs[graph])
+        hi = int(self.gs.voffs[graph + 1])
+        st = self.state
+        if self.kind in ("bfs", "sssp"):
+            return st["dist"][lane, lo:hi]
+        if self.kind == "ppr":
+            return st["rank"][lane, lo:hi]
+        return bool(st["found"][lane, graph])
+
+    def release(self, lane: int, graph: int) -> None:
+        """Reset cell (lane, graph) to empty so a later :meth:`insert`
+        can reuse the slot mid-run (the continuous loop's harvest)."""
+        lo = int(self.gs.voffs[graph])
+        hi = int(self.gs.voffs[graph + 1])
+        st = self.state
+        if self.kind in ("bfs", "sssp"):
+            inf = INT_INF if self.kind == "bfs" else F32_INF
+            self.state = dict(
+                st,
+                dist=st["dist"].at[lane, lo:hi].set(inf),
+                frontier=st["frontier"].at[lane, lo:hi].set(False))
+        elif self.kind == "ppr":
+            self.state = dict(
+                st,
+                rank=st["rank"].at[lane, lo:hi].set(0.0),
+                restart=st["restart"].at[lane, lo:hi].set(0.0),
+                rem=st["rem"].at[lane, graph].set(0))
+        else:
+            self.state = dict(
+                st,
+                marks=st["marks"].at[2 * lane:2 * lane + 2, lo:hi].set(0),
+                frontier=st["frontier"]
+                .at[2 * lane:2 * lane + 2, lo:hi].set(False),
+                found=st["found"].at[lane, graph].set(False))
+        self.occupied[lane, graph] = False
+        if not self.occupied.any():
+            self.done = True
+
+    # -- execution --------------------------------------------------------
+
+    def _step(self, limit: int):
+        if self.kind in ("bfs", "sssp"):
+            st, done, it = _dist_chunk(self.g, self.axis, self.state,
+                                       self.spec, limit,
+                                       self.kind == "sssp")
+        elif self.kind == "ppr":
+            st, done, it = _ppr_chunk(
+                self.g, self.axis, self._gov, self._egov, self._deg,
+                self._dangling, float(self.fuse.get("d", 0.85)),
+                self.state, self.spec, limit)
+        else:
+            st, done, it = _stconn_chunk(self.g, self.axis, self._gov,
+                                         self._egov, self.state,
+                                         self.spec, limit)
+        self.state = st
+        self.rounds += int(it)
+        self.done = bool(done)
+        return self.done
+
+    def run_chunk(self, rounds: int | None = None) -> bool:
+        """Execute up to ``rounds`` (default ``round_chunk``) rounds;
+        returns True when no live work remains.  The gap between chunks
+        is the ROUND BOUNDARY where :meth:`insert`/:meth:`release` are
+        legal."""
+        if self.done:
+            return True
+        return self._step(int(rounds or self.round_chunk))
+
+    def run(self) -> int:
+        """Run to completion (the synchronous drain path); returns total
+        rounds executed."""
+        if not self.done:
+            self._step(_RUN_ALL)
+        return self.rounds

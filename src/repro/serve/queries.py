@@ -92,6 +92,10 @@ class MstQuery:
 QUERY_KINDS = ("bfs", "sssp", "ppr", "stconn", "coloring", "mst")
 # kinds with no query-lane form — servable via the graph batch axis only
 GRAPH_ONLY_KINDS = ("coloring", "mst")
+# kinds with a lane form — servable on the lanes×graphs PRODUCT axis
+# (one wave = many queries × many tenant graphs; see
+# repro.serve.product_wave)
+PRODUCT_KINDS = tuple(k for k in QUERY_KINDS if k not in GRAPH_ONLY_KINDS)
 
 QUERY_CLASSES = {cls.kind: cls for cls in
                  (BfsQuery, SsspQuery, PprQuery, StConnQuery,

@@ -484,14 +484,16 @@ def test_service_rejects_unknown_graph_and_pending_result():
 
 
 def test_service_mixed_axes_routing():
-    """Axis choice at drain: same-graph requests fuse as lanes,
-    same-kind single requests across graphs fuse as a graph batch, and
-    the whole-graph kinds (coloring, mst) ride the graph axis they
-    finally have."""
+    """Axis choice at drain with the product axis OFF: same-graph
+    requests fuse as lanes, same-kind single requests across graphs
+    fuse as a graph batch, and the whole-graph kinds (coloring, mst)
+    ride the graph axis they finally have.  (With the default
+    ``product=True`` the mixed bfs group fuses as ONE lanes×graphs
+    product wave instead — tests/test_product_axis.py.)"""
     from repro.serve.queries import BfsQuery, ColoringQuery, MstQuery
     g1, g2, g3 = (kronecker(6, 4, seed=1), erdos_renyi(60, 3.0, seed=2),
                   kronecker(5, 4, seed=9))
-    svc = _service(max_lanes=4, max_graphs=4)
+    svc = _service(max_lanes=4, max_graphs=4, product=False)
     for gid, g in (("a", g1), ("b", g2), ("c", g3)):
         svc.register_graph(gid, g)
     ta = [svc.submit("a", BfsQuery(s)) for s in (0, 1, 2)]   # lane wave
