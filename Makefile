@@ -14,11 +14,17 @@ export PYTHONPATH := src
 TIER2_XLA := --xla_cpu_multi_thread_eigen=false
 TIER2_ENV := REPRO_XLA_EXTRA="$(TIER2_XLA)" PYTHONHASHSEED=0
 
-.PHONY: tier1 tier2 test bench bench-json bench-serve bench-crash \
+.PHONY: tier1 tier2 test lint bench bench-json bench-serve bench-crash \
 	bench-latency
 
 tier1:
 	$(PY) -m pytest -x -q -m "not slow"
+
+# aamlint: op-algebra + key-space + jaxpr wave-race passes over all six
+# algorithms x batch-axis kinds, plus the BENCH_*.json schema check
+# (exits nonzero on findings; see README "Static analysis & sanitizers")
+lint:
+	$(PY) -m repro.analysis.lint --bench-schema
 
 tier2:
 	$(TIER2_ENV) $(PY) -m pytest -q -m slow

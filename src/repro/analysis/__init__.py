@@ -1,0 +1,26 @@
+"""aamlint — wave-safety static analysis + runtime conflict sanitizer.
+
+The paper's HTM gives serializability of atomic active messages in
+hardware; the software reproduction only inherits the guarantee when
+every commit site obeys three preconditions that hardware enforced
+implicitly:
+
+* the commit op is reorder-safe (commutative/associative, idempotent
+  where a message can be delivered more than once) — checked by
+  :mod:`repro.analysis.algebra`;
+* composite batch-axis keys are disjoint and fit the key dtype —
+  checked by :mod:`repro.analysis.keyspace`;
+* no round reads a state array it is also writing outside ``commit()``'s
+  conflict resolution — checked by :mod:`repro.analysis.waverace`;
+
+plus a dynamic check, :mod:`repro.analysis.sanitize`, that replays every
+``commit()`` in a permuted message order and asserts the result is
+unchanged (``REPRO_SANITIZE=1`` / ``CommitSpec(sanitize=True)``).
+
+``python -m repro.analysis.lint`` runs all static passes and exits
+nonzero on findings.
+"""
+from repro.analysis.sanitize import (SanitizeError, clear_reports,
+                                     reports)
+
+__all__ = ["SanitizeError", "clear_reports", "reports"]

@@ -1,0 +1,154 @@
+"""Runtime conflict sanitizer — permuted-message-order commit replay.
+
+HTM hardware guarantees that a batch of atomic active messages commits
+as if in *some* serial order; our software commit claims the stronger
+property that the result does not depend on the order at all (the op
+algebra makes every serialization equivalent).  The sanitizer checks
+that claim where it actually matters — at every ``commit()`` call, on
+the live workload — by replaying the same batch through the same
+backend with the messages in a fixed pseudo-random permutation and
+asserting the state arrays match.
+
+* ``min``/``max``/``or`` and integer ``add``: bit-identical.
+* float ``add``: reassociation moves float rounding, so the replay is
+  compared to tolerance (:data:`ADD_RTOL`/:data:`ADD_ATOL`) — the same
+  caveat the pagerank/ppr parity tests document.
+* ``first``: order-dependent by construction; the shadow instead
+  re-derives the winner *rank-aware* (tiebreak = original message
+  index, the documented deterministic rule) from the permuted batch and
+  checks the shipped positional tiebreak picked the same winner.
+
+Enable per-site with ``CommitSpec(sanitize=True)`` or globally with
+``REPRO_SANITIZE=1``.  A mismatch is recorded in :func:`reports` and
+raised as :class:`SanitizeError` from a :func:`jax.debug.callback`
+(surfacing as ``XlaRuntimeError`` under jit).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+# float add replay tolerance: one segmented reduction vs another with a
+# different association order; 2e-4 relative covers f32 across the
+# calibration workloads with ~100x margin.
+ADD_RTOL = 2e-4
+ADD_ATOL = 1e-6
+
+_PERM_SEED = 0xA51
+
+
+class SanitizeError(AssertionError):
+    """A commit produced an order-dependent result."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SanitizeReport:
+    op: str
+    backend: str
+    capacity: int
+    max_abs_err: float
+    note: str
+
+
+_REPORTS: list[SanitizeReport] = []
+
+
+def reports() -> tuple[SanitizeReport, ...]:
+    """Mismatches recorded so far (host-side, survives the raise)."""
+    return tuple(_REPORTS)
+
+
+def clear_reports() -> None:
+    _REPORTS.clear()
+
+
+def _perm(n: int) -> np.ndarray:
+    """Fixed permutation of ``range(n)`` — deterministic per capacity so
+    sanitized runs stay reproducible (and jit caches stay warm)."""
+    return np.asarray(np.random.default_rng(_PERM_SEED).permutation(n),
+                      np.int32)
+
+
+def _permute_messages(msgs, perm):
+    take = lambda a: jnp.asarray(a)[perm]
+    return dataclasses.replace(
+        msgs, target=take(msgs.target),
+        payload=jax.tree.map(take, msgs.payload),
+        valid=take(msgs.valid))
+
+
+def _record(ok, err, *, op: str, backend: str, capacity: int, note: str):
+    ok = bool(ok)
+    err = float(err)
+    if not ok:
+        rep = SanitizeReport(op=op, backend=backend, capacity=capacity,
+                             max_abs_err=err, note=note)
+        _REPORTS.append(rep)
+        raise SanitizeError(
+            f"commit(op={op!r}, backend={backend!r}, n={capacity}) is "
+            f"order-dependent: permuted replay diverges by {err:.3e} "
+            f"({note}).  The wave feeding this commit violates the "
+            f"reorder-invariance the AAM pipeline assumes — see "
+            f"`python -m repro.analysis.lint`.")
+
+
+def _compare(result, shadow, op: str, *, exact: bool):
+    a = jnp.asarray(result)
+    b = jnp.asarray(shadow)
+    if exact:
+        eq = a == b
+        # subtract after the float cast: bool state (`or` waves) has no `-`
+        err = jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))
+    else:
+        d = jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))
+        tol = ADD_ATOL + ADD_RTOL * jnp.abs(b).astype(jnp.float32)
+        eq = d <= tol
+        err = jnp.max(d)
+    return jnp.all(eq), err
+
+
+def _first_shadow(state, msgs, perm):
+    """Rank-aware replay of a ``first`` commit from the permuted batch.
+
+    ``_first_winner(..., rank=perm)`` makes the tiebreak key the
+    *original* message index, so the winner is position-independent;
+    the payload is then fetched from the permuted batch at the winner's
+    permuted position — if the shipped positional tiebreak disagreed
+    with the documented min-message-index rule, the states differ."""
+    from repro.core import commit as C
+    pm = _permute_messages(msgs, perm)
+    n = msgs.capacity
+    winner_rank, takes = C._first_winner(state, pm, rank=perm)
+    pos = jnp.argsort(perm)[jnp.clip(winner_rank, 0, n - 1)]
+    return jnp.where(takes, pm.payload[pos], state)
+
+
+def shadow_check(state, msgs, op: str, spec, backend: str, result_state):
+    """Replay ``commit(state, msgs, op)`` with permuted messages through
+    the *same* backend and assert the state is unchanged.
+
+    Called from :func:`repro.core.commit.commit` (never re-enters it —
+    the replay dispatches directly, else ``REPRO_SANITIZE=1`` would
+    shadow the shadow forever)."""
+    from repro.core import commit as C
+    n = msgs.capacity
+    perm = jnp.asarray(_perm(n))
+    if op == "first":
+        shadow = _first_shadow(state, msgs, perm)
+        exact = True
+        note = "rank-aware first replay"
+    else:
+        pm = _permute_messages(msgs, perm)
+        shadow = C._dispatch(state, pm, op, spec, backend).state
+        exact = not (op == "add"
+                     and jnp.issubdtype(jnp.asarray(state).dtype,
+                                        jnp.floating))
+        note = ("permuted replay" if exact
+                else f"permuted replay, float add tol rtol={ADD_RTOL}")
+    ok, err = _compare(result_state, shadow, op, exact=exact)
+    jax.debug.callback(_record, ok, err, op=op, backend=backend,
+                       capacity=n, note=note)

@@ -88,13 +88,14 @@ class TunerPolicy:
     tile_m: int = 256
     block_v: int = 512
     interpret: bool | None = None
+    sanitize: bool = False
 
     def spec_at(self, level: int) -> CommitSpec:
         """Concrete CommitSpec for one ladder level."""
         return CommitSpec(backend=self.backend, m=self.ladder[level],
                           sort=self.sort, stats=self.stats,
                           tile_m=self.tile_m, block_v=self.block_v,
-                          interpret=self.interpret)
+                          interpret=self.interpret, sanitize=self.sanitize)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -472,9 +473,11 @@ class AutoTuner:
         if spec.m is not None:
             # user pinned the transaction size: tune the backend only
             return TunerPolicy(backend=backend, ladder=(spec.m,),
-                               init_level=0, adaptive=False, **base)
+                               init_level=0, adaptive=False,
+                               sanitize=spec.sanitize, **base)
         if backend == "atomic":
-            return TunerPolicy(backend=backend, adaptive=False, **base)
+            return TunerPolicy(backend=backend, adaptive=False,
+                               sanitize=spec.sanitize, **base)
         # stage-2 feedback needs conflict telemetry: stats=True (full), or
         # the sorted coarse path's cheap O(N) counters.  Without either
         # (e.g. coarse sort=False stats=False routes through the raw
@@ -486,7 +489,8 @@ class AutoTuner:
         if m_star >= n:          # whole batch fits one transaction
             level = len(M_LADDER) - 1
         return TunerPolicy(backend=backend, ladder=M_LADDER,
-                           init_level=level, adaptive=has_telemetry, **base)
+                           init_level=level, adaptive=has_telemetry,
+                           sanitize=spec.sanitize, **base)
 
 
 DEFAULT_TUNER = AutoTuner()

@@ -68,6 +68,38 @@ DENSE_PLANNER_MAX_BUCKETS = 32
 # ---------------------------------------------------------------------------
 
 
+# Largest admissible flat key space for int32 composite keys.  Commit
+# backends reserve one slot PAST the state (``idx = flat_size`` is the
+# drop sentinel and ``num_segments = flat_size + 1`` sizes the segment
+# reductions), so the bound is iinfo(int32).max - 1, not .max: both the
+# sentinel id and the segment count must stay representable.  Checked
+# statically wherever a composite key space is born (the batch axes
+# below, ``repro.core.engine.route_wave``'s vertex-major local keys) —
+# the aamlint keyspace pass (repro.analysis.keyspace) re-derives the
+# same bound as a diagnostic for axis shapes that never get built.
+MAX_FLAT_KEYS = 2 ** 31 - 2
+
+
+def require_key_space(flat_size: int, *, where: str) -> int:
+    """Static int32-overflow guard for a composite commit-key space.
+
+    Raises ``OverflowError`` when ``flat_size`` flat keys cannot be
+    carried in int32 (keys are ``major * stride + minor`` int32
+    arithmetic — beyond the bound they silently wrap and items ALIAS
+    each other's state).  Call with python ints at trace/build time;
+    returns ``flat_size`` so it can be used inline."""
+    flat_size = int(flat_size)
+    if flat_size > MAX_FLAT_KEYS:
+        raise OverflowError(
+            f"{where}: {flat_size} flat keys exceed the int32 key space "
+            f"(max {MAX_FLAT_KEYS}; commit needs one extra slot for the "
+            f"drop sentinel).  Shrink the batch (fewer lanes/graphs per "
+            f"wave) or upcast the key pipeline to int64 "
+            f"(jax.config.update('jax_enable_x64', True) plus int64 "
+            f"targets end-to-end — fuse_keys, messages, commit).")
+    return flat_size
+
+
 def fuse_keys(major: jax.Array, minor: jax.Array, stride: int) -> jax.Array:
     """Axis-generic composite commit key ``major * stride + minor`` —
     THE place the composite-key convention lives; both layouts go
@@ -115,6 +147,13 @@ class QueryLanes:
     lanes: int
     num_vertices: int
 
+    def __post_init__(self):
+        if int(self.lanes) < 1 or int(self.num_vertices) < 1:
+            raise ValueError(f"QueryLanes needs lanes/num_vertices >= 1, "
+                             f"got {self.lanes}/{self.num_vertices}")
+        require_key_space(int(self.lanes) * int(self.num_vertices),
+                          where="QueryLanes(L, V)")
+
     @property
     def flat_size(self) -> int:
         return self.lanes * self.num_vertices
@@ -157,6 +196,8 @@ class GraphBatch:
         if not self.sizes or any(int(s) < 1 for s in self.sizes):
             raise ValueError(f"GraphBatch needs positive per-graph sizes, "
                              f"got {self.sizes}")
+        require_key_space(sum(int(s) for s in self.sizes),
+                          where="GraphBatch(sizes)")
 
     @property
     def offsets(self) -> tuple:
@@ -227,6 +268,11 @@ class ProductAxis:
         if not self.sizes or any(int(s) < 1 for s in self.sizes):
             raise ValueError(f"ProductAxis needs positive per-graph sizes, "
                              f"got {self.sizes}")
+        # L × Vtot is where the int32 hazard actually bites (a modest lane
+        # budget times a big tenant union overflows long before either
+        # axis would alone) — flatten3 arithmetic wraps silently past it
+        require_key_space(int(self.lanes) * sum(int(s) for s in self.sizes),
+                          where="ProductAxis(L, sizes): L * Vtot")
 
     @property
     def graph_axis(self) -> GraphBatch:

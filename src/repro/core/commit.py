@@ -27,6 +27,7 @@ dtypes) fall back to ``coarse`` automatically.
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import jax
 import jax.numpy as jnp
@@ -91,6 +92,15 @@ class CommitSpec:
                of the calibrated M* (0 = whole batch).  Unlike ``m`` this
                does NOT pin the size — the ladder still adapts.  Restored
                services use it to re-enter at the learned level.
+    sanitize:  shadow every commit with a permuted-message-order replay
+               and assert the state is reorder-invariant (bit-identical;
+               float ``add`` to documented rounding tolerance) — the
+               runtime conflict sanitizer of :mod:`repro.analysis`.
+               ``REPRO_SANITIZE=1`` in the environment turns it on
+               globally without touching specs.  Mismatches raise
+               :class:`repro.analysis.sanitize.SanitizeError` (surfaced
+               as ``XlaRuntimeError`` under jit) and are recorded in
+               :func:`repro.analysis.sanitize.reports`.
 
     Frozen + hashable so a spec can be a ``static_argnames`` entry of any
     jitted caller.
@@ -103,6 +113,7 @@ class CommitSpec:
     block_v: int = 512
     interpret: bool | None = None
     seed_m: int | None = None
+    sanitize: bool = False
 
     def __post_init__(self):
         if self.m is not None and self.m < 1:
@@ -141,6 +152,28 @@ def commit(state: jax.Array, msgs: Messages, op: str,
     backend = spec.backend
     if backend == "pallas" and not _pallas_supported(state, msgs, op):
         backend = "coarse"
+    # the named scope marks every scatter/gather of the conflict-resolved
+    # write path in traced jaxprs — repro.analysis.waverace keys its
+    # in-wave-race rule on it (raw state writes OUTSIDE this scope are
+    # unserialized and get flagged)
+    with jax.named_scope("aam_commit"):
+        res = _dispatch(state, msgs, op, spec, backend)
+        if (spec.sanitize or _sanitize_env()) and msgs.capacity > 1:
+            from repro.analysis.sanitize import shadow_check  # lazy: no cycle
+            shadow_check(state, msgs, op, spec, backend, res.state)
+    return res
+
+
+def _sanitize_env() -> bool:
+    return os.environ.get("REPRO_SANITIZE", "").lower() in (
+        "1", "true", "on", "yes")
+
+
+def _dispatch(state: jax.Array, msgs: Messages, op: str, spec: CommitSpec,
+              backend: str) -> CommitResult:
+    """Backend dispatch with fallback already resolved — shared by
+    :func:`commit` and the sanitizer's shadow replay (which must NOT
+    re-enter :func:`commit`, or the shadow would shadow itself)."""
     if backend == "atomic":
         return atomic_commit(state, msgs, op, stats=spec.stats)
     if backend == "coarse":
@@ -387,13 +420,18 @@ def _resolved_commit(state, msgs: Messages, op: str, sort: bool,
     return CommitResult(new, success, conflicts, applied)
 
 
-def _first_winner(state, msgs: Messages):
+def _first_winner(state, msgs: Messages, rank=None):
     """(winner_rank [V], takes [V]) for first-writer-wins into empty (-1)
-    slots; in-batch ties -> lowest message index."""
+    slots; in-batch ties -> lowest message index.
+
+    ``rank`` overrides the per-message tiebreak key (default: position in
+    the batch).  The sanitizer's permuted-order shadow replay passes the
+    original indices here so the winner is order-independent."""
     v = state.shape[0]
     n = msgs.capacity
     idx = jnp.where(msgs.valid, msgs.target, v)
-    msg_rank = jnp.arange(n, dtype=jnp.int32)
+    msg_rank = (jnp.arange(n, dtype=jnp.int32) if rank is None
+                else jnp.asarray(rank, jnp.int32))
     winner_rank = jax.ops.segment_min(msg_rank, idx, num_segments=v + 1)[:v]
     takes = (state < 0) & (winner_rank < n)
     return winner_rank, takes

@@ -46,7 +46,7 @@ from repro.core import autotune as AT
 from repro.core import commit as C
 from repro.core.coalescing import (BucketPlan, fuse_keys,
                                    gather_from_buckets, plan_buckets_sorted,
-                                   scatter_to_buckets)
+                                   require_key_space, scatter_to_buckets)
 from repro.core.messages import make_messages
 
 
@@ -110,6 +110,9 @@ def route_wave(ecfg: EngineConfig, state_l, target, payload, pending,
     P, Cp = ecfg.num_shards, ecfg.capacity
     batch = batch if batch is not None else ecfg.batch
     width = batch.wave_width if batch is not None else 1
+    if width > 1:   # block/width are static: a trace-time guard is free
+        require_key_space(ecfg.block * width,
+                          where="route_wave(block * wave_width)")
     owner = target // ecfg.block
     plan, _ = plan_buckets_sorted(owner, pending, P, Cp)
     kept = plan.kept
@@ -598,6 +601,19 @@ def _remap_state(alg: AlgorithmSpec, g, old_layout: ShardLayout,
     return jax.tree.map(lambda n, o: n.at[:V].set(o[:V]), fresh, state)
 
 
+_LINT_CAPTURE = False   # toggled by repro.analysis.waverace.capture()
+
+
+class LintCapture(Exception):
+    """Carries the normalized (alg, graph, batch) out of
+    :func:`run_distributed` when the analyzer only wants the round
+    function, not a mesh execution."""
+
+    def __init__(self, alg, g, batch):
+        super().__init__(f"lint capture: {alg.name}")
+        self.alg, self.g, self.batch = alg, g, batch
+
+
 def run_distributed(alg: AlgorithmSpec, mesh, g, *,
                     capacity: int | str = 4096,
                     m: int | None = None, axis: str = "data",
@@ -654,6 +670,12 @@ def run_distributed(alg: AlgorithmSpec, mesh, g, *,
     if isinstance(g, GraphSet):
         batch = batch if batch is not None else g.axis
         g = g.union()
+    if _LINT_CAPTURE:
+        # repro.analysis.waverace sets this flag, calls the public
+        # distributed_* wrappers (so their own state/payload plumbing
+        # runs), and catches the normalized (alg, graph, axis) triple
+        # here instead of executing the mesh program.
+        raise LintCapture(alg, g, batch)
     P = mesh.shape[axis]
     auto_cap = capacity == "auto"
     if auto_cap:

@@ -50,6 +50,53 @@ SNAPSHOT_VERSION = 1
 _DOMAINS = ("graphs", "cache", "results")
 
 
+# -- at-least-once replay sites (aamlint registry) --------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ReplaySite:
+    """One path that can re-deliver already-submitted work.
+
+    ``witness`` is a source fragment of the guard that makes the replay
+    effectively exactly-once; ``repro.analysis.algebra.check_replay_paths``
+    asserts it is still present — refactoring a guard away (or moving
+    it without re-pointing the declaration) becomes a lint finding,
+    because non-idempotent commit ops (pagerank/ppr ``add``) would then
+    double-apply on replay."""
+    name: str
+    module: str
+    qualname: str
+    witness: str
+    note: str
+
+
+REPLAY_GUARDS = (
+    ReplaySite(
+        name="wal-replay",
+        module="repro.serve.graph_service",
+        qualname="GraphService._replay_submit",
+        witness="if ticket in self._results",
+        note="ServiceSupervisor WAL replay re-enters acknowledged "
+             "submissions; answered tickets are skipped so a ticket is "
+             "never drained (and its adds never committed) twice."),
+    ReplaySite(
+        name="degraded-mesh-rehome",
+        module="repro.core.engine",
+        qualname="run_distributed",
+        witness="state, scalars, carry = snap",
+        note="a host drop re-homes the LAST COMPLETED chunk snapshot "
+             "onto the shrunk mesh — rounds re-execute from a committed "
+             "state, never half-applied on top of it."),
+    ReplaySite(
+        name="continuous-restore",
+        module="repro.serve.continuous",
+        qualname="ContinuousServer._publish",
+        witness="svc._bounded_put(svc._results, t, row",
+        note="restore re-runs the wave; results publish keyed by ticket "
+             "id into the results map, so a ticket observed twice "
+             "overwrites with an identical row instead of appending."),
+)
+
+
 # -- graph ids / result rows over the JSON boundary -------------------------
 
 def _gid_enc(gid) -> dict:

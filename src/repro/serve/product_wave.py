@@ -369,3 +369,40 @@ class ProductWave:
         if not self.done:
             self._step(_RUN_ALL)
         return self.rounds
+
+
+def lint_traceables(*, lanes: int = 2, sizes=(5, 7), seed: int = 0):
+    """``(name, fn_of_state, example_state)`` triples exposing each
+    product-chunk round body to ``repro.analysis.waverace``.
+
+    The returned callables take ONLY the chunk's state dict — graph
+    arrays, governor maps, and degree vectors are closed over, so the
+    analyzer can seed its state chain from exactly the jaxpr's invars.
+    Traced via the chunks' unjitted ``__wrapped__`` bodies at
+    ``limit=1`` with a concrete ``atomic`` spec (no calibration runs at
+    trace time)."""
+    from repro.graphs.generators import erdos_renyi, random_weights
+    gs = GraphSet([
+        random_weights(erdos_renyi(int(s), avg_degree=3.0, seed=seed + i),
+                       seed=i)
+        for i, s in enumerate(sizes)])
+    spec = C.CommitSpec(backend="atomic", stats=False)
+    out = []
+    for kind in PRODUCT_KINDS:
+        pw = ProductWave(kind, gs, lanes, spec=spec)
+        if kind in ("bfs", "sssp"):
+            fn = (lambda st, pw=pw, w=(kind == "sssp"):
+                  _dist_chunk.__wrapped__(pw.g, pw.axis, st, pw.spec,
+                                          1, w))
+        elif kind == "ppr":
+            fn = (lambda st, pw=pw:
+                  _ppr_chunk.__wrapped__(pw.g, pw.axis, pw._gov,
+                                         pw._egov, pw._deg,
+                                         pw._dangling, 0.85, st,
+                                         pw.spec, 1))
+        else:
+            fn = (lambda st, pw=pw:
+                  _stconn_chunk.__wrapped__(pw.g, pw.axis, pw._gov,
+                                            pw._egov, st, pw.spec, 1))
+        out.append((f"product_wave/{kind}", fn, pw.state))
+    return out

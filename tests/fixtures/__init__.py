@@ -1,0 +1,8 @@
+"""Seeded aamlint violation fixtures.
+
+Each module here plants ONE specific wave-safety violation and exposes
+it through the ``LINT_*`` surfaces ``python -m repro.analysis.lint
+--module`` consumes.  The tier-1 smoke test asserts the CLI exits
+nonzero on each — i.e. the analyzer actually catches the bug class it
+claims to.
+"""

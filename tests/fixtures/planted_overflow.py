@@ -1,0 +1,27 @@
+"""Planted violation: an ``L x Vtot`` product axis past the int32 key
+space.
+
+The real :class:`repro.core.coalescing.ProductAxis` refuses to
+construct past ``MAX_FLAT_KEYS`` (the satellite fix this fixture
+guards), so the fixture ships a duck-typed axis with the same fields
+but NO constructor guard — exactly what a future refactor that drops
+``__post_init__`` (or a hand-rolled axis in serving code) would look
+like.  ``aamlint --module tests.fixtures.planted_overflow`` must exit
+nonzero: 4096 lanes x a 600M-vertex tenant union needs ~2.4e12 flat
+keys, and ``fuse_keys`` int32 arithmetic would wrap silently into
+OTHER tenants' vertex ranges.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class UncheckedProductAxis:
+    """ProductAxis lookalike without the key-space guard."""
+    lanes: int
+    sizes: tuple
+
+
+LINT_AXES = (
+    ("planted: ProductAxis(4096, 600 x 1M)",
+     UncheckedProductAxis(lanes=4096, sizes=(10 ** 6,) * 600)),
+)

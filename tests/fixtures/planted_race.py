@@ -1,0 +1,32 @@
+"""Planted violation: an in-wave read race.
+
+The round below reads its distance array to build relaxations and then
+writes the winners back with a raw ``.at[].min`` scatter instead of
+``commit()`` — the exact bug ``commit()`` exists to prevent: XLA's
+scatter applies updates in an unspecified order with no conflict
+resolution, success telemetry, or sanitizer coverage, so duplicate
+targets resolve nondeterministically and the MF success mask the
+algorithm needs does not exist.  In hardware this is the "conflicting
+access" an HTM transaction would abort on; in the software pipeline
+only the analyzer can see it.
+
+``aamlint --module tests.fixtures.planted_race`` must exit nonzero.
+"""
+import jax.numpy as jnp
+
+_V = 16
+_SRC = jnp.arange(_V, dtype=jnp.int32)
+_DST = (jnp.arange(_V, dtype=jnp.int32) * 5 + 3) % _V
+
+
+def _racy_round(state):
+    dist = state["dist"]
+    relax = dist[_SRC] + 1          # read of round state...
+    dist2 = dist.at[_DST].min(relax)  # ...raw write to the SAME array
+    return {"dist": dist2}
+
+
+LINT_TRACEABLES = (
+    ("planted: racy bfs round", _racy_round,
+     {"dist": jnp.zeros((_V,), jnp.int32)}),
+)
