@@ -15,7 +15,7 @@ TIER2_XLA := --xla_cpu_multi_thread_eigen=false
 TIER2_ENV := REPRO_XLA_EXTRA="$(TIER2_XLA)" PYTHONHASHSEED=0
 
 .PHONY: tier1 tier2 test lint bench bench-json bench-serve bench-crash \
-	bench-latency
+	bench-latency trace
 
 tier1:
 	$(PY) -m pytest -x -q -m "not slow"
@@ -24,7 +24,7 @@ tier1:
 # algorithms x batch-axis kinds, plus the BENCH_*.json schema check
 # (exits nonzero on findings; see README "Static analysis & sanitizers")
 lint:
-	$(PY) -m repro.analysis.lint --bench-schema
+	$(PY) -m repro.analysis.lint --bench-schema --trace-off-clean
 
 tier2:
 	$(TIER2_ENV) $(PY) -m pytest -q -m slow
@@ -60,3 +60,10 @@ bench-crash:
 bench-latency:
 	$(PY) -m benchmarks.serve_qps --open-loop --kinds bfs --qps 20,50 \
 		--duration 1.0 --scale 6 --tenants 4 --json BENCH_pr7.json
+
+# wavescope demo: mixed-tenant continuous-batching run with tracing
+# forced on -> TRACE_serve.json (Chrome/Perfetto; open in
+# https://ui.perfetto.dev) + METRICS_serve.prom/.json (schema-checked
+# before writing; see README "Observability")
+trace:
+	$(PY) -m repro.obs.dump

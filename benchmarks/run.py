@@ -207,9 +207,10 @@ def bench_json(sizes: str) -> dict:
     reps = cfg["repeats"]
     rows: list = []
 
-    def add(suite, backend, name, sec, derived=""):
+    def add(suite, backend, name, sec, derived="", **extra):
         rows.append({"suite": suite, "backend": backend, "name": name,
-                     "us_per_call": round(sec * 1e6, 1), "derived": derived})
+                     "us_per_call": round(sec * 1e6, 1),
+                     "derived": derived, **extra})
 
     def spec_for(backend, m=None):
         if backend == "auto":
@@ -299,6 +300,24 @@ def bench_json(sizes: str) -> dict:
     # serve: lane-batched QPS vs the sequential loop (GraphService)
     sv = cfg.get("serve")
     if sv:
+        # wave-level trace summary per kind: one tiny UNTIMED traced
+        # drain (CommitSpec(trace=True)); the timed sweeps stay
+        # untraced so their jaxprs are the shipped clean ones
+        from repro.graphs.generators import random_weights
+
+        def _probe(kind):
+            gp = {"hot": kronecker(sv["scale"], 8, seed=1),
+                  "t0": kronecker(max(sv["scale"] - 1, 2), 8, seed=2)}
+            if kind == "sssp":
+                gp = {k: random_weights(g, seed=3) for k, g in gp.items()}
+            p = serve_qps._trace_probe(kind, gp, None, True, 0)
+            return {"trace_rounds": p["rounds"],
+                    "trace_mean_density": p["mean_density"],
+                    "trace_ladder_moves": p["ladder_moves"]}
+
+        probes = {k: _probe(k)
+                  for k in dict.fromkeys(sv["kinds"] + sv["gkinds"])
+                  if k in serve_qps.LANE_KINDS}
         stats = serve_qps.sweep(sv["kinds"], sv["lanes"], scale=sv["scale"],
                                 queries=sv["queries"],
                                 repeats=sv.get("repeats", 5))
@@ -308,7 +327,8 @@ def bench_json(sizes: str) -> dict:
                 f"qps={st['qps']:.0f} p50={st['p50_ms']:.1f}ms "
                 f"p99={st['p99_ms']:.1f}ms "
                 f"speedup_vs_seq={st['speedup_vs_seq']:.2f} "
-                f"correct={st['correct']}")
+                f"correct={st['correct']}",
+                **probes.get(st["kind"], {}))
         serve_summary = {}
         for kind in sv["kinds"]:
             ks = [s for s in stats if s["kind"] == kind]
@@ -330,7 +350,8 @@ def bench_json(sizes: str) -> dict:
                 f"qps={st['qps']:.0f} p50={st['p50_ms']:.1f}ms "
                 f"p99={st['p99_ms']:.1f}ms "
                 f"speedup_vs_seq={st['speedup_vs_seq']:.2f} "
-                f"correct={st['correct']}")
+                f"correct={st['correct']}",
+                **probes.get(st["kind"], {}))
         for kind in sv["gkinds"]:
             ks = [s for s in gstats if s["kind"] == kind]
             top = max(ks, key=lambda s: s["graphs"])
@@ -368,8 +389,8 @@ for backend in {backends}:
     # resolved static C
     cap = None
     for _ in range(4):
-        _, r = distributed_bfs(mesh, g, src, spec=spec, capacity="auto",
-                               telemetry=True)
+        *_, r = distributed_bfs(mesh, g, src, spec=spec, capacity="auto",
+                                telemetry=True)
         if cap == int(r.capacity):
             break
         cap = int(r.capacity)

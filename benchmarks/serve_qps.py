@@ -328,6 +328,31 @@ def _open_workload(kind: str, graphs_by_gid: dict, n: int, rng,
     return subs
 
 
+def _trace_probe(kind: str, graphs: dict, backend: str | None,
+                 product: bool, seed: int) -> dict:
+    """Wave-level trace summary (rounds / mean commit density / ladder
+    moves) for one (kind, mode) config: a tiny UNTIMED drain with
+    ``CommitSpec(trace=True)`` feeds :func:`repro.obs.wavetap.summary`.
+    The timed open-loop runs stay untraced — the p99 acceptance gate
+    needs the clean jaxprs ``aamlint --trace-off-clean`` proves."""
+    import dataclasses
+    from repro.obs import wavetap as OW
+    base = _spec(backend)
+    if base is None:
+        base = CommitSpec(backend="auto", sort=False)
+    svc = GraphService(cache=False, product=product,
+                       spec=dataclasses.replace(base, trace=True,
+                                                stats=True))
+    for gid, g in graphs.items():
+        svc.register_graph(gid, g)
+    for gid, q in _open_workload(kind, graphs, 4,
+                                 np.random.default_rng(seed)):
+        svc.submit(gid, q)
+    OW.clear()
+    svc.drain()
+    return OW.summary(OW.collector().drain())
+
+
 def open_loop(kinds=("bfs",), *, qps_levels=(20, 50), duration_s: float = 2.0,
               scale: int = 7, tenants: int = 5, backend: str | None = None,
               seed: int = 0, max_wait_s: float = 0.005,
@@ -353,6 +378,8 @@ def open_loop(kinds=("bfs",), *, qps_levels=(20, 50), duration_s: float = 2.0,
             graphs = {gid: random_weights(g, seed=seed + 3)
                       for gid, g in graphs.items()}
         for mode in modes:
+            probe = _trace_probe(kind, graphs, backend,
+                                 mode == "product", seed)
             svc = GraphService(cache=False, product=(mode == "product"),
                                spec=_spec(backend))
             for gid, g in graphs.items():
@@ -389,6 +416,9 @@ def open_loop(kinds=("bfs",), *, qps_levels=(20, 50), duration_s: float = 2.0,
                     "mean_ms": round(float(np.mean(lat)), 2),
                     "n": len(tickets),
                     "product_waves": svc.stats.product_waves,
+                    "trace_rounds": probe["rounds"],
+                    "trace_mean_density": probe["mean_density"],
+                    "trace_ladder_moves": probe["ladder_moves"],
                 })
     return rows
 
@@ -423,8 +453,13 @@ def _open_rows_to_json(rows, json_path: str) -> None:
             "offered_qps": r["offered_qps"],
             "achieved_qps": r["achieved_qps"],
             "p50_ms": r["p50_ms"], "p99_ms": r["p99_ms"],
+            "trace_rounds": r.get("trace_rounds", 0),
+            "trace_mean_density": r.get("trace_mean_density", 0.0),
+            "trace_ladder_moves": r.get("trace_ladder_moves", 0),
             "derived": f"n={r['n']} mean={r['mean_ms']}ms "
-                       f"product_waves={r['product_waves']}"})
+                       f"product_waves={r['product_waves']} "
+                       f"rounds={r.get('trace_rounds', 0)} "
+                       f"density={r.get('trace_mean_density', 0.0)}"})
     doc.setdefault("summary", {})["serve_open"] = {
         f"{r['kind']}/{r['mode']}/qps={r['offered_qps']}": {
             "p50_ms": r["p50_ms"], "p99_ms": r["p99_ms"],

@@ -96,14 +96,14 @@ if DISTRIBUTED:
               f"subrounds={int(res.subrounds)} "
               f"delivered_all={bool(res.delivered_all)}")
 
-    rund("BFS", "FF&MF", lambda: (lambda d, r:
+    rund("BFS", "FF&MF", lambda: (lambda d, ro, r:
         (f"reached={int((np.asarray(d) < 2**30).sum())}", r))(
         *distributed_bfs(mesh, gd, sd, capacity=2048, telemetry=True)))
     rund("PageRank", "FF&AS", lambda: (lambda pr, r:
         (f"sum={float(pr.sum()):.4f}", r))(
         *distributed_pagerank(mesh, gd, iters=10, capacity=2048,
                               telemetry=True)))
-    rund("SSSP", "FF&MF", lambda: (lambda d, r:
+    rund("SSSP", "FF&MF", lambda: (lambda d, ro, r:
         (f"reached={int((np.asarray(d) < 1e38).sum())}", r))(
         *distributed_sssp(mesh, gdw, sd, capacity=2048, telemetry=True)))
     rund("ST-connectivity", "FR&AS", lambda: (lambda f, ro, r:

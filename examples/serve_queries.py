@@ -152,3 +152,41 @@ print(f"\ncontinuous batching: {len(rows)} async tickets over "
       f"{svc.stats.product_cells_padded} padded); "
       f"latency p50={lat[len(lat) // 2]:.1f}ms max={lat[-1]:.1f}ms")
 shutil.rmtree(ckdir, ignore_errors=True)
+
+# --- observability: trace one traced drain, export everything --------------
+# Wavescope (repro.obs) has three layers: a span Tracer on the serving
+# path (submit/admit/drain/wave spans, restore/WAL-replay instants), an
+# io_callback wave tap INSIDE the jitted round loops (per-round
+# conflicts, commit density, ladder level — only planted when tracing is
+# on; `aamlint --trace-off-clean` proves the jaxprs are clean
+# otherwise), and the metrics registry behind svc.stats (Prometheus
+# text + aam-metrics/v1 JSON, incl. the continuous server's
+# submit-to-answer latency histogram).  REPRO_TRACE=1 turns all of it
+# on globally; here we scope it to one service instead.
+import dataclasses
+import json
+
+from repro.obs import trace as OT
+from repro.obs import wavetap as OW
+
+tracer = OT.Tracer(enabled=True)
+svc2 = GraphService(tracer=tracer,
+                    spec=dataclasses.replace(svc.spec, trace=True))
+svc2.register_graph("social", g)
+for s in sources[:4]:
+    svc2.submit("social", BfsQuery(int(s)))
+OW.clear()
+svc2.drain()
+OW.flush_to(tracer)                      # device-tid wave events
+doc = tracer.to_chrome()
+assert not OT.validate_trace(doc) and not tracer.open_spans()
+with open("TRACE_example.json", "w") as f:
+    json.dump(doc, f)
+spans = [e["name"] for e in doc["traceEvents"] if e["ph"] == "X"]
+print(f"\nwavescope: {len(doc['traceEvents'])} trace events "
+      f"({', '.join(sorted(set(spans))[:4])}, ...) -> TRACE_example.json "
+      f"(open in https://ui.perfetto.dev)")
+print("registry snapshot: "
+      f"{svc2.stats.total_waves} total waves; prometheus text "
+      f"{len(svc2.stats.registry.prometheus_text().splitlines())} lines "
+      f"(see `make trace` for the mixed-tenant continuous demo)")

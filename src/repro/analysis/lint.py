@@ -27,8 +27,10 @@ trajectory files (the ``make lint`` target runs both).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import importlib
 import json
+import os
 import pathlib
 import sys
 from types import SimpleNamespace
@@ -116,6 +118,91 @@ def run_module(modname: str) -> list[str]:
     return findings
 
 
+def run_trace_off_clean() -> list[str]:
+    """Prove the wavescope zero-impact-when-off guarantee: with tracing
+    off (no ``REPRO_TRACE``, ``CommitSpec(trace=False)``) the jaxpr of
+    every engine round loop and every ProductWave chunk body contains NO
+    host-callback primitive; one positive control
+    (``CommitSpec(trace=True)``) must show the callback, so the scan is
+    never vacuous.  Also schema-smokes the trace and metrics JSON
+    validators over freshly built documents."""
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis import waverace
+    from repro.core import commit as Cm
+    from repro.core import engine as E
+    findings: list[str] = []
+    saved = os.environ.pop("REPRO_TRACE", None)
+    try:
+        with waverace._no_env_sanitize():
+            spec = Cm.CommitSpec()          # coarse: no calibration
+            mesh = waverace._one_device_mesh()
+
+            def runner_jaxpr(cap, sp):
+                r = E._Runner(cap.alg, mesh, cap.g, axis="data",
+                              capacity=64, m=8, spec=sp, batch=cap.batch,
+                              max_subrounds=8)
+                return str(jax.make_jaxpr(r._jfn)(
+                    r.state0, r.scalars0, r.zero_carry(),
+                    jnp.asarray(1, jnp.int32), *r.arrays))
+
+            # one runner per algorithm — the tap placement is per-engine,
+            # not per-wrapper, so the distributed/lanes/graphs variants of
+            # one algorithm share a round loop
+            seen: dict[str, tuple] = {}
+            for label, cap in waverace.capture_algorithms():
+                seen.setdefault(cap.alg.name, (label, cap))
+            for name, (label, cap) in sorted(seen.items()):
+                dirty = "callback" in runner_jaxpr(cap, spec)
+                _print(f"  trace-off engine {label}: "
+                       f"{'CALLBACK IN JAXPR' if dirty else 'clean'}")
+                if dirty:
+                    findings.append(
+                        f"trace-off: {label} round loop contains a host "
+                        f"callback with tracing OFF")
+            from repro.serve.product_wave import lint_traceables
+            for name, fn, example in lint_traceables():
+                dirty = "callback" in str(jax.make_jaxpr(fn)(example))
+                _print(f"  trace-off product {name}: "
+                       f"{'CALLBACK IN JAXPR' if dirty else 'clean'}")
+                if dirty:
+                    findings.append(
+                        f"trace-off: product chunk {name} contains a "
+                        f"host callback with tracing OFF")
+            # positive control: trace=True MUST plant the tap, or the
+            # "clean" verdicts above prove nothing
+            label0, cap0 = sorted(seen.items())[0][1]
+            on = dataclasses.replace(spec, trace=True)
+            if "callback" not in runner_jaxpr(cap0, on):
+                findings.append(
+                    "trace-off: positive control failed — "
+                    "CommitSpec(trace=True) planted no callback; the "
+                    "jaxpr scan is vacuous")
+            else:
+                _print(f"  trace-off control {label0}: tap detected with "
+                       f"trace=True")
+    finally:
+        if saved is not None:
+            os.environ["REPRO_TRACE"] = saved
+    # schema smoke: the validators must accept what we actually emit
+    from repro.obs import metrics as OM
+    from repro.obs import trace as OT
+    tr = OT.Tracer(enabled=True)
+    with tr.span("smoke", args={"k": 1}):
+        tr.instant("mark")
+    findings += [f"trace-off: {f}"
+                 for f in OT.validate_trace(tr.to_chrome())]
+    reg = OM.Registry()
+    reg.counter("aam_smoke").inc(3)
+    reg.gauge("aam_g").set(0.5)
+    reg.histogram("aam_h").observe(0.01)
+    findings += [f"trace-off: {f}"
+                 for f in OM.validate_metrics_json(reg.snapshot())]
+    assert reg.prometheus_text().endswith("\n")
+    _print("  trace-off schemas: trace + metrics validators clean")
+    return findings
+
+
 BENCH_TOP_KEYS = {"schema", "sizes", "platform", "rows", "summary"}
 BENCH_ROW_KEYS = {"suite", "backend", "name", "us_per_call", "derived"}
 BENCH_SCHEMA = "aam-bench/v1"
@@ -170,6 +257,9 @@ def main(argv=None) -> int:
     ap.add_argument("--skip-waverace", action="store_true",
                     help="skip the (slow) jaxpr race pass — for quick "
                          "keyspace/algebra iterations")
+    ap.add_argument("--trace-off-clean", action="store_true",
+                    help="prove tracing-off jaxprs contain no host "
+                         "callbacks + schema-smoke trace/metrics JSON")
     args = ap.parse_args(argv)
 
     findings: list[str] = []
@@ -186,6 +276,9 @@ def main(argv=None) -> int:
     if args.bench_schema:
         _print("aamlint: bench-schema")
         findings += run_bench_schema()
+    if args.trace_off_clean:
+        _print("aamlint: trace-off-clean")
+        findings += run_trace_off_clean()
 
     if findings:
         _print(f"\naamlint: {len(findings)} finding(s)")

@@ -181,6 +181,15 @@ class AutoTuner:
         # timed micro-benchmark invocations this process — a restored
         # warm service asserts this stays flat (zero recalibration)
         self.timed_runs = 0
+        # decision audit log: every calibration fit, finalist race, and
+        # policy verdict, with the measurements that justified it
+        # (bounded FIFO; ladder moves stream via repro.obs.wavetap)
+        self.audit: list[dict] = []
+
+    def _audit(self, event: dict) -> None:
+        self.audit.append(event)
+        if len(self.audit) > 512:
+            del self.audit[:len(self.audit) - 512]
 
     # -- persistent cache -------------------------------------------------
 
@@ -354,6 +363,13 @@ class AutoTuner:
         self._disk_put(dkey, {
             "fine": _fit_to_json(fine),
             "tiers": [[b, _fit_to_json(f)] for b, f in cal.tiers]})
+        self._audit({
+            "event": "calibrate", "op": op, "dtype": dtype.name,
+            "width": width, "with_pallas": with_pallas,
+            "t_unit_us": round(t_unit * 1e6, 3),
+            "tiers": {b: {"intercept_us": round(f.intercept * 1e6, 3),
+                          "slope_us": round(f.slope * 1e6, 4),
+                          "r2": round(f.r2, 4)} for b, f in tiers}})
         return cal
 
     def race(self, finalists: dict, n: int, *, sort: bool, stats: bool,
@@ -411,6 +427,12 @@ class AutoTuner:
         winner = min(times, key=times.get)
         self._cache[key] = winner
         self._disk_put(dkey, winner)
+        self._audit({
+            "event": "race", "op": op, "n": n, "v": v,
+            "axis_width": axis_width,
+            "finalists": {b: m for b, m in finalists.items()},
+            "times_us": {b: round(t * 1e6, 2) for b, t in times.items()},
+            "winner": winner})
         return winner
 
     # -- policy -----------------------------------------------------------
@@ -419,6 +441,21 @@ class AutoTuner:
                pallas_ok: bool, v: int | None = None, op: str = "min",
                dtype=jnp.int32, width: int = 1,
                axis_width: int = 1) -> TunerPolicy:
+        pol = self._policy(spec, n=n, pallas_ok=pallas_ok, v=v, op=op,
+                           dtype=dtype, width=width,
+                           axis_width=axis_width)
+        m0 = pol.ladder[pol.init_level] if pol.ladder else None
+        self._audit({
+            "event": "policy", "op": op, "n": int(n),
+            "axis_width": axis_width, "backend": pol.backend,
+            "m0": m0, "init_level": pol.init_level,
+            "adaptive": pol.adaptive})
+        return pol
+
+    def _policy(self, spec: CommitSpec, *, n: int,
+                pallas_ok: bool, v: int | None = None, op: str = "min",
+                dtype=jnp.int32, width: int = 1,
+                axis_width: int = 1) -> TunerPolicy:
         """Backend + M* + ladder seed for an n-message workload against a
         [v] state (``v`` shapes the race's duplicate-target factor; None
         = the calibration default).  ``op``/``dtype``/``width`` key the
@@ -595,7 +632,8 @@ def next_level(policy: TunerPolicy, level, conflicts, messages):
 
 
 def make_commit_step(spec: CommitSpec | None, op: str, state, msgs_like=None,
-                     *, n: int | None = None, axis_width: int = 1):
+                     *, n: int | None = None, axis_width: int = 1,
+                     label: str | None = None):
     """Uniform per-round commit handle for the single-shard wave loops.
 
     Returns ``(step, level0)`` where ``step(state, msgs, level) ->
@@ -605,11 +643,25 @@ def make_commit_step(spec: CommitSpec | None, op: str, state, msgs_like=None,
     time (outside the loop), carry ``level`` through the loop.
     ``axis_width`` is the fused batch-axis width (query lanes / graphs)
     of the caller's wave — see :meth:`AutoTuner.race`.
+
+    When tracing is on at trace time (``spec.trace`` or
+    ``REPRO_TRACE=1``) the step is wrapped with the
+    :mod:`repro.obs.wavetap` commit tap — one ``io_callback`` per
+    commit streaming (conflicts, applied, messages, ladder level) under
+    ``label`` — THE hook that instruments all six single-shard loops
+    and the ``ProductWave`` chunk bodies at once.
     """
+    from repro.obs.trace import trace_enabled
+    trace_on = trace_enabled() or (spec is not None and spec.trace)
     level0 = jnp.zeros((), jnp.int32)
     if spec is None or spec.backend != AUTO:
         def step(state, msgs, level, _spec=spec):
             return commit(state, msgs, op, _spec), level
+        if trace_on:
+            from repro.obs import wavetap
+            step = wavetap.tap_commit_step(
+                step, label=label or op, op=op,
+                backend=spec.backend if spec is not None else "default")
         return step, level0
     policy = policy_for(spec, state, msgs_like, n=n, op=op,
                         axis_width=axis_width)
@@ -619,4 +671,8 @@ def make_commit_step(spec: CommitSpec | None, op: str, state, msgs_like=None,
         nv = jnp.sum(msgs.valid.astype(jnp.int32))
         return res, next_level(policy, level, res.conflicts, nv)
 
+    if trace_on:
+        from repro.obs import wavetap
+        step = wavetap.tap_commit_step(step, label=label or op, op=op,
+                                       backend=policy.backend)
     return step, jnp.asarray(policy.init_level, jnp.int32)

@@ -101,6 +101,13 @@ class CommitSpec:
                :class:`repro.analysis.sanitize.SanitizeError` (surfaced
                as ``XlaRuntimeError`` under jit) and are recorded in
                :func:`repro.analysis.sanitize.reports`.
+    trace:     stream per-commit telemetry (conflicts, applied, routed
+               messages, ladder level) to the host through
+               :mod:`repro.obs.wavetap` — an ``io_callback`` per commit
+               inside the jitted loop.  ``REPRO_TRACE=1`` in the
+               environment turns it on globally without touching specs;
+               with both off the tap never enters the jaxpr
+               (``aamlint --trace-off-clean`` proves it).
 
     Frozen + hashable so a spec can be a ``static_argnames`` entry of any
     jitted caller.
@@ -114,6 +121,7 @@ class CommitSpec:
     interpret: bool | None = None
     seed_m: int | None = None
     sanitize: bool = False
+    trace: bool = False
 
     def __post_init__(self):
         if self.m is not None and self.m < 1:

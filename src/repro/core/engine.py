@@ -44,6 +44,7 @@ from repro import compat
 
 from repro.core import autotune as AT
 from repro.core import commit as C
+from repro.obs import trace as OT
 from repro.core.coalescing import (BucketPlan, fuse_keys,
                                    gather_from_buckets, plan_buckets_sorted,
                                    require_key_space, scatter_to_buckets)
@@ -466,6 +467,27 @@ class DistributedResult:
     #                         and replaying from the last round snapshot
 
 
+def telemetry_return(base, res: "DistributedResult", telemetry: bool):
+    """THE ``telemetry=`` return-shape convention, shared by every
+    ``distributed_*`` algorithm entry point (regression-pinned by
+    ``tests/test_obs.py::test_telemetry_return_shapes``):
+
+    * ``telemetry=False`` — return ``base`` unchanged (the entry
+      point's documented plain shape);
+    * ``telemetry=True`` — APPEND the :class:`DistributedResult` as one
+      trailing element: a tuple ``base`` gains ``res`` at the end, a
+      non-tuple ``base`` becomes the pair ``(base, res)``.
+
+    So ``*out, res = distributed_x(..., telemetry=True)`` always works,
+    and the plain positions never shift between the two modes.
+    """
+    if not telemetry:
+        return base
+    if isinstance(base, tuple):
+        return base + (res,)
+    return (base, res)
+
+
 class _Runner:
     """One compiled round-loop over one mesh shape.
 
@@ -508,6 +530,15 @@ class _Runner:
             ecfg = dataclasses.replace(ecfg, spec=None, tuner=self.tuner)
         self.max_rounds = int(alg.max_rounds(g, self.layout))
         tuner = self.tuner
+        # wave telemetry tap, decided AT TRACE TIME (a _Runner is built
+        # per run_distributed call, so flipping REPRO_TRACE takes effect
+        # on the next run): one unordered io_callback per round per
+        # shard — unordered so a multi-device mesh never serializes on
+        # the host; the round index rides in the payload
+        trace_cb = None
+        if (spec is not None and spec.trace) or OT.trace_enabled():
+            from repro.obs import wavetap
+            trace_cb = wavetap.round_recorder(alg.name)
 
         def shard_fn(state, scalars, carry, limit,
                      src_l, dst_l, w_l, val_l, eid_l):
@@ -527,6 +558,11 @@ class _Runner:
                                  level=level)
                 state, scalars, active = alg.round_fn(rt, edges, state,
                                                       scalars, it)
+                if trace_cb is not None:
+                    from jax.experimental import io_callback
+                    io_callback(trace_cb, None, it, rt.conflicts,
+                                rt.subrounds, rt.messages, level, shard,
+                                ordered=False)
                 if tuner is not None:
                     # stage-2 feedback: this round's psum'd conflicts vs
                     # routed messages move the ladder (replicated =>
@@ -705,6 +741,13 @@ def run_distributed(alg: AlgorithmSpec, mesh, g, *,
             if faults > max_faults:
                 raise
             degraded = True
+            tr = OT.get_tracer()
+            if tr.active:
+                tr.instant("mesh_shrink", cat="engine",
+                           args={"alg": alg.name, "P": r.P,
+                                 "survivors": max(r.P - 1, 1),
+                                 "rounds_done": int(carry[4]),
+                                 "faults": faults})
             state, scalars, carry = snap     # last completed chunk
             if r.P > 1:
                 new_mesh = _shrink_mesh(r.mesh, axis, r.P - 1)

@@ -121,12 +121,14 @@ def distributed_bfs(mesh, g: Graph, source: int, *,
                     fault_injector=None):
     """BFS over a mesh axis — FF&MF ``min`` waves on the shared harness.
 
-    Returns (dist [V], rounds); with ``telemetry=True`` returns
-    (dist, DistributedResult).  ``snapshot_rounds``/``fault_injector``
+    Returns (dist [V], rounds); ``telemetry=True`` appends the
+    DistributedResult: (dist, rounds, res) — see
+    :func:`repro.core.engine.telemetry_return`.  ``snapshot_rounds``/``fault_injector``
     enable the engine's degraded-mesh mode (survive a host drop by
     shrinking the mesh and replaying the last round snapshot — see
     :func:`repro.core.engine.run_distributed`)."""
-    from repro.core.engine import AlgorithmSpec, run_distributed
+    from repro.core.engine import (AlgorithmSpec, run_distributed,
+                                   telemetry_return)
 
     def init(g, layout):
         dist0 = jnp.full((layout.vpad,), INF, jnp.int32).at[source].set(0)
@@ -147,7 +149,7 @@ def distributed_bfs(mesh, g: Graph, source: int, *,
                           snapshot_rounds=snapshot_rounds,
                           fault_injector=fault_injector)
     dist = res.state["dist"][:g.num_vertices]
-    return (dist, res) if telemetry else (dist, res.rounds)
+    return telemetry_return((dist, res.rounds), res, telemetry)
 
 
 def distributed_multi_source_bfs(mesh, g: Graph, sources, *,
@@ -164,13 +166,14 @@ def distributed_multi_source_bfs(mesh, g: Graph, sources, *,
     its owner shard), lane ids ride the coalescing buckets as one more
     payload field, and owners commit on composite local keys — the
     distributed mirror of :func:`multi_source_bfs`.  Returns
-    (dist [L, V], rounds); ``telemetry=True`` returns the
-    DistributedResult instead of rounds.  ``snapshot_rounds``/
+    (dist [L, V], rounds); ``telemetry=True`` appends the
+    DistributedResult: (dist, rounds, res).  ``snapshot_rounds``/
     ``fault_injector`` enable degraded-mesh mode (the vertex-major
     [vpad*L] state is not vpad-shaped, so a shrink restarts the query
     from round 0 on the surviving mesh rather than replaying)."""
     from repro.core.coalescing import QueryLanes
-    from repro.core.engine import AlgorithmSpec, run_distributed
+    from repro.core.engine import (AlgorithmSpec, run_distributed,
+                                   telemetry_return)
 
     sources = jnp.asarray(sources, jnp.int32)
     lanes = sources.shape[0]
@@ -206,7 +209,7 @@ def distributed_multi_source_bfs(mesh, g: Graph, sources, *,
                           snapshot_rounds=snapshot_rounds,
                           fault_injector=fault_injector)
     dist = res.state["dist"].reshape(-1, lanes).T[:, :g.num_vertices]
-    return (dist, res) if telemetry else (dist, res.rounds)
+    return telemetry_return((dist, res.rounds), res, telemetry)
 
 
 def distributed_product_bfs(mesh, gs, sources, *,
@@ -227,10 +230,12 @@ def distributed_product_bfs(mesh, gs, sources, *,
     live on its owner shard and the lane id rides the exchange as
     ``major`` exactly as in :func:`distributed_multi_source_bfs`; only
     ``batch=ProductAxis(L, sizes)`` (race width L·G) differs.  Returns
-    (dist [L, Vtot], rounds); split per graph with
+    (dist [L, Vtot], rounds), ``telemetry=True`` appending the
+    DistributedResult; split per graph with
     ``gs.split_vertex(dist[l])``."""
     from repro.core.coalescing import ProductAxis
-    from repro.core.engine import AlgorithmSpec, run_distributed
+    from repro.core.engine import (AlgorithmSpec, run_distributed,
+                                   telemetry_return)
 
     sources = jnp.asarray(sources, jnp.int32)
     lanes = sources.shape[0]
@@ -267,7 +272,7 @@ def distributed_product_bfs(mesh, gs, sources, *,
                           axis=axis, spec=spec,
                           max_subrounds=max_subrounds, batch=product)
     dist = res.state["dist"].reshape(-1, lanes).T[:, :product.num_vertices]
-    return (dist, res) if telemetry else (dist, res.rounds)
+    return telemetry_return((dist, res.rounds), res, telemetry)
 
 
 def batched_over_graphs_bfs(gs, sources, *, spec: C.CommitSpec | None = None,

@@ -166,7 +166,8 @@ def distributed_boruvka_forest(mesh, g: Graph, *, capacity: int = 4096,
     ``batch`` forwards a batch axis to ``run_distributed`` (the tuner's
     axis-width key for graph-batched runs)."""
     import numpy as np
-    from repro.core.engine import AlgorithmSpec, run_distributed
+    from repro.core.engine import (AlgorithmSpec, run_distributed,
+                                   telemetry_return)
     from repro.graphs.csr import partition_edges
 
     v, e_tot = g.num_vertices, g.num_edges
@@ -242,12 +243,13 @@ def distributed_boruvka(mesh, g: Graph, *, capacity: int = 4096,
 
     Returns (comp [V], weight, n_edges, rounds); ``telemetry=True``
     appends the DistributedResult."""
+    from repro.core.engine import telemetry_return
     comp, sel, rounds, res = distributed_boruvka_forest(
         mesh, g, capacity=capacity, m=m, axis=axis, spec=spec,
         max_subrounds=max_subrounds)
     weight, n_edges = _dedupe_mst_pairs(g, jnp.asarray(sel))
     out = (comp, weight, n_edges, rounds)
-    return out + (res,) if telemetry else out
+    return telemetry_return(out, res, telemetry)
 
 
 def mst_reference(g: Graph) -> float:

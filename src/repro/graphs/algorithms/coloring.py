@@ -183,7 +183,8 @@ def _distributed_union_coloring(mesh, gs, pal, *, seed, max_rounds, spec,
     """Graph-batched coloring on the shared harness: the same local-id
     proposals/coins as :func:`_union_coloring`, with remote endpoint
     colors read through the FR gather path."""
-    from repro.core.engine import AlgorithmSpec, run_distributed
+    from repro.core.engine import (AlgorithmSpec, run_distributed,
+                                   telemetry_return)
     g = gs.union()
     v = g.num_vertices
     num_graphs = gs.num_graphs
@@ -239,7 +240,8 @@ def distributed_coloring(mesh, g: Graph, *, seed: int = 0,
 
     Returns (color [V], rounds, not_converged); ``telemetry=True`` appends
     the DistributedResult."""
-    from repro.core.engine import AlgorithmSpec, run_distributed
+    from repro.core.engine import (AlgorithmSpec, run_distributed,
+                                   telemetry_return)
     import numpy as np
     pal = int(np.asarray(jnp.max(g.degrees))) + 1
 
@@ -266,7 +268,7 @@ def distributed_coloring(mesh, g: Graph, *, seed: int = 0,
     color = res.state["color"][:g.num_vertices]
     not_converged = jnp.any(res.state["active"][:g.num_vertices])
     out = (color, res.rounds, not_converged)
-    return out + (res,) if telemetry else out
+    return telemetry_return(out, res, telemetry)
 
 
 def validate_coloring(g: Graph, color) -> bool:

@@ -185,7 +185,8 @@ def _distributed_union_ppr(mesh, gs, sources_flat, *, d, iters, spec,
     """Graph-batched personalized PageRank on the shared harness: FF&AS
     accumulate waves over the union's flat owner slices, per-graph
     dangling mass psum'd as a [G] vector."""
-    from repro.core.engine import AlgorithmSpec, run_distributed
+    from repro.core.engine import (AlgorithmSpec, run_distributed,
+                                   telemetry_return)
     g = gs.union()
     v = g.num_vertices
     num_graphs = gs.num_graphs
@@ -236,7 +237,8 @@ def distributed_pagerank(mesh, g: Graph, *, iters: int = 20,
     """PageRank over a mesh axis — FF&AS accumulate waves on the shared
     harness.  Returns rank [V]; ``telemetry=True`` returns
     (rank, DistributedResult)."""
-    from repro.core.engine import AlgorithmSpec, run_distributed
+    from repro.core.engine import (AlgorithmSpec, run_distributed,
+                                   telemetry_return)
     v = g.num_vertices
 
     def init(g, layout):
@@ -266,7 +268,7 @@ def distributed_pagerank(mesh, g: Graph, *, iters: int = 20,
     res = run_distributed(alg, mesh, g, capacity=capacity, m=m, axis=axis,
                           spec=spec, max_subrounds=max_subrounds)
     rank = res.state["rank"][:v]
-    return (rank, res) if telemetry else rank
+    return telemetry_return(rank, res, telemetry)
 
 
 def distributed_multi_source_pagerank(mesh, g: Graph, sources, *,
@@ -282,7 +284,8 @@ def distributed_multi_source_pagerank(mesh, g: Graph, sources, *,
     mass psum'd as an [L] vector.  Returns rank [L, V];
     ``telemetry=True`` returns (rank, DistributedResult)."""
     from repro.core.coalescing import QueryLanes
-    from repro.core.engine import AlgorithmSpec, run_distributed
+    from repro.core.engine import (AlgorithmSpec, run_distributed,
+                                   telemetry_return)
     v = g.num_vertices
 
     sources = jnp.asarray(sources, jnp.int32)
@@ -328,7 +331,7 @@ def distributed_multi_source_pagerank(mesh, g: Graph, sources, *,
                           spec=spec, max_subrounds=max_subrounds,
                           batch=QueryLanes(lanes, v))
     rank = res.state["rank"].reshape(-1, lanes).T[:, :v]
-    return (rank, res) if telemetry else rank
+    return telemetry_return(rank, res, telemetry)
 
 
 def pagerank_reference(g: Graph, d=0.85, iters=20):

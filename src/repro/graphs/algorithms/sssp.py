@@ -91,9 +91,11 @@ def distributed_sssp(mesh, g: Graph, source: int, *,
                      max_subrounds: int = 64, telemetry: bool = False):
     """Bellman-Ford SSSP on the shared harness — FF&MF waves whose f32
     relaxation payloads ride next to the i32 targets in the same coalescing
-    buckets.  Returns (dist [V], rounds); ``telemetry=True`` returns
-    (dist, DistributedResult)."""
-    from repro.core.engine import AlgorithmSpec, run_distributed
+    buckets.  Returns (dist [V], rounds); ``telemetry=True`` appends
+    the DistributedResult: (dist, rounds, res) — see
+    :func:`repro.core.engine.telemetry_return`."""
+    from repro.core.engine import (AlgorithmSpec, run_distributed,
+                                   telemetry_return)
 
     def init(g, layout):
         dist0 = jnp.full((layout.vpad,), INF, jnp.float32).at[source].set(0.0)
@@ -113,7 +115,7 @@ def distributed_sssp(mesh, g: Graph, source: int, *,
     res = run_distributed(alg, mesh, g, capacity=capacity, m=m, axis=axis,
                           spec=spec, max_subrounds=max_subrounds)
     dist = res.state["dist"][:g.num_vertices]
-    return (dist, res) if telemetry else (dist, res.rounds)
+    return telemetry_return((dist, res.rounds), res, telemetry)
 
 
 def distributed_multi_source_sssp(mesh, g: Graph, sources, *,
@@ -125,10 +127,11 @@ def distributed_multi_source_sssp(mesh, g: Graph, sources, *,
     """Lane-batched Bellman-Ford over a mesh axis (vertex-major
     [vpad * L] state, lane ids riding the coalescing buckets) — the
     distributed mirror of :func:`multi_source_sssp`.  Returns
-    (dist [L, V], rounds); ``telemetry=True`` returns the
-    DistributedResult instead of rounds."""
+    (dist [L, V], rounds); ``telemetry=True`` appends the
+    DistributedResult: (dist, rounds, res)."""
     from repro.core.coalescing import QueryLanes
-    from repro.core.engine import AlgorithmSpec, run_distributed
+    from repro.core.engine import (AlgorithmSpec, run_distributed,
+                                   telemetry_return)
 
     sources = jnp.asarray(sources, jnp.int32)
     lanes = sources.shape[0]
@@ -162,7 +165,7 @@ def distributed_multi_source_sssp(mesh, g: Graph, sources, *,
                           spec=spec, max_subrounds=max_subrounds,
                           batch=QueryLanes(lanes, g.num_vertices))
     dist = res.state["dist"].reshape(-1, lanes).T[:, :g.num_vertices]
-    return (dist, res) if telemetry else (dist, res.rounds)
+    return telemetry_return((dist, res.rounds), res, telemetry)
 
 
 def batched_over_graphs_sssp(gs, sources, *,

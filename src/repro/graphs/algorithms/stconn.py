@@ -185,7 +185,8 @@ def _distributed_union_stconn(mesh, gs, ss_flat, ts_flat, *, spec,
     """Graph-batched s-t connectivity on the shared harness: the union's
     grey/green marks ride as TWO payload fields through one coalescing
     bucket per round, per-graph found bits psum'd as a [G] vector."""
-    from repro.core.engine import AlgorithmSpec, run_distributed
+    from repro.core.engine import (AlgorithmSpec, run_distributed,
+                                   telemetry_return)
     g = gs.union()
     v = g.num_vertices
     num_graphs = gs.num_graphs
@@ -245,7 +246,8 @@ def distributed_stconn(mesh, g: Graph, s: int, t: int, *,
 
     Returns (found, rounds); ``telemetry=True`` appends the
     DistributedResult."""
-    from repro.core.engine import AlgorithmSpec, run_distributed
+    from repro.core.engine import (AlgorithmSpec, run_distributed,
+                                   telemetry_return)
 
     def init(g, layout):
         vpad = layout.vpad
@@ -277,7 +279,7 @@ def distributed_stconn(mesh, g: Graph, s: int, t: int, *,
     res = run_distributed(alg, mesh, g, capacity=capacity, m=m, axis=axis,
                           spec=spec, max_subrounds=max_subrounds)
     out = (res.scalars["found"], res.rounds)
-    return out + (res,) if telemetry else out
+    return telemetry_return(out, res, telemetry)
 
 
 def distributed_multi_source_stconn(mesh, g: Graph, ss, ts, *,
@@ -292,7 +294,8 @@ def distributed_multi_source_stconn(mesh, g: Graph, ss, ts, *,
     (the FR "return true" as an [L] vector).  Returns (found [L], rounds);
     ``telemetry=True`` appends the DistributedResult."""
     from repro.core.coalescing import QueryLanes
-    from repro.core.engine import AlgorithmSpec, run_distributed
+    from repro.core.engine import (AlgorithmSpec, run_distributed,
+                                   telemetry_return)
 
     ss = jnp.asarray(ss, jnp.int32)
     ts = jnp.asarray(ts, jnp.int32)
@@ -338,7 +341,7 @@ def distributed_multi_source_stconn(mesh, g: Graph, ss, ts, *,
                           spec=spec, max_subrounds=max_subrounds,
                           batch=QueryLanes(l2, g.num_vertices))
     out = (res.scalars["found"], res.rounds)
-    return out + (res,) if telemetry else out
+    return telemetry_return(out, res, telemetry)
 
 
 def st_reference(g: Graph, s: int, t: int) -> bool:

@@ -1,0 +1,32 @@
+"""wavescope — tracing, metrics, and wave-level telemetry (ISSUE 9).
+
+Three layers, threaded through the whole serving stack:
+
+* :mod:`repro.obs.trace` — span tracer over an injected clock, exporting
+  Chrome/Perfetto trace JSON (submit/admit/drain/wave spans from
+  :mod:`repro.serve`, restore/WAL-replay/mesh-shrink instants from
+  :mod:`repro.serve.durable` and ``run_distributed``);
+* :mod:`repro.obs.wavetap` — the per-round telemetry stream fed via
+  ``jax.experimental.io_callback`` from INSIDE the jitted round loops
+  (engine ``_Runner``, ``AT.make_commit_step``, the ``ProductWave``
+  chunk bodies): round index, conflicts, commit density, ladder level,
+  backend tier, subrounds, messages routed;
+* :mod:`repro.obs.metrics` — counters/gauges/log-bucket histograms with
+  Prometheus text exposition and an ``aam-metrics/v1`` JSON snapshot
+  (:class:`repro.serve.graph_service.ServiceStats` is a view over one).
+
+Everything is OFF by default and provably zero-impact when off: the
+taps only enter a jaxpr when ``REPRO_TRACE=1`` or
+``CommitSpec(trace=True)`` was set at trace time, and
+``python -m repro.analysis.lint --trace-off-clean`` proves the shipped
+jaxprs contain no callback primitives otherwise.
+
+``python -m repro.obs.dump`` runs a mixed-tenant continuous-batching
+workload and writes the trace + metrics artifacts (the ``make trace``
+target).
+"""
+from repro.obs.trace import (Tracer, get_tracer, set_tracer,  # noqa: F401
+                             trace_enabled, validate_trace)
+from repro.obs.metrics import (Registry, validate_metrics_json,  # noqa: F401
+                               METRICS_SCHEMA)
+from repro.obs import wavetap  # noqa: F401

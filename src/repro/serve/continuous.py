@@ -38,6 +38,7 @@ import time
 from typing import Any
 
 from repro.core import autotune as AT
+from repro.obs import wavetap as OW
 from repro.serve.graph_service import GraphService
 from repro.serve.product_wave import ProductWave
 from repro.serve.queries import PRODUCT_KINDS
@@ -156,6 +157,12 @@ class ContinuousServer:
             self.submit_at[ticket] = now
             if ticket in svc._results:       # cache hit — answered now
                 self.done_at[ticket] = now
+                # a cache-hit-only cycle never reaches _drain_once, so
+                # the drain stats would go stale: count it as a
+                # zero-length drain and record the (zero) latency
+                svc.stats.drains += 1
+                svc.stats.last_drain_s = 0.0
+                self._observe_latency(svc, 0.0)
             else:
                 self.admission.note(now)
             self.cond.notify_all()
@@ -201,6 +208,15 @@ class ContinuousServer:
                         # drains without a fresh submit
                         self.admission.note(now)
                     if self.admission.due(now, pending):
+                        if (svc.tracer.active
+                                and self.admission.deadline is not None):
+                            # window opened max_wait_s before the
+                            # deadline — reuse timestamps already read
+                            t_open = (self.admission.deadline
+                                      - self.admission.max_wait_s)
+                            svc.tracer.complete(
+                                "admit", t_open, max(now - t_open, 0.0),
+                                args={"pending": pending})
                         break
                     wait = min(self.poll_s,
                                self.admission.remaining(now))
@@ -215,6 +231,13 @@ class ContinuousServer:
                     self.last_error = e
                     self.cond.notify_all()
 
+    @staticmethod
+    def _observe_latency(svc, dt: float) -> None:
+        """Record one submit-to-answer latency in the service registry
+        (get-or-create: a supervisor swaps the service on restore)."""
+        svc.stats.registry.histogram(
+            "aam_submit_to_answer_seconds").observe(max(dt, 0.0))
+
     def _publish(self, graph_id, q, row, queues) -> None:
         """Answer every ticket of one finished (graph, query) cell —
         caller holds the lock."""
@@ -226,6 +249,7 @@ class ContinuousServer:
         for t in queues.pop((graph_id, q), ()):
             svc._bounded_put(svc._results, t, row, svc.max_results)
             self.done_at[t] = now
+            self._observe_latency(svc, now - self.submit_at.get(t, now))
         self.cond.notify_all()
 
     def _sweep_voided(self) -> None:
@@ -267,7 +291,10 @@ class ContinuousServer:
                     svc = self.svc        # a fault may have swapped it
                     now = svc.clock()
                     for t in done:
-                        self.done_at.setdefault(t, now)
+                        if t not in self.done_at:
+                            self.done_at[t] = now
+                            self._observe_latency(
+                                svc, now - self.submit_at.get(t, now))
                     self.cond.notify_all()
         except Exception as e:  # noqa: BLE001
             if self.sup is None:
@@ -293,6 +320,14 @@ class ContinuousServer:
                 svc.stats.drains += 1
                 svc.stats.drain_s += dt
                 svc.stats.last_drain_s = dt
+                if svc.tracer.active:
+                    # reuse t0/dt — zero extra clock reads
+                    svc.tracer.complete(
+                        "drain", t0, dt,
+                        args={"product_waves": svc.stats.product_waves,
+                              "waves": svc.stats.waves,
+                              "graph_waves": svc.stats.graph_waves})
+                    OW.flush_to(svc.tracer)
                 self.cond.notify_all()
 
     # -- continuous product waves -----------------------------------------
@@ -377,20 +412,24 @@ class ContinuousServer:
             svc.stats.product_cells += width * len(gids)
             svc.stats.product_cells_padded += \
                 width * len(gids) - len(inflight)
-        while True:
-            svc._fault("continuous")
-            done = wave.run_chunk()          # accelerator, lock NOT held
-            with self.lock:
-                for (gid, q), (lane, gi) in list(inflight.items()):
-                    if wave.cell_done(lane, gi):
-                        self._publish(gid, q, wave.extract(lane, gi),
-                                      queues)
-                        wave.release(lane, gi)
-                        del inflight[(gid, q)]
-                boarded = len(inflight)
-                self._board(wave, fk, gids, waiting, queues, inflight)
-                boarded = len(inflight) - boarded
-                if boarded:
-                    svc.stats.product_cells_padded -= boarded
-            if done and not inflight and not waiting:
-                return
+        with svc.tracer.span("product_wave",
+                             args={"kind": kind, "lanes": width,
+                                   "graphs": len(gids)}):
+            while True:
+                svc._fault("continuous")
+                done = wave.run_chunk()      # accelerator, lock NOT held
+                with self.lock:
+                    for (gid, q), (lane, gi) in list(inflight.items()):
+                        if wave.cell_done(lane, gi):
+                            self._publish(gid, q,
+                                          wave.extract(lane, gi), queues)
+                            wave.release(lane, gi)
+                            del inflight[(gid, q)]
+                    boarded = len(inflight)
+                    self._board(wave, fk, gids, waiting, queues,
+                                inflight)
+                    boarded = len(inflight) - boarded
+                    if boarded:
+                        svc.stats.product_cells_padded -= boarded
+                if done and not inflight and not waiting:
+                    return

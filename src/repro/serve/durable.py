@@ -323,7 +323,15 @@ class ServiceSupervisor(Supervisor):
         # the clock survives restore the same way the mesh does: it is a
         # process resource, re-attached rather than serialized
         svc = restore_service(snap, mesh=mesh, clock=self.service.clock)
+        # so is the tracer: carrying it over keeps a crash -> restore ->
+        # re-drain run a SINGLE trace (one timeline, replay instants
+        # between the faulted spans and the re-executed ones)
+        svc.tracer = self.service.tracer
+        svc.tracer.instant("restore", cat="durable",
+                           args={"step": step,
+                                 "graphs": len(svc._graphs)})
         base = snap.next_ticket
+        replayed = 0
         if self._wal.exists():
             for line in self._wal.read_text().splitlines():
                 if not line.strip():
@@ -334,6 +342,10 @@ class ServiceSupervisor(Supervisor):
                 svc._replay_submit(_gid_dec(entry["id"]),
                                    query_from_dict(entry["q"]),
                                    int(entry["t"]))
+                replayed += 1
+        svc.tracer.instant("wal_replay", cat="durable",
+                           args={"replayed": replayed,
+                                 "pending": svc.pending()})
         self.log(f"[service] restored snapshot step {step} "
                  f"({len(svc._graphs)} graphs, {svc.pending()} pending)")
         self.service = svc

@@ -59,35 +59,84 @@ import numpy as np
 
 from repro.core import autotune as AT
 from repro.core import commit as C
+from repro.obs import trace as OT
+from repro.obs import wavetap as OW
 from repro.serve.queries import (BfsQuery, PprQuery, SsspQuery, StConnQuery,
                                  ColoringQuery, MstQuery, QUERY_KINDS,
                                  GRAPH_ONLY_KINDS, PRODUCT_KINDS)
 
 
-@dataclasses.dataclass
 class ServiceStats:
     """What the batching layer did (not wave-level telemetry — that lives
-    in CommitResult/DistributedResult)."""
-    submitted: int = 0
-    cache_hits: int = 0
-    deduped: int = 0         # submissions that joined an in-flight lane
-    waves: int = 0           # fused lane waves executed
-    lanes_executed: int = 0  # total lanes across waves (incl. padding)
-    lanes_padded: int = 0    # ladder-padding lanes (discarded results)
-    graph_waves: int = 0     # fused graph-batch waves executed
-    graphs_batched: int = 0  # graphs across graph waves (incl. padding)
-    graphs_padded: int = 0   # ladder-padding graphs (discarded results)
-    invalidated: int = 0     # in-flight tickets voided by re-registration
-    timing_runs: int = 0     # autotune timed micro-benchmarks drains paid
-    #                          (a warm-restored service asserts this stays 0)
-    product_waves: int = 0   # fused lanes×graphs product waves executed
-    product_cells: int = 0   # (lane, graph) cells across product waves
-    product_cells_padded: int = 0  # empty cells (no query) in those waves
-    # drain timing — read through the service's injected clock, so a
-    # fake-clock test sees deterministic values (no wall-clock flake)
-    drains: int = 0
-    drain_s: float = 0.0     # total time inside drain()
-    last_drain_s: float = 0.0
+    in CommitResult/DistributedResult).
+
+    A thin attribute view over a :class:`repro.obs.metrics.Registry` —
+    ``stats.waves += 1`` increments the ``aam_waves`` counter, so one
+    store backs both the historical attribute surface and the
+    Prometheus/JSON exports (``stats.registry.prometheus_text()`` /
+    ``stats.registry.snapshot()``).  The continuous server's
+    submit-to-answer latency histogram lives in the same registry.
+    """
+
+    # counter fields (ints; drain_s is a float counter)
+    _COUNTERS = (
+        "submitted",
+        "cache_hits",
+        "deduped",           # submissions that joined an in-flight lane
+        "waves",             # fused lane waves executed
+        "lanes_executed",    # total lanes across waves (incl. padding)
+        "lanes_padded",      # ladder-padding lanes (discarded results)
+        "graph_waves",       # fused graph-batch waves executed
+        "graphs_batched",    # graphs across graph waves (incl. padding)
+        "graphs_padded",     # ladder-padding graphs (discarded results)
+        "invalidated",       # in-flight tickets voided by re-registration
+        "timing_runs",       # autotune timed micro-benchmarks drains paid
+        #                      (a warm-restored service asserts it stays 0)
+        "product_waves",     # fused lanes×graphs product waves executed
+        "product_cells",     # (lane, graph) cells across product waves
+        "product_cells_padded",  # empty cells (no query) in those waves
+        # drain timing — read through the service's injected clock, so a
+        # fake-clock test sees deterministic values (no wall-clock flake)
+        "drains",
+        "drain_s",           # total time inside drain()
+    )
+    _GAUGES = ("last_drain_s",)
+
+    def __init__(self, registry=None):
+        from repro.obs import metrics as OM
+        reg = registry if registry is not None else OM.Registry()
+        object.__setattr__(self, "registry", reg)
+        for f in self._COUNTERS:
+            reg.counter("aam_" + f)
+        for f in self._GAUGES:
+            reg.gauge("aam_" + f)
+
+    def __getattr__(self, name):
+        if name in self._COUNTERS:
+            return self.registry.counter("aam_" + name).value
+        if name in self._GAUGES:
+            return self.registry.gauge("aam_" + name).value
+        raise AttributeError(f"{type(self).__name__!r} object has no "
+                             f"attribute {name!r}")
+
+    def __setattr__(self, name, value):
+        if name in self._COUNTERS:
+            self.registry.counter("aam_" + name).set(value)
+        elif name in self._GAUGES:
+            self.registry.gauge("aam_" + name).set(value)
+        else:
+            object.__setattr__(self, name, value)
+
+    @property
+    def total_waves(self) -> int:
+        """Waves of ANY axis (lane + graph + product) — the denominator
+        dashboards actually want."""
+        return self.waves + self.graph_waves + self.product_waves
+
+    def __repr__(self) -> str:
+        fields = ", ".join(f"{f}={getattr(self, f)!r}"
+                           for f in self._COUNTERS + self._GAUGES)
+        return f"ServiceStats({fields})"
 
 
 def _pow2_ladder(width: int) -> tuple:
@@ -152,6 +201,14 @@ class GraphService:
                 ``time.perf_counter``) — every timing stat reads THIS
                 clock, so tests inject a fake clock and assert exact
                 values instead of flaking on wall time.
+    tracer:     a :class:`repro.obs.trace.Tracer` for span export.  None
+                (default): with an injected ``clock`` the service binds
+                a private tracer to that same clock (deterministic span
+                timestamps under a fake clock); otherwise it shares the
+                process-global tracer, so every service of one
+                continuous-batching run lands in ONE trace.  Inert
+                unless tracing is enabled (``REPRO_TRACE=1`` or an
+                explicitly-enabled tracer).
     """
 
     def __init__(self, *, spec: C.CommitSpec | None = None,
@@ -159,7 +216,7 @@ class GraphService:
                  capacity: int | str = "auto", axis: str = "data",
                  cache: bool = True, max_results: int = 4096,
                  max_cache: int = 1024, product: bool = True,
-                 clock=None):
+                 clock=None, tracer=None):
         if max_lanes < 1 or (max_lanes & (max_lanes - 1)):
             raise ValueError(f"max_lanes must be a power of two, got "
                              f"{max_lanes}")
@@ -168,6 +225,11 @@ class GraphService:
                              f"{max_graphs}")
         self.spec = spec if spec is not None \
             else C.CommitSpec(backend="auto", sort=False, stats=False)
+        if OT.trace_enabled() and not self.spec.trace:
+            # promote the wave telemetry tap into every fused commit's
+            # (static) spec — the jitted entry points and ProductWave
+            # chunks all trace with it
+            self.spec = dataclasses.replace(self.spec, trace=True)
         self.max_lanes = max_lanes
         self.max_graphs = max_graphs
         self.lane_ladder = _pow2_ladder(max_lanes)
@@ -179,6 +241,12 @@ class GraphService:
         self.max_cache = max_cache
         self.product = product
         self.clock = clock if clock is not None else time.perf_counter
+        if tracer is not None:
+            self.tracer = tracer
+        elif clock is not None:
+            self.tracer = OT.Tracer(clock=self.clock)
+        else:
+            self.tracer = OT.get_tracer()
         self.stats = ServiceStats()
         self._graphs: dict[Any, Any] = {}
         # (graph_id tuple) -> GraphSet memo: keeps the union arrays (and
@@ -300,11 +368,17 @@ class GraphService:
             self.stats.cache_hits += 1
             self._bounded_put(self._results, ticket, self._cache[ck],
                               self.max_results)
+            self.tracer.instant("submit", args={"ticket": ticket,
+                                                "kind": query.kind,
+                                                "cache_hit": True})
             return ticket
         lanes = self._queue.setdefault((graph_id, query.fuse_key()), {})
         if query in lanes:
             self.stats.deduped += 1
         lanes.setdefault(query, []).append(ticket)
+        self.tracer.instant("submit", args={"ticket": ticket,
+                                            "kind": query.kind,
+                                            "cache_hit": False})
         return ticket
 
     def _replay_submit(self, graph_id, query, ticket: int) -> None:
@@ -392,7 +466,11 @@ class GraphService:
                     # max_graphs
                     for lo in range(0, len(singles), self.max_graphs):
                         chunk = singles[lo:lo + self.max_graphs]
-                        rows = self._execute_graph_batch(kind, chunk)
+                        with self.tracer.span(
+                                "wave", args={"axis": "graph",
+                                              "kind": kind,
+                                              "graphs": len(chunk)}):
+                            rows = self._execute_graph_batch(kind, chunk)
                         for (gid, q), row in zip(chunk, rows):
                             finish(gid, q, row)
                 else:
@@ -404,8 +482,11 @@ class GraphService:
                     queries = list(lanes)
                     for lo in range(0, len(queries), self.max_lanes):
                         chunk = queries[lo:lo + self.max_lanes]
-                        rows = self._execute_wave(g, chunk,
-                                                  graph_id=graph_id)
+                        with self.tracer.span(
+                                "wave", args={"axis": "lane", "kind": kind,
+                                              "queries": len(chunk)}):
+                            rows = self._execute_wave(g, chunk,
+                                                      graph_id=graph_id)
                         for q, row in zip(chunk, rows):
                             finish(graph_id, q, row)
         except Exception:
@@ -427,6 +508,17 @@ class GraphService:
             self.stats.drains += 1
             self.stats.drain_s += dt
             self.stats.last_drain_s = dt
+            if self.tracer.active:
+                # reuse t0/dt — the drain span adds ZERO clock reads
+                # (a fake-clock test pins drain() to exactly two)
+                self.tracer.complete("drain", t0, dt,
+                                     args={"done": len(done),
+                                           "waves": self.stats.waves,
+                                           "graph_waves":
+                                           self.stats.graph_waves,
+                                           "product_waves":
+                                           self.stats.product_waves})
+                OW.flush_to(self.tracer)
         return done
 
     def _fault(self, where: str) -> None:
@@ -537,7 +629,12 @@ class GraphService:
                 self.stats.product_cells += width * len(chunk)
                 self.stats.product_cells_padded += \
                     width * len(chunk) - len(cells)
-                wave.run()
+                with self.tracer.span(
+                        "wave", args={"axis": "product", "kind": kind,
+                                      "lanes": width,
+                                      "graphs": len(chunk),
+                                      "cells": len(cells)}):
+                    wave.run()
                 for gi, li, q in cells:
                     out.append((gids[gi], q, wave.extract(li, gi)))
         return out
@@ -571,7 +668,7 @@ class GraphService:
             if self.mesh is not None:
                 from repro.graphs.algorithms.bfs import \
                     distributed_multi_source_bfs
-                dist, res = distributed_multi_source_bfs(
+                dist, _, res = distributed_multi_source_bfs(
                     self.mesh, g, srcs, spec=spec,
                     capacity=self.capacity, axis=self.axis, telemetry=True)
                 self._learn_m(kind, graph_id, res)
@@ -584,7 +681,7 @@ class GraphService:
             if self.mesh is not None:
                 from repro.graphs.algorithms.sssp import \
                     distributed_multi_source_sssp
-                dist, res = distributed_multi_source_sssp(
+                dist, _, res = distributed_multi_source_sssp(
                     self.mesh, g, srcs, spec=spec,
                     capacity=self.capacity, axis=self.axis, telemetry=True)
                 self._learn_m(kind, graph_id, res)

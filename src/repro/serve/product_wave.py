@@ -68,7 +68,8 @@ def _dist_chunk(g, axis, state, spec, limit, weighted):
     e = g.src.shape[0]
     dst_b = jnp.broadcast_to(g.dst, (lanes, e))
     step, _ = AT.make_commit_step(spec, "min", state["dist"].reshape(-1),
-                                  n=lanes * e, axis_width=axis.race_width)
+                                  n=lanes * e, axis_width=axis.race_width,
+                                  label="product:dist")
 
     def cond(st):
         return jnp.any(st["frontier"]) & (st["it"] < limit)
@@ -101,7 +102,8 @@ def _ppr_chunk(g, axis, gov, egov, deg, dangling, d, state, spec, limit):
     dst_b = jnp.broadcast_to(g.dst, (lanes, e))
     acc0 = jnp.zeros((lanes * vt,), jnp.float32)
     step, _ = AT.make_commit_step(spec, "add", acc0, n=lanes * e,
-                                  axis_width=axis.race_width)
+                                  axis_width=axis.race_width,
+                                  label="product:ppr")
 
     def cond(st):
         return jnp.any(st["rem"] > 0) & (st["it"] < limit)
@@ -139,7 +141,8 @@ def _stconn_chunk(g, axis, gov, egov, state, spec, limit):
     e = g.src.shape[0]
     dst_b = jnp.broadcast_to(g.dst, (l2, e))
     step, _ = AT.make_commit_step(spec, "or", state["marks"].reshape(-1),
-                                  n=l2 * e, axis_width=axis.race_width)
+                                  n=l2 * e, axis_width=axis.race_width,
+                                  label="product:stconn")
 
     def live(st):
         quiet = jnp.repeat(~st["found"], 2, axis=0)         # [2L, G]

@@ -336,8 +336,15 @@ def test_bench_json_schema_smoke(tmp_path):
     assert doc["sizes"] == "smoke"
     assert isinstance(doc["rows"], list) and doc["rows"]
     for row in doc["rows"]:
-        assert set(row) == {"suite", "backend", "name", "us_per_call",
-                            "derived"}
+        # required keys are pinned; serve rows may additionally carry
+        # wavescope trace_* telemetry fields (lint --bench-schema
+        # enforces the same required-subset contract)
+        assert {"suite", "backend", "name", "us_per_call",
+                "derived"} <= set(row)
+        extras = set(row) - {"suite", "backend", "name", "us_per_call",
+                             "derived"}
+        assert extras <= {"trace_rounds", "trace_mean_density",
+                          "trace_ladder_moves"}, extras
         assert row["us_per_call"] >= 0
     backends = {r["backend"] for r in doc["rows"]}
     assert "auto" in backends and "coarse" in backends

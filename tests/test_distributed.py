@@ -84,13 +84,13 @@ for gname, g in graphs:
         if ALG == "bfs":
             ref = B.bfs_reference(g, src)
             one = B.bfs(g, src)
-            dist, res = B.distributed_bfs(mesh, g, src, **kw)
+            dist, _, res = B.distributed_bfs(mesh, g, src, **kw)
             ok = (np.array_equal(np.asarray(dist, np.int64), ref)
                   and np.array_equal(np.asarray(dist), np.asarray(one.dist)))
         elif ALG == "sssp":
             ref = S.sssp_reference(gw, src)
             one, _ = S.sssp(gw, src)
-            dist, res = S.distributed_sssp(mesh, gw, src, **kw)
+            dist, _, res = S.distributed_sssp(mesh, gw, src, **kw)
             d = np.asarray(dist, np.float64)
             reach = np.isfinite(ref)
             ok = (np.array_equal(np.asarray(dist), np.asarray(one))
@@ -171,7 +171,7 @@ for backend in ("coarse", "pallas", "auto"):
               max_subrounds=256, telemetry=True)
 
     one = B.multi_source_bfs(g, srcs)
-    dist, res = B.distributed_multi_source_bfs(mesh, g, srcs, **kw)
+    dist, _, res = B.distributed_multi_source_bfs(mesh, g, srcs, **kw)
     looped = all(
         np.array_equal(np.asarray(dist[l]),
                        np.asarray(B.bfs(g, int(srcs[l])).dist))
@@ -183,7 +183,7 @@ for backend in ("coarse", "pallas", "auto"):
         rounds=int(res.rounds))
 
     md, _ = S.multi_source_sssp(gw, srcs)
-    dd, res = S.distributed_multi_source_sssp(mesh, gw, srcs, **kw)
+    dd, _, res = S.distributed_multi_source_sssp(mesh, gw, srcs, **kw)
     out["sssp/" + backend] = dict(
         ok=bool(np.array_equal(np.asarray(dd), np.asarray(md))),
         dall=bool(res.delivered_all), subrounds=int(res.subrounds),
@@ -328,7 +328,7 @@ def injector(chunk, rounds_done):
     if chunk == 1 and fired["n"] == 0:
         fired["n"] = 1
         raise RuntimeError("host 7 lost")
-dist, res = B.distributed_bfs(
+dist, _, res = B.distributed_bfs(
     mesh, g, src, capacity=64, max_subrounds=256,
     spec=CommitSpec(backend="coarse", m=48), telemetry=True,
     snapshot_rounds=2, fault_injector=injector)
@@ -346,7 +346,7 @@ def injector2(chunk, rounds_done):
     if chunk == 1 and fired2["n"] == 0:
         fired2["n"] = 1
         raise RuntimeError("host 7 lost")
-md, mres = B.distributed_multi_source_bfs(
+md, _, mres = B.distributed_multi_source_bfs(
     mesh, g, srcs, capacity=64, max_subrounds=256,
     spec=CommitSpec(backend="coarse", m=48), telemetry=True,
     snapshot_rounds=2, fault_injector=injector2)
@@ -359,7 +359,7 @@ out["lanes"] = dict(ok=bool(looped), degraded=bool(mres.degraded),
                     fired=fired2["n"])
 
 # c) fault-free control on the same args: degraded must stay False
-dist0, res0 = B.distributed_bfs(
+dist0, _, res0 = B.distributed_bfs(
     mesh, g, src, capacity=64, max_subrounds=256,
     spec=CommitSpec(backend="coarse", m=48), telemetry=True,
     snapshot_rounds=2)

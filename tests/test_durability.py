@@ -370,7 +370,7 @@ def test_degraded_mesh_replays_round_snapshot_1dev():
             faults["n"] += 1
             raise RuntimeError("host dropped")
 
-    dist, res = B.distributed_bfs(mesh, g, src, capacity=64,
+    dist, _, res = B.distributed_bfs(mesh, g, src, capacity=64,
                                   max_subrounds=256, telemetry=True,
                                   snapshot_rounds=2,
                                   fault_injector=injector)
@@ -378,7 +378,7 @@ def test_degraded_mesh_replays_round_snapshot_1dev():
     assert bool(res.delivered_all)
     np.testing.assert_array_equal(np.asarray(dist, np.int64), ref)
     # chunked but fault-free: not degraded, same fixed point
-    dist2, res2 = B.distributed_bfs(mesh, g, src, capacity=64,
+    dist2, _, res2 = B.distributed_bfs(mesh, g, src, capacity=64,
                                     max_subrounds=256, telemetry=True,
                                     snapshot_rounds=2)
     assert not bool(res2.degraded)

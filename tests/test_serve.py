@@ -182,12 +182,12 @@ def test_multi_source_distributed_matches_single_shard_1dev():
     kw = dict(capacity=64, max_subrounds=256, telemetry=True)
 
     ms = B.multi_source_bfs(g, srcs)
-    dist, res = B.distributed_multi_source_bfs(mesh, g, srcs, **kw)
+    dist, _, res = B.distributed_multi_source_bfs(mesh, g, srcs, **kw)
     assert bool(res.delivered_all) and res.subrounds > res.rounds
     np.testing.assert_array_equal(np.asarray(dist), np.asarray(ms.dist))
 
     md, _ = S.multi_source_sssp(gw, srcs)
-    dd, res = S.distributed_multi_source_sssp(mesh, gw, srcs, **kw)
+    dd, _, res = S.distributed_multi_source_sssp(mesh, gw, srcs, **kw)
     assert bool(res.delivered_all)
     np.testing.assert_array_equal(np.asarray(dd), np.asarray(md))
 
@@ -704,9 +704,9 @@ def test_capacity_auto_grows_on_persistent_overflow():
     old = E._CAPACITY_CACHE.pop(key, None)
     try:
         E._CAPACITY_CACHE[key] = 64          # force overflow on run 1
-        d1, r1 = B.distributed_bfs(mesh, g, src, capacity="auto",
+        d1, _, r1 = B.distributed_bfs(mesh, g, src, capacity="auto",
                                    max_subrounds=256, telemetry=True)
-        d2, r2 = B.distributed_bfs(mesh, g, src, capacity="auto",
+        d2, _, r2 = B.distributed_bfs(mesh, g, src, capacity="auto",
                                    max_subrounds=256, telemetry=True)
         ref = B.bfs_reference(g, src)
         for d, r in ((d1, r1), (d2, r2)):
