@@ -14,6 +14,11 @@ export PYTHONPATH := src
 TIER2_XLA := --xla_cpu_multi_thread_eigen=false
 TIER2_ENV := REPRO_XLA_EXTRA="$(TIER2_XLA)" PYTHONHASHSEED=0
 
+# Which trajectory file the bench targets write (one per PR so the
+# auto-diff in benchmarks.run compares against the previous PR's rows):
+#   make bench-json BENCH=BENCH_pr11.json
+BENCH ?= BENCH_pr10.json
+
 .PHONY: tier1 tier2 test lint bench bench-json bench-serve bench-crash \
 	bench-latency trace
 
@@ -39,7 +44,7 @@ bench:
 # tests/test_autotune.py), auto-diffed against the most recent previous
 # BENCH_*.json; serve rows cover BOTH batch axes (L= lanes, G= graphs)
 bench-json:
-	$(PY) -m benchmarks.run --json BENCH_pr7.json --sizes tiny
+	$(PY) -m benchmarks.run --json $(BENCH) --sizes tiny
 
 # serving throughput/latency: batch-axis GraphService QPS + p50/p99 vs
 # the sequential query-at-a-time loop (lane axis by default; add
@@ -51,7 +56,7 @@ bench-serve:
 # restores (snapshot + WAL replay) and finishes the workload — restore
 # latency + recovery QPS rows merge into the persistent trajectory
 bench-crash:
-	$(PY) -m benchmarks.serve_qps --crash-resume --json BENCH_pr7.json
+	$(PY) -m benchmarks.serve_qps --crash-resume --json $(BENCH)
 
 # open-loop latency under load (smoke sizes): Poisson arrivals against
 # the continuous-batching loop, p50/p99 vs offered QPS, product axis vs
@@ -59,7 +64,7 @@ bench-crash:
 # trajectory (schema checked by tests/test_continuous.py)
 bench-latency:
 	$(PY) -m benchmarks.serve_qps --open-loop --kinds bfs --qps 20,50 \
-		--duration 1.0 --scale 6 --tenants 4 --json BENCH_pr7.json
+		--duration 1.0 --scale 6 --tenants 4 --json $(BENCH)
 
 # wavescope demo: mixed-tenant continuous-batching run with tracing
 # forced on -> TRACE_serve.json (Chrome/Perfetto; open in

@@ -1,0 +1,56 @@
+#!/usr/bin/env bash
+# Committed launch configuration for the perf trajectory (ROADMAP item 3).
+#
+# Every BENCH_*.json row is only comparable to the previous PR's rows if
+# both were measured under the same allocator, XLA flag matrix, and dtype
+# pins — this script IS that configuration.  Usage:
+#
+#   ./bench.sh                         # full tiny matrix -> $BENCH
+#   ./bench.sh --suite fused           # CSV rows for one suite
+#   BENCH=BENCH_pr11.json ./bench.sh   # next PR's trajectory file
+#
+# Extra args are passed through to benchmarks.run verbatim.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+# --- allocator: tcmalloc when the host has it (the HomebrewNLP/olmax
+# run.sh trick) — glibc malloc fragments under the bucket-buffer churn
+# of the wave loop.  Silently skipped where absent so the script stays
+# runnable on any host.
+for so in /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+          /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4 \
+          /usr/lib/libtcmalloc.so.4; do
+    if [ -e "$so" ]; then
+        export LD_PRELOAD="$so"
+        export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=60000000000
+        break
+    fi
+done
+
+# --- XLA flag matrix: deterministic single-device CPU timing unless the
+# caller pins their own (fig7 children force their device counts on top
+# of this via REPRO_XLA_EXTRA — see tests/test_distributed.py).
+#   - one host device: the timed suites are single-shard; oversubscribed
+#     host "devices" only add scheduler noise to the rows
+#   - no multi-threaded Eigen: same pin as the tier2 matrix, run-to-run
+#     reproducible timings on shared hosts
+BENCH_XLA="--xla_force_host_platform_device_count=1"
+BENCH_XLA="$BENCH_XLA --xla_cpu_multi_thread_eigen=false"
+export XLA_FLAGS="${XLA_FLAGS:-$BENCH_XLA}"
+
+# --- dtype pins: the commit pipeline is int32/float32 end-to-end (key
+# space, payloads, kernel envelope).  x64 mode would silently widen
+# jnp literals, double the VMEM working set, and time a different
+# kernel than production runs.
+export JAX_ENABLE_X64=0
+export JAX_DEFAULT_DTYPE_BITS=32
+
+export TF_CPP_MIN_LOG_LEVEL=${TF_CPP_MIN_LOG_LEVEL:-4}
+export PYTHONHASHSEED=0
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+BENCH="${BENCH:-BENCH_pr10.json}"
+if [ "$#" -eq 0 ]; then
+    exec python -m benchmarks.run --json "$BENCH" --sizes tiny
+fi
+exec python -m benchmarks.run "$@"

@@ -59,13 +59,15 @@ JSON_SIZES = {
                  fig6=dict(scales=(9, 10), densities=(16,), edge_factor=8,
                            density_scale=9),
                  fig3=dict(v=1 << 12, n=2048),
+                 fused=dict(v=1 << 12, n=2048, width=4, base=1 << 20),
                  fig7=dict(scale=9, ps=(1, 2, 4), reps=3,
                            backends=("coarse",)),
                  serve=dict(kinds=("bfs", "ppr"), lanes=(1, 8), scale=7,
                             queries=16, repeats=7,
                             gkinds=("bfs", "coloring"), gcounts=(1, 8),
                             gscale=7),
-                 backends=("atomic", "coarse", "pallas", "auto"), repeats=7),
+                 backends=("atomic", "coarse", "pallas", "fused", "auto"),
+                 repeats=7),
     "smoke": dict(fig4=dict(scale=8, edge_factor=4, ms=(64, None)),
                   fig6=dict(scales=(8,), densities=(4,), edge_factor=4,
                             density_scale=8),
@@ -192,6 +194,116 @@ def _measure_interleaved(fns: dict, repeats: int, inner: int = 3) -> dict:
     return best
 
 
+def _count_kernel_launches(fn, *args) -> int:
+    """pallas_call eqns in fn's jaxpr, descending into pjit/cond/scan
+    sub-jaxprs (NOT into kernel bodies — they carry no pallas_call)."""
+    import jax
+
+    def cnt(jx):
+        total = 0
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "pallas_call":
+                total += 1
+                continue
+            for v in eqn.params.values():
+                for sub in (v if isinstance(v, (list, tuple)) else (v,)):
+                    inner = getattr(sub, "jaxpr", sub)
+                    if hasattr(inner, "eqns"):
+                        total += cnt(inner)
+        return total
+    return cnt(jax.make_jaxpr(fn)(*args).jaxpr)
+
+
+def _fused_rows(fu: dict, reps: int) -> list:
+    """fused-vs-unfused route-tail rows (fig3-style contention ladder).
+
+    The unfused baselines run the pre-fused pipeline verbatim: jnp-side
+    local-key computation + ``make_messages`` + a SEPARATE commit pass
+    (coarse sort / pallas kernel launch).  The fused row is one
+    ``fused_commit_site`` launch doing key+reorder+commit in-kernel."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import commit as C
+    from repro.core.commit import CommitSpec, commit
+    from repro.core.messages import make_messages
+
+    v, n, width, base = fu["v"], fu["n"], fu["width"], fu["base"]
+    nrows = v // width
+    interp = jax.default_backend() != "tpu"
+    rng = np.random.default_rng(7)
+    rows: list = []
+    fsp = CommitSpec(backend="fused", sort=False, stats=False,
+                     interpret=interp)
+    for contention, conc in (("low", 10), ("high", 100)):
+        tgt_np = base + rng.integers(0, max(nrows // conc, 1), n)
+        tgt_np[rng.random(n) < 0.12] = -1        # bucket-fill slots
+        tgt = jnp.asarray(tgt_np, jnp.int32)
+        lane = jnp.asarray(rng.integers(0, width, n), jnp.int32)
+        val = jnp.asarray(rng.integers(0, 100, n), jnp.int32)
+        for op, st0 in (("min", jnp.full((v,), 2 ** 30, jnp.int32)),
+                        ("add", jnp.zeros((v,), jnp.int32))):
+
+            def unfused(s, t, vl, ln, sp, op=op):
+                ok = t >= 0
+                key = jnp.where(ok, t - base, 0) * width + ln
+                return commit(s, make_messages(key.astype(jnp.int32),
+                                               vl, ok), op, sp).state
+
+            def fused(s, t, vl, ln, op=op):
+                return C.fused_commit_site(
+                    s, t, vl, op, fsp, lane=ln, base=base,
+                    width=width).state
+
+            specs = {"unfused_coarse":
+                     CommitSpec(backend="coarse", sort=False, stats=False),
+                     "unfused_pallas":
+                     CommitSpec(backend="pallas", sort=False, stats=False,
+                                interpret=interp)}
+            fns = {k: (lambda f=jax.jit(lambda s, t, vl, ln, sp=sp:
+                                        unfused(s, t, vl, ln, sp)):
+                       f(st0, tgt, val, lane))
+                   for k, sp in specs.items()}
+            jfused = jax.jit(fused)
+            fns["fused"] = lambda: jfused(st0, tgt, val, lane)
+            np.testing.assert_array_equal(         # parity before timing
+                fns["fused"](), fns["unfused_coarse"]())
+            launches = {k: _count_kernel_launches(
+                (lambda s, t, vl, ln, sp=sp: unfused(s, t, vl, ln, sp)),
+                st0, tgt, val, lane) for k, sp in specs.items()}
+            launches["fused"] = _count_kernel_launches(
+                fused, st0, tgt, val, lane)
+            best = _measure_interleaved(fns, reps)
+            for k, t in best.items():
+                derived = f"kernel_launches={launches[k]}"
+                if k == "fused":
+                    derived += (" separate_commit_launch=0"
+                                f" speedup_vs_unfused_coarse="
+                                f"{best['unfused_coarse'] / t:.2f}"
+                                f" speedup_vs_unfused_pallas="
+                                f"{best['unfused_pallas'] / t:.2f}")
+                else:
+                    derived += " separate_commit_launch=1"
+                rows.append({"suite": "fused",
+                             "backend": "fused" if k == "fused"
+                             else k.replace("unfused_", ""),
+                             "name": f"fused/{op}/{contention}/{k}",
+                             "us_per_call": round(t * 1e6, 1),
+                             "derived": derived})
+    return rows
+
+
+def _fused_suite_main() -> None:
+    """CSV entry point: ``--suite fused`` route-tail comparison rows."""
+    fu = JSON_SIZES["tiny"]["fused"]
+    for r in _fused_rows(fu, JSON_SIZES["tiny"]["repeats"]):
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+
+
+SUITES["fused"] = _fused_suite_main
+
+
 def bench_json(sizes: str) -> dict:
     """The fig4/fig6 tiny sweeps × every backend × auto, as stable rows."""
     import jax
@@ -267,6 +379,13 @@ def bench_json(sizes: str) -> dict:
                     fns[b] = (lambda f=f, s=st0, m=msgs: f(s, m))
                 for b, t in _measure_interleaved(fns, reps).items():
                     add("fig3", b, f"fig3/{op}/{contention}/{b}", t)
+
+    # fused: the route tail after the all_to_all — key prep + separate
+    # commit launch (pre-fused pipeline) vs ONE fused kernel launch
+    fu = cfg.get("fused")
+    if fu:
+        for r in _fused_rows(fu, reps):
+            rows.append(r)
 
     # fig6: BFS across |V| and density, per backend
     f6 = cfg["fig6"]
@@ -440,7 +559,7 @@ def _fig7_json(f7: dict):
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None,
+    ap.add_argument("--only", "--suite", dest="only", default=None,
                     help="comma-separated subset of " + ",".join(SUITES))
     ap.add_argument("--backend", default=None,
                     choices=BACKENDS + ("auto",),

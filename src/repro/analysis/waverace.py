@@ -64,6 +64,15 @@ ALIAS_PRIMS = {
 # functional state writes
 SCATTER_PRIMS = {"scatter", "scatter-add", "scatter-min", "scatter-max",
                  "scatter-mul"}
+# kernel-launch state writes: a Pallas kernel whose operands include
+# round state commits directly from VMEM (the fused route+commit pass of
+# repro.kernels.fused_wave, the coarse-commit kernel) — same rule as the
+# scatters: in-scope = the protected commit site, out-of-scope = a raw
+# state write that bypasses conflict resolution.  Handled BEFORE the
+# generic call-descent: a pallas_call's params carry the KERNEL jaxpr
+# (refs + get/swap primitives, a different var universe), which must not
+# be walked as if it were a pjit body.
+KERNEL_PRIMS = {"pallas_call"}
 # state reads
 GATHER_PRIMS = {"gather", "dynamic_slice"}
 
@@ -98,33 +107,56 @@ def _vars(atoms):
     return [a for a in atoms if not isinstance(a, jax.core.Literal)]
 
 
-def _walk(jaxpr, chain: set, rep: RaceReport, where: str) -> set:
+def _walk(jaxpr, chain: set, rep: RaceReport, where: str,
+          scoped: bool = False) -> set:
     """Walk one (open) jaxpr; ``chain`` holds this jaxpr's vars known to
-    alias round state.  Returns the chain (mutated in place too)."""
+    alias round state.  Returns the chain (mutated in place too).
+
+    ``scoped=True`` means an ENCLOSING call eqn already carried the
+    ``aam_commit`` scope: sub-jaxpr name stacks are relative to their
+    call eqn (a jitted kernel wrapper records the scope on the pjit eqn,
+    not inside it), so scope inherits down the descent."""
     for eqn in jaxpr.eqns:
         prim = eqn.primitive.name
         invars = _vars(eqn.invars)
         on_chain = [v for v in invars if v in chain]
+        eqn_scoped = scoped or _in_scope(eqn)
 
         if prim in ("while",):
-            _walk_while(eqn, chain, rep, where)
+            _walk_while(eqn, chain, rep, where, eqn_scoped)
             continue
         if prim == "scan":
-            _walk_scan(eqn, chain, rep, where)
+            _walk_scan(eqn, chain, rep, where, eqn_scoped)
             continue
         if prim == "cond":
-            _walk_cond(eqn, chain, rep, where)
+            _walk_cond(eqn, chain, rep, where, eqn_scoped)
+            continue
+        if prim in KERNEL_PRIMS:
+            if on_chain:
+                if eqn_scoped:
+                    rep.commits += 1
+                else:
+                    rep.findings.append(RaceFinding(
+                        where=where, primitive=prim, scoped=False,
+                        detail=f"kernel launch ({prim}) writes round "
+                               f"state outside commit()'s conflict "
+                               f"resolution — a fused-kernel commit "
+                               f"site must run under "
+                               f"jax.named_scope({_SCOPE!r}) (reads of "
+                               f"the same array this round: "
+                               f"{rep.reads})"))
+                chain.update(_vars(eqn.outvars))
             continue
         inner = _call_jaxpr(eqn)
         if inner is not None:
-            _walk_call(eqn, inner, chain, rep, where)
+            _walk_call(eqn, inner, chain, rep, where, eqn_scoped)
             continue
 
         if prim in SCATTER_PRIMS:
             operand = eqn.invars[0]
             if not isinstance(operand, jax.core.Literal) \
                     and operand in chain:
-                if _in_scope(eqn):
+                if eqn_scoped:
                     rep.commits += 1
                 else:
                     rep.findings.append(RaceFinding(
@@ -136,7 +168,7 @@ def _walk(jaxpr, chain: set, rep: RaceReport, where: str) -> set:
                 chain.update(_vars(eqn.outvars))
             continue
         if prim in GATHER_PRIMS:
-            if on_chain and not _in_scope(eqn):
+            if on_chain and not eqn_scoped:
                 rep.reads += 1
             continue
         if on_chain and prim in ALIAS_PRIMS:
@@ -164,14 +196,14 @@ def _map_out(inner_jaxpr, inner_chain, eqn, chain):
             chain.add(ov)
 
 
-def _walk_call(eqn, closed, chain, rep, where):
+def _walk_call(eqn, closed, chain, rep, where, scoped=False):
     ij = closed.jaxpr if hasattr(closed, "jaxpr") else closed
     inner = _map_in(ij, eqn.invars, chain)
-    _walk(ij, inner, rep, where)
+    _walk(ij, inner, rep, where, scoped)
     _map_out(ij, inner, eqn, chain)
 
 
-def _walk_while(eqn, chain, rep, where):
+def _walk_while(eqn, chain, rep, where, scoped=False):
     cn = eqn.params["cond_nconsts"]
     bn = eqn.params["body_nconsts"]
     body = eqn.params["body_jaxpr"].jaxpr
@@ -182,7 +214,7 @@ def _walk_while(eqn, chain, rep, where):
     # one body pass — two passes reach the fixpoint for alias chains
     for _ in range(2):
         snapshot = set(inner)
-        _walk(body, inner, rep, where)
+        _walk(body, inner, rep, where, scoped)
         # feed body outputs (carry') back into carry invars
         carry_in = body.invars[bn:]
         for civ, res in zip(carry_in, body.outvars):
@@ -191,7 +223,7 @@ def _walk_while(eqn, chain, rep, where):
         if inner == snapshot:
             break
     cond_inner = _map_in(cond, eqn.invars[:cn] + body_outer[bn:], chain)
-    _walk(cond, cond_inner, rep, where)
+    _walk(cond, cond_inner, rep, where, scoped)
     # while outvars = final carry
     carry_results = body.outvars
     for ov, res in zip(eqn.outvars, carry_results):
@@ -199,14 +231,14 @@ def _walk_while(eqn, chain, rep, where):
             chain.add(ov)
 
 
-def _walk_scan(eqn, chain, rep, where):
+def _walk_scan(eqn, chain, rep, where, scoped=False):
     nc = eqn.params["num_consts"]
     ncar = eqn.params["num_carry"]
     body = eqn.params["jaxpr"].jaxpr
     inner = _map_in(body, eqn.invars, chain)
     for _ in range(2):
         snapshot = set(inner)
-        _walk(body, inner, rep, where)
+        _walk(body, inner, rep, where, scoped)
         carry_in = body.invars[nc:nc + ncar]
         for civ, res in zip(carry_in, body.outvars[:ncar]):
             if not isinstance(res, jax.core.Literal) and res in inner:
@@ -218,12 +250,12 @@ def _walk_scan(eqn, chain, rep, where):
             chain.add(ov)
 
 
-def _walk_cond(eqn, chain, rep, where):
+def _walk_cond(eqn, chain, rep, where, scoped=False):
     operands = eqn.invars[1:]
     for closed in eqn.params["branches"]:
         ij = closed.jaxpr
         inner = _map_in(ij, operands, chain)
-        _walk(ij, inner, rep, where)
+        _walk(ij, inner, rep, where, scoped)
         _map_out(ij, inner, eqn, chain)
 
 

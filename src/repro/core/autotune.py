@@ -348,7 +348,8 @@ class AutoTuner:
             state, msgs1)
         fine = perf_model.LinearFit(intercept=0.0, slope=t_unit, r2=1.0)
         tiers = []
-        backends = [b for b in BACKENDS if with_pallas or b != "pallas"]
+        backends = [b for b in BACKENDS
+                    if with_pallas or b not in KERNEL_BACKENDS]
         for b in backends:
             spec = CommitSpec(backend=b, m=None, sort=sort, stats=stats,
                               tile_m=tile_m, block_v=block_v,
@@ -532,17 +533,42 @@ class AutoTuner:
 
 DEFAULT_TUNER = AutoTuner()
 
+# The kernel tiers share one interpret-vs-compiled story: both run the
+# same Pallas tile loop (fused additionally folds the route-side key
+# computation into the launch), so eligibility is decided for the pair.
+KERNEL_BACKENDS = ("pallas", "fused")
 
-def _pallas_compiled(spec: CommitSpec) -> bool:
-    """True when the pallas tier would run COMPILED for this spec.
+_ALLOW_INTERP_ENV = "REPRO_AUTOTUNE_ALLOW_INTERP"
+
+
+def _allow_interp() -> bool:
+    """Escape hatch: let interpret-mode kernel tiers into the candidate
+    set anyway (tests exercising the auto->fused selection path on CPU
+    set ``REPRO_AUTOTUNE_ALLOW_INTERP=1``)."""
+    return os.environ.get(_ALLOW_INTERP_ENV, "").lower() in (
+        "1", "true", "on", "yes")
+
+
+def _kernel_compiled(spec: CommitSpec) -> bool:
+    """True when the kernel tiers (pallas/fused) would run COMPILED for
+    this spec.
 
     Interpret mode (CPU) is a functional simulator — its flat, huge
     per-grid-step overhead makes tiny-N calibration fits extrapolate
-    deceptively, and it is never a performance contender; keep it out of
-    the candidate set unless the kernel actually compiles."""
+    deceptively, and it is never a performance contender.  Fitting the
+    §5.3 cost model on interpret-mode timings teaches the tuner a lie,
+    so both kernel tiers stay out of the candidate set unless the kernel
+    actually compiles (or the :data:`_ALLOW_INTERP_ENV` escape hatch is
+    set)."""
+    if _allow_interp():
+        return True
     if spec.interpret is not None:
         return not spec.interpret
     return jax.default_backend() == "tpu"
+
+
+# Back-compat alias (pre-fused name).
+_pallas_compiled = _kernel_compiled
 
 
 def policy_for(spec: CommitSpec, state, msgs: Messages | None = None, *,
@@ -573,7 +599,18 @@ def policy_for(spec: CommitSpec, state, msgs: Messages | None = None, *,
         pallas_ok = (getattr(state, "ndim", 1) == 1
                      and state.dtype in (jnp.int32, jnp.float32))
         n = 1 if n is None else n
-    pallas_ok = pallas_ok and _pallas_compiled(spec)
+    if pallas_ok and not _kernel_compiled(spec):
+        # autotune-on-interpret fix: the kernel tiers would run in
+        # interpret mode here — exclude them rather than fit the cost
+        # model on simulator timings (audited so the decision is
+        # inspectable; REPRO_AUTOTUNE_ALLOW_INTERP=1 overrides)
+        (tuner or DEFAULT_TUNER)._audit({
+            "event": "kernel_tiers_excluded",
+            "backends": list(KERNEL_BACKENDS), "op": op,
+            "reason": "interpret-mode (no compiled TPU kernel); timings "
+                      "would be simulator artifacts",
+            "escape_hatch": _ALLOW_INTERP_ENV})
+        pallas_ok = False
     v = getattr(state, "shape", None)
     v = v[0] if v else None         # [V] or [W*V] composite key space
     return tuner.policy(spec, n=n, pallas_ok=pallas_ok, v=v, op=op,
@@ -611,6 +648,27 @@ def ladder_commit(state, msgs: Messages, op: str, policy: TunerPolicy,
     ]
     lvl = jnp.clip(jnp.asarray(level, jnp.int32), 0, len(branches) - 1)
     return jax.lax.switch(lvl, branches, state, msgs)
+
+
+def ladder_fused_site(state, tgt, payload, op: str, policy: TunerPolicy,
+                      level, *, lane=None, base=None, width: int = 1):
+    """Fused-tier twin of :func:`ladder_commit` for the engine's
+    owner-side fast path: commit the exchanged buffers through
+    :func:`repro.core.commit.fused_commit_site` at the ladder level
+    selected by the traced ``level`` (a ``lax.switch`` over one
+    pre-built kernel launch per transaction size)."""
+    from repro.core.commit import fused_commit_site
+    kw = dict(lane=lane, base=base, width=width)
+    if not policy.adaptive or level is None:
+        return fused_commit_site(state, tgt, payload, op,
+                                 policy.spec_at(policy.init_level), **kw)
+    branches = [
+        (lambda s, t, p, _sp=policy.spec_at(i):
+         fused_commit_site(s, t, p, op, _sp, **kw))
+        for i in range(len(policy.ladder))
+    ]
+    lvl = jnp.clip(jnp.asarray(level, jnp.int32), 0, len(branches) - 1)
+    return jax.lax.switch(lvl, branches, state, tgt, payload)
 
 
 def next_level(policy: TunerPolicy, level, conflicts, messages):

@@ -14,6 +14,7 @@ tolerate deferral; MoE drops by priority like every capacity-factor router).
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Any
 
 import jax
@@ -363,16 +364,43 @@ def plan_buckets_dense(owner: jax.Array, valid: jax.Array, num_buckets: int,
                       dropped=dropped.astype(jnp.int32))
 
 
+# Histogram backend for plan_buckets_sorted: "jnp" (bincount, default) or
+# "pallas" (kernels.coalesce.bucket_count_pallas — one-hot tile sums in
+# VMEM).  The env var sets the default; the keyword wins when given.
+BUCKET_COUNT_ENV = "REPRO_BUCKET_COUNT"
+_COUNT_BACKENDS = ("jnp", "pallas")
+
+
+def _bucket_counts(owner_c: jax.Array, valid: jax.Array, num_buckets: int,
+                   count_backend: str | None) -> jax.Array:
+    backend = count_backend or os.environ.get(BUCKET_COUNT_ENV, "jnp")
+    if backend not in _COUNT_BACKENDS:
+        raise ValueError(
+            f"count_backend={backend!r} not in {_COUNT_BACKENDS}")
+    if backend == "pallas":
+        from repro.kernels.coalesce import bucket_count_pallas
+        masked = jnp.where(valid, owner_c, -1).astype(jnp.int32)
+        interp = jax.default_backend() != "tpu"
+        return bucket_count_pallas(masked, num_buckets=num_buckets,
+                                   interpret=interp)
+    return jnp.bincount(owner_c, length=num_buckets + 1)[:num_buckets]
+
+
 def plan_buckets_sorted(owner: jax.Array, valid: jax.Array, num_buckets: int,
-                        capacity: int) -> tuple[BucketPlan, jax.Array]:
+                        capacity: int,
+                        count_backend: str | None = None,
+                        ) -> tuple[BucketPlan, jax.Array]:
     """Sort-based planner (O(n log n) instead of O(n·buckets)); used when
     num_buckets is large (MoE with 128 experts).  Returns (plan, sort_order).
+
+    ``count_backend`` selects the histogram path ("jnp" | "pallas"); unset
+    it falls back to ``$REPRO_BUCKET_COUNT`` and then "jnp".
     """
     n = owner.shape[0]
     owner_c = jnp.where(valid, owner, num_buckets)
     order = jnp.argsort(owner_c, stable=True)
     sorted_owner = owner_c[order]
-    counts = jnp.bincount(owner_c, length=num_buckets + 1)[:num_buckets]
+    counts = _bucket_counts(owner_c, valid, num_buckets, count_backend)
     starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
                               jnp.cumsum(counts)])[:num_buckets + 1]
     pos_sorted = jnp.arange(n, dtype=jnp.int32) - starts[

@@ -15,6 +15,14 @@ atomics → HTM spectrum (AAM §4–§5):
 * ``pallas`` — :mod:`repro.kernels.coarse_commit` executes one
   transaction per grid step against VMEM-resident state blocks (interpret
   mode on CPU, compiled on real TPU).
+* ``fused`` — :mod:`repro.kernels.fused_wave`: the pallas tile loop with
+  the route-side key computation folded INTO the kernel — one launch
+  from the post-exchange bucket buffers (global ids + ``-1`` sentinels,
+  optional lane ids) to committed state, no ``local_idx``/
+  ``make_messages`` materialization.  Through the generic :func:`commit`
+  entry (plain local targets) it matches ``pallas`` launch-for-launch;
+  the engine's :func:`fused_commit_site` fast path is where the
+  intermediate drop happens.
 
 :func:`commit` is the single entry point: a :class:`CommitSpec` names the
 backend and its knobs, and every backend returns the same
@@ -32,10 +40,10 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.core.messages import Messages
+from repro.core.messages import Messages, make_messages
 
 OPS = ("min", "max", "add", "or", "first")
-BACKENDS = ("atomic", "coarse", "pallas")
+BACKENDS = ("atomic", "coarse", "pallas", "fused")
 AUTO = "auto"   # CommitSpec(backend="auto"): online-calibrated backend + M
 
 
@@ -72,9 +80,9 @@ class CommitSpec:
                :mod:`repro.core.autotune` tuner calibrates the §5.3 perf
                model at trace time (timed micro-commits of a synthetic
                workload sized to this call's batch) and picks the
-               backend and transaction size M*; ``pallas`` falls back to
-               ``coarse`` for payload shapes/dtypes the kernel does not
-               support.
+               backend and transaction size M*; the kernel tiers
+               (``pallas``/``fused``) fall back to ``coarse`` for
+               payload shapes/dtypes the kernel does not support.
     m:         transaction size (messages per transaction); ``None`` = the
                whole batch is one transaction.
     sort:      coalesce by sorting messages by target before resolution
@@ -158,7 +166,8 @@ def commit(state: jax.Array, msgs: Messages, op: str,
         from repro.core.autotune import resolve_spec   # lazy: no cycle
         spec = resolve_spec(spec, state, msgs, op)
     backend = spec.backend
-    if backend == "pallas" and not _pallas_supported(state, msgs, op):
+    if backend in ("pallas", "fused") and not _pallas_supported(state, msgs,
+                                                                op):
         backend = "coarse"
     # the named scope marks every scatter/gather of the conflict-resolved
     # write path in traced jaxprs — repro.analysis.waverace keys its
@@ -187,6 +196,8 @@ def _dispatch(state: jax.Array, msgs: Messages, op: str, spec: CommitSpec,
     if backend == "coarse":
         return coarse_commit(state, msgs, op, m=spec.m, sort=spec.sort,
                              stats=spec.stats)
+    if backend == "fused":
+        return _fused_commit(state, msgs, op, spec)
     return _pallas_commit(state, msgs, op, spec)
 
 
@@ -275,6 +286,96 @@ def _pallas_commit(state, msgs: Messages, op: str,
     else:
         success, _, applied = _success_stats(state, new, msgs, op)
     return CommitResult(new, success, conflicts, applied)
+
+
+def _fused_commit(state, msgs: Messages, op: str,
+                  spec: CommitSpec) -> CommitResult:
+    """Generic-entry fused tier: plain local targets, no base/lane —
+    the kernel's key computation folds away and this is launch-for-launch
+    the pallas tier (the parity matrix and the tuner race treat it as
+    such); the engine's :func:`fused_commit_site` is the fast path."""
+    from repro.kernels.fused_wave import fused_route_commit_pallas
+    idx = jnp.where(msgs.valid, msgs.target, -1).astype(jnp.int32)
+    interpret = (spec.interpret if spec.interpret is not None
+                 else jax.default_backend() != "tpu")
+    tile_m = spec.m if spec.m is not None else spec.tile_m
+    if not spec.stats:
+        new = fused_route_commit_pallas(
+            state, idx, msgs.payload, op=op, tile_m=tile_m,
+            block_v=spec.block_v, interpret=interpret, stats=False)
+        z = jnp.zeros((), jnp.int32)
+        return CommitResult(new, msgs.valid, z, z)
+    new, conflicts = fused_route_commit_pallas(
+        state, idx, msgs.payload, op=op, tile_m=tile_m,
+        block_v=spec.block_v, interpret=interpret, stats=True)
+    if op == "first":
+        success, _, applied = _first_stats(state, msgs)
+    else:
+        success, _, applied = _success_stats(state, new, msgs, op)
+    return CommitResult(new, success, conflicts, applied)
+
+
+def fused_site_supported(state, payload) -> bool:
+    """Kernel envelope of the engine's fused fast path: 1-D int32/float32
+    state slice, scalar-per-message payload leaf (flat [n] or the [P, C]
+    exchanged buffer).  Vector payloads / other dtypes take the unfused
+    per-leaf fallback in :func:`repro.core.engine.route_wave`."""
+    return (isinstance(payload, jax.Array)
+            and getattr(state, "ndim", 0) == 1
+            and payload.ndim <= 2
+            and state.dtype in _PALLAS_DTYPES
+            and payload.dtype in _PALLAS_DTYPES)
+
+
+def fused_commit_site(state, tgt, payload, op: str, spec: CommitSpec, *,
+                      lane=None, base=None, width: int = 1) -> CommitResult:
+    """Owner-side fused route+commit — THE commit site of the engine's
+    fused fast path (:func:`repro.core.engine.route_wave`).
+
+    ``tgt``/``payload``/``lane`` are the flattened post-exchange bucket
+    buffers exactly as the all_to_all left them (``tgt`` global ids with
+    ``-1`` empty-slot sentinels); ``base`` is the owner's first global
+    vertex id (``shard * block``, traced) and ``width`` the batch-axis
+    wave width.  One kernel launch computes local composite keys,
+    reorders in VMEM, and commits — the ``local_idx``/``fuse_keys``/
+    ``make_messages`` jnp intermediates never materialize.
+
+    ``stats=False`` (the hot path) reports ``success = slot occupied``
+    like every backend's cheap mode; ``stats=True`` reconstructs the
+    local keys jnp-side ONLY for the MF success/applied accounting (the
+    committed state still comes from the single launch).
+
+    Runs under ``jax.named_scope("aam_commit")`` — the aamlint waverace
+    pass recognizes in-scope ``pallas_call`` writes as the protected
+    commit site and flags out-of-scope kernel writes.
+    """
+    interpret = (spec.interpret if spec.interpret is not None
+                 else jax.default_backend() != "tpu")
+    tile_m = spec.m if spec.m is not None else spec.tile_m
+    kw = dict(lane=lane, base=base, width=width, op=op, tile_m=tile_m,
+              block_v=spec.block_v, interpret=interpret)
+    from repro.kernels.fused_wave import fused_route_commit_pallas
+    with jax.named_scope("aam_commit"):
+        if not spec.stats:
+            new = fused_route_commit_pallas(state, tgt, payload,
+                                            stats=False, **kw)
+            z = jnp.zeros((), jnp.int32)
+            return CommitResult(new, tgt >= 0, z, z)
+        new, conflicts = fused_route_commit_pallas(state, tgt, payload,
+                                                   stats=True, **kw)
+        nrows = state.shape[0] // width
+        rel = tgt - (0 if base is None else base)
+        ok = (tgt >= 0) & (rel >= 0) & (rel < nrows)   # mirror the kernel
+        local = jnp.where(ok, rel, 0)
+        if width > 1:
+            ok = ok & (lane >= 0) & (lane < width)
+            local = local * width + jnp.where(ok, lane, 0)
+        msgs = make_messages(local.astype(jnp.int32), payload, ok)
+        if op == "first":
+            success, _, applied = _first_stats(state, msgs)
+        else:
+            success, _, applied = _success_stats(state, new, msgs, op)
+        return CommitResult(new, success, conflicts, applied)
 
 
 # ---------------------------------------------------------------------------

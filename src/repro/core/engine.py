@@ -83,6 +83,19 @@ def _tree_all_to_all(x, axis: str):
         lambda a: jax.lax.all_to_all(a, axis, 0, 0, tiled=True), x)
 
 
+def _fused_commit_leaf(ecfg: EngineConfig, st, tgt, payload, lane, base,
+                       width, level):
+    """Owner-side fused route+commit for one state/payload leaf —
+    calibrated ladder when a tuner policy is bound (``backend="auto"``
+    raced to the fused tier), the static spec otherwise."""
+    if ecfg.tuner is not None:
+        return AT.ladder_fused_site(st, tgt, payload, ecfg.op, ecfg.tuner,
+                                    level, lane=lane, base=base,
+                                    width=width)
+    return C.fused_commit_site(st, tgt, payload, ecfg.op, ecfg.commit_spec,
+                               lane=lane, base=base, width=width)
+
+
 def route_wave(ecfg: EngineConfig, state_l, target, payload, pending,
                level=None, major=None, batch=None):
     """One coalescing sub-round under shard_map (DEPRECATED for direct use —
@@ -125,24 +138,45 @@ def route_wave(ecfg: EngineConfig, state_l, target, payload, pending,
     rp = _tree_all_to_all(buf_p, ecfg.axis)
     # local commit at the owner, one per (state, payload) field pair
     shard = jax.lax.axis_index(ecfg.axis)
-    local_idx = jnp.clip(rt.reshape(-1) - shard * ecfg.block, 0,
-                         ecfg.block - 1)
+    rt_flat = rt.reshape(-1)
+    rl_flat = None
     if width > 1:
         if major is None:
             raise ValueError("batch axis with wave_width > 1 needs "
                              "per-message `major` item ids")
         buf_l = scatter_to_buckets(plan, major, P, Cp, fill=0)
         rl = jax.lax.all_to_all(buf_l, ecfg.axis, 0, 0, tiled=True)
-        local_idx = fuse_keys(
-            local_idx, jnp.clip(rl.reshape(-1), 0, width - 1), width)
-    valid = (rt.reshape(-1) >= 0)
+        rl_flat = rl.reshape(-1)
+    valid = (rt_flat >= 0)
     st_leaves, tdef = jax.tree_util.tree_flatten(state_l)
     pl_leaves = tdef.flatten_up_to(rp)
+    # fused fast path (backend="fused", static or tuner-raced): the
+    # exchanged buffers go STRAIGHT into one kernel launch that computes
+    # local composite keys, reorders in VMEM, and commits — the
+    # local_idx/fuse_keys/make_messages intermediates below never
+    # materialize.  Per-leaf: leaves outside the kernel envelope (vector
+    # payloads, non-int32/f32 dtypes) take the unfused path.
+    backend = (ecfg.tuner.backend if ecfg.tuner is not None
+               else ecfg.commit_spec.backend)
+    fused = [backend == "fused" and C.fused_site_supported(st, p)
+             for st, p in zip(st_leaves, pl_leaves)]
+    local_idx = None
+    if not all(fused):
+        local_idx = jnp.clip(rt_flat - shard * ecfg.block, 0,
+                             ecfg.block - 1)
+        if width > 1:
+            local_idx = fuse_keys(
+                local_idx, jnp.clip(rl_flat, 0, width - 1), width)
     new_st, succs = [], []
     conflicts = jnp.zeros((), jnp.int32)
     for i, (st, pl) in enumerate(zip(st_leaves, pl_leaves)):
-        res = ecfg._commit(st, make_messages(local_idx, pl.reshape(-1),
-                                             valid), level)
+        if fused[i]:
+            res = _fused_commit_leaf(ecfg, st, rt_flat, pl.reshape(-1),
+                                     rl_flat, shard * ecfg.block, width,
+                                     level)
+        else:
+            res = ecfg._commit(st, make_messages(local_idx, pl.reshape(-1),
+                                                 valid), level)
         new_st.append(res.state)
         if i == 0:
             # slot collisions depend on (target, valid) only, which every

@@ -1,0 +1,223 @@
+"""Pallas TPU kernel: fused route+commit wave pass (ROADMAP item 3).
+
+The unfused owner-side path of :func:`repro.core.engine.route_wave`
+materializes the routed messages one more time after the exchange:
+``local_idx = clip(rt - shard*block)`` and (for fused batch axes)
+``fuse_keys(local_idx, lane, width)`` are full [P*C] jnp intermediates,
+then a separate :func:`repro.kernels.coarse_commit.coarse_commit_pallas`
+launch re-reads them.  The paper's HTM never pays that traffic — a
+transaction reorders and commits inside its speculative read/write set —
+and IARU/PIUMA (PAPERS.md) recover it on GPU/graph pipelines by fusing
+the reorder with the update.
+
+This kernel is the software analogue: ONE launch takes the post-exchange
+bucket buffers ``rt``/``rp`` exactly as the all_to_all left them (global
+target ids with ``-1`` empty-slot sentinels, optional per-message lane
+ids) and, per grid step,
+
+1. computes the local composite key in registers:
+   ``key = (tgt - base) * width + lane`` — the ``local_idx``/
+   ``fuse_keys`` arithmetic that was a jnp materialization;
+2. reorders/coalesces the tile against the VMEM-resident state block via
+   the M×B one-hot incidence (the in-VMEM analogue of sort-by-target:
+   every message lands on its state column regardless of arrival order);
+3. applies the commit op (``min``/``max``/``add``/``or``/``first`` with
+   the pinned lowest-global-message-id ``first`` tiebreak, identical to
+   the coarse kernel so cross-backend parity holds bit-for-bit);
+4. (``stats=True``) reduces the in-transaction duplicate-target count —
+   the abort-statistics analogue — into a per-(block, tile) output.
+
+Grid/tiling/identity-padding follow :mod:`repro.kernels.coarse_commit`:
+grid = (state_blocks, message_tiles), message tiles innermost so a state
+block stays VMEM-resident while every transaction visits it; the (M × B)
+working set is the HTM speculative-capacity analogue and M is the
+paper's transaction-size knob (the adaptive ladder moves it per round).
+
+``base`` is a traced scalar (the owner shard's first global vertex id,
+``shard * block`` under ``shard_map``) carried as a (1,) int32 input so
+the same compiled kernel serves every shard.  With ``base=None`` and
+``width == 1`` the key computation folds away and the kernel degenerates
+to the plain coarse-commit tile loop — that specialization is what
+``CommitSpec(backend="fused")`` runs through the generic
+:func:`repro.core.commit.commit` dispatch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.coarse_commit import _RANK_INF, _identity
+
+
+def _fused_kernel(*refs, op: str, tile_m: int, block_v: int, width: int,
+                  nrows: int, with_lane: bool, with_base: bool,
+                  stats: bool):
+    it = iter(refs)
+    idx_ref, val_ref, state_ref = next(it), next(it), next(it)
+    lane_ref = next(it) if with_lane else None
+    base_ref = next(it) if with_base else None
+    out_ref = next(it)
+    conf_ref = next(it) if stats else None
+
+    b = pl.program_id(0)
+    m = pl.program_id(1)
+
+    @pl.when(m == 0)
+    def _init():
+        out_ref[...] = state_ref[...]
+
+    idx = idx_ref[...]                                   # [M] global ids
+    val = val_ref[...]                                   # [M]
+    # --- in-kernel composite key: the fused local_idx/fuse_keys step ---
+    rel = idx - (base_ref[0] if with_base else 0)
+    ok = (idx >= 0) & (rel >= 0) & (rel < nrows)         # -1 = empty slot
+    if with_lane:
+        lane = lane_ref[...]
+        ok = ok & (lane >= 0) & (lane < width)
+        key = rel * width + jnp.where(ok, lane, 0)
+    else:
+        key = rel
+    # --- in-VMEM reorder/coalesce: one-hot incidence vs this block ---
+    kk = key - b * block_v
+    mask = ok & (kk >= 0) & (kk < block_v)
+
+    if op not in ("add", "min", "max", "or", "first"):
+        raise ValueError(op)
+
+    if conf_ref is not None:
+        conf_ref[0, 0] = 0
+
+    # Tile skip — the fusion dividend the unfused path cannot claim:
+    # bucketed traffic is clustered (contention concentrates keys in few
+    # state blocks), so most (block, tile) grid steps touch nothing and
+    # the whole M×B incidence/commit is elided.  The separate-launch
+    # pipeline can't do this: its commit kernel sees pre-flattened keys
+    # with no cheap per-tile routing test left.
+    @pl.when(jnp.any(mask))
+    def _commit_tile():
+        kkc = jnp.where(mask, kk, 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (tile_m, block_v), 1)
+        onehot = (col == kkc[:, None]) & mask[:, None]   # [M, B]
+
+        if conf_ref is not None:
+            cnt = jnp.sum(onehot.astype(jnp.int32), axis=0)  # [B]
+            conf_ref[0, 0] = jnp.sum(jnp.where(cnt > 1, cnt, 0))
+
+        if op == "add":
+            if jnp.issubdtype(val.dtype, jnp.floating):
+                contrib = jax.lax.dot(
+                    val[None, :].astype(jnp.float32),
+                    onehot.astype(jnp.float32),
+                    precision=jax.lax.Precision.HIGHEST)[0]  # MXU path
+            else:
+                contrib = jnp.sum(jnp.where(onehot, val[:, None], 0),
+                                  axis=0)
+            out_ref[...] += contrib.astype(out_ref.dtype)
+        elif op == "min":
+            ident = _identity(op, val.dtype)
+            cand = jnp.where(onehot, val[:, None], ident)
+            out_ref[...] = jnp.minimum(out_ref[...],
+                                       jnp.min(cand, axis=0))
+        elif op == "max":
+            ident = _identity(op, val.dtype)
+            cand = jnp.where(onehot, val[:, None], ident)
+            out_ref[...] = jnp.maximum(out_ref[...],
+                                       jnp.max(cand, axis=0))
+        elif op == "or":
+            hit = jnp.any(onehot & (val[:, None] != 0), axis=0)
+            out_ref[...] = jnp.maximum(out_ref[...],
+                                       hit.astype(out_ref.dtype))
+        elif op == "first":
+            # first-writer-wins into empty (<0) slots; tie-break =
+            # lowest GLOBAL message id (m * tile_m + row) — transactions
+            # execute in grid order, so the in-tile winner composes to
+            # the batch-wide lowest id, exactly like the coarse kernel.
+            cur = out_ref[...]
+            empty = cur < 0
+            rank = (m * tile_m
+                    + jax.lax.broadcasted_iota(jnp.int32,
+                                               (tile_m, block_v), 0))
+            rkey = jnp.where(onehot & empty[None, :], rank, _RANK_INF)
+            win = jnp.min(rkey, axis=0)                  # [B]
+            wsel = (onehot & (rkey == win[None, :])
+                    & (win[None, :] < _RANK_INF))
+            wval = jnp.sum(jnp.where(wsel, val[:, None], 0), axis=0)
+            out_ref[...] = jnp.where(empty & (win < _RANK_INF),
+                                     wval.astype(cur.dtype), cur)
+
+
+@functools.partial(jax.jit, static_argnames=("op", "width", "tile_m",
+                                             "block_v", "interpret",
+                                             "stats"))
+def fused_route_commit_pallas(state, tgt, val, *, lane=None, base=None,
+                              width: int = 1, op: str = "min",
+                              tile_m: int = 256, block_v: int = 512,
+                              interpret: bool = True, stats: bool = False):
+    """One launch from exchanged bucket buffers to committed state.
+
+    state: [R * width] local composite-key slice (R vertex rows × width
+    batch items, vertex-major — exactly the owner slice layout of
+    :func:`repro.core.engine.route_wave`); tgt: [N] int32 GLOBAL vertex
+    ids straight off the all_to_all (``-1`` = empty slot); val: [N]
+    payloads; lane: [N] int32 per-message item ids (required iff
+    ``width > 1``); base: traced scalar int32 — global id of local row 0
+    (``None`` = 0, the single-shard case).
+
+    Returns the committed state; ``stats=True`` returns
+    ``(state, conflicts)`` with the grid-summed duplicate-target count.
+    ``interpret=True`` executes on CPU; pass ``False`` on real TPU.
+    """
+    if (lane is None) == (width > 1):
+        raise ValueError(f"lane ids are required iff width > 1 "
+                         f"(width={width}, lane={'set' if lane is not None else 'None'})")
+    v = state.shape[0]
+    n = tgt.shape[0]
+    if v % width:
+        raise ValueError(f"state length {v} not divisible by width {width}")
+    if n == 0 or v == 0:
+        return (state, jnp.zeros((), jnp.int32)) if stats else state
+    nrows = v // width
+    vpad = (-v) % block_v
+    npad = (-n) % tile_m
+    ident = _identity(op, state.dtype)
+    state_p = jnp.pad(state, (0, vpad),
+                      constant_values=state.dtype.type(ident)
+                      if op not in ("add", "or") else 0)
+    tgt_p = jnp.pad(tgt.astype(jnp.int32), (0, npad), constant_values=-1)
+    val_p = jnp.pad(val, (0, npad))
+    nb = (v + vpad) // block_v
+    nm = (n + npad) // tile_m
+
+    tile_spec = pl.BlockSpec((tile_m,), lambda b, m: (m,))
+    in_specs = [tile_spec, tile_spec,
+                pl.BlockSpec((block_v,), lambda b, m: (b,))]
+    inputs = [tgt_p, val_p, state_p]
+    if lane is not None:
+        in_specs.append(tile_spec)
+        inputs.append(jnp.pad(lane.astype(jnp.int32), (0, npad)))
+    if base is not None:
+        in_specs.append(pl.BlockSpec((1,), lambda b, m: (0,)))
+        inputs.append(jnp.reshape(jnp.asarray(base, jnp.int32), (1,)))
+    out_specs = [pl.BlockSpec((block_v,), lambda b, m: (b,))]
+    out_shape = [jax.ShapeDtypeStruct(state_p.shape, state.dtype)]
+    if stats:
+        out_specs.append(pl.BlockSpec((1, 1), lambda b, m: (b, m)))
+        out_shape.append(jax.ShapeDtypeStruct((nb, nm), jnp.int32))
+    res = pl.pallas_call(
+        functools.partial(_fused_kernel, op=op, tile_m=tile_m,
+                          block_v=block_v, width=width, nrows=nrows,
+                          with_lane=lane is not None,
+                          with_base=base is not None, stats=stats),
+        grid=(nb, nm),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*inputs)
+    if stats:
+        out, conf = res
+        return out[:v], jnp.sum(conf)
+    return res[0][:v]

@@ -10,6 +10,14 @@ algorithm needs does not exist.  In hardware this is the "conflicting
 access" an HTM transaction would abort on; in the software pipeline
 only the analyzer can see it.
 
+A second planted round commits through the FUSED KERNEL but calls
+:func:`repro.kernels.fused_wave.fused_route_commit_pallas` raw — no
+``jax.named_scope("aam_commit")``, i.e. not through ``commit()`` /
+``fused_commit_site``.  The kernel itself resolves in-tile conflicts,
+but an unscoped launch bypasses the sanitizer, the success telemetry,
+and the fallback envelope checks, so the waverace pass flags in-scope-
+less ``pallas_call`` writes exactly like raw scatters.
+
 ``aamlint --module tests.fixtures.planted_race`` must exit nonzero.
 """
 import jax.numpy as jnp
@@ -26,7 +34,19 @@ def _racy_round(state):
     return {"dist": dist2}
 
 
+def _unscoped_kernel_round(state):
+    from repro.kernels.fused_wave import fused_route_commit_pallas
+    dist = state["dist"]
+    relax = dist[_SRC] + 1          # read of round state...
+    dist2 = fused_route_commit_pallas(   # ...raw kernel launch into it:
+        dist, _DST, relax,               # not under aam_commit scope
+        op="min", tile_m=8, block_v=8, interpret=True)
+    return {"dist": dist2}
+
+
 LINT_TRACEABLES = (
     ("planted: racy bfs round", _racy_round,
+     {"dist": jnp.zeros((_V,), jnp.int32)}),
+    ("planted: unscoped fused-kernel commit", _unscoped_kernel_round,
      {"dist": jnp.zeros((_V,), jnp.int32)}),
 )

@@ -29,7 +29,7 @@ from repro.core.commit import CommitSpec, commit
 from repro.core.messages import make_messages
 
 SET = dict(max_examples=15, deadline=None)
-BACKENDS4 = ("atomic", "coarse", "pallas", "auto")
+BACKENDS4 = ("atomic", "coarse", "pallas", "fused", "auto")
 
 
 def _spec(backend):
